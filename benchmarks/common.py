@@ -1,0 +1,108 @@
+"""Shared benchmark substrate: train-and-cache the paper's CNNs, build
+accuracy eval_fns, result IO.
+
+The paper evaluates pretrained zoo models; this container is offline, so
+each network is trained once on its procedural dataset (data.synthetic) and
+cached under results/cnn/ — every benchmark then measures accuracy-vs-
+precision exactly like the paper does (Top-1, fixed eval set).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import digits_dataset, shapes32_dataset
+from repro.models.cnn import (ALEXNET_SMALL, CONVNET, LENET, SPECS,
+                              cnn_accuracy, cnn_loss, cnn_traffic_model,
+                              init_cnn)
+
+RESULTS = os.environ.get("REPRO_RESULTS", "results")
+
+_DATASETS = {
+    "lenet": (digits_dataset, 28),
+    "convnet": (shapes32_dataset, 32),
+    "alexnet_small": (shapes32_dataset, 32),
+}
+
+_TRAIN_STEPS = {"lenet": 400, "convnet": 700, "alexnet_small": 900}
+_LR = {"lenet": 0.05, "convnet": 0.03, "alexnet_small": 0.02}
+
+
+def save_json(name: str, obj):
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, name)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1)
+    return path
+
+
+def load_json(name: str):
+    with open(os.path.join(RESULTS, name)) as f:
+        return json.load(f)
+
+
+def _params_path(net: str) -> str:
+    return os.path.join(RESULTS, "cnn", f"{net}.npz")
+
+
+def train_cnn(net: str, *, steps=None, verbose=True):
+    spec = SPECS[net]
+    make, _ = _DATASETS[net]
+    steps = steps or _TRAIN_STEPS[net]
+    xs, ys = make(4096, seed=0)
+    params = init_cnn(jax.random.PRNGKey(0), spec)
+    lr = _LR[net]
+    grad = jax.jit(jax.value_and_grad(lambda p, b: cnn_loss(p, b, spec)))
+    # SGD + momentum
+    mom = jax.tree_util.tree_map(jnp.zeros_like, params)
+    t0 = time.time()
+    n = (len(xs) // 64) * 64
+    for i in range(steps):
+        sl = slice((i * 64) % n, (i * 64) % n + 64)
+        loss, g = grad(params, {"image": jnp.asarray(xs[sl]),
+                                "label": jnp.asarray(ys[sl])})
+        mom = jax.tree_util.tree_map(lambda m, g: 0.9 * m + g, mom, g)
+        params = jax.tree_util.tree_map(lambda p, m: p - lr * m, params, mom)
+        if verbose and i % 100 == 0:
+            print(f"  [{net}] step {i} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.0f}s)")
+    return params
+
+
+def get_cnn(net: str, *, retrain=False, verbose=True):
+    """Returns (spec, params, eval set (x, y), baseline accuracy)."""
+    spec = SPECS[net]
+    make, _ = _DATASETS[net]
+    xv, yv = make(1024, seed=99)
+    xv, yv = jnp.asarray(xv), jnp.asarray(yv)
+    path = _params_path(net)
+    if os.path.exists(path) and not retrain:
+        npz = np.load(path)
+        params = {l.name: {"w": jnp.asarray(npz[f"{l.name}_w"]),
+                           "b": jnp.asarray(npz[f"{l.name}_b"])}
+                  for l in spec.layers}
+    else:
+        params = train_cnn(net, verbose=verbose)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        np.savez(path, **{f"{k}_{kk}": np.asarray(v)
+                          for k, d in params.items() for kk, v in d.items()})
+    base_acc = cnn_accuracy(params, xv, yv, spec)
+    return spec, params, (xv, yv), base_acc
+
+
+def make_eval_fn(spec, params, xv, yv):
+    """policy -> top-1 accuracy (the search's eval_fn), jit-cached by the
+    distinct (I, F) tuple signature."""
+    def eval_fn(policy):
+        return cnn_accuracy(params, xv, yv, spec, policy)
+    return eval_fn
+
+
+def cnn_nets():
+    return ["lenet", "convnet", "alexnet_small"]

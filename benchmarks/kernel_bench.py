@@ -1,0 +1,125 @@
+"""Kernel benchmarks: correctness deltas vs oracle + footprint/traffic model.
+
+This container executes Pallas in interpret mode (Python), so WALL TIMES
+here characterize the oracle/kernel agreement and the memory model, not TPU
+speed. The TPU-side throughput claim is structural: bytes-per-element moved
+by each kernel at its BlockSpec tiling, reported as the compression ratio
+the paper's formats buy."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import save_json
+
+
+def _timeit(fn, *args, reps=3):
+    fn(*args)  # warm/compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps
+
+
+def bench_quant_cast():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1024, 1024)) * 4
+    out = {}
+    for (i, f) in [(2, 6), (4, 4), (2, 14), (8, 8)]:
+        y = ops.quant_cast(x, i, f)
+        yr = ref.quant_cast_ref(x, i, f)
+        out[f"Q{i}.{f}"] = {
+            "max_err_vs_ref": float(jnp.abs(y - yr).max()),
+            "interpret_s": _timeit(ops.quant_cast, x, i, f),
+            "hbm_bytes_fp32": x.size * 4 * 2,
+            "container_bits": 8 if i + f <= 8 else 16,
+        }
+    return out
+
+
+def bench_pack():
+    out = {}
+    for bits in (2, 4, 8, 16):
+        lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+        q = jax.random.randint(jax.random.PRNGKey(1), (2048, 512), lo, hi + 1,
+                               jnp.int32)
+        w = ops.pack(q, bits)
+        rt = ops.unpack(w, bits)
+        out[f"{bits}b"] = {
+            "roundtrip_exact": bool(jnp.array_equal(q, rt)),
+            "footprint_ratio_vs_int32": w.size / q.size,
+            "footprint_ratio_vs_fp32": w.size / q.size,
+            "interpret_pack_s": _timeit(ops.pack, q, bits),
+        }
+    return out
+
+
+def bench_quant_matmul():
+    out = {}
+    for (m, k, n) in [(256, 1024, 256), (512, 4096, 512)]:
+        a = jax.random.normal(jax.random.PRNGKey(2), (m, k), jnp.float32)
+        wq = jax.random.randint(jax.random.PRNGKey(3), (k, n), -128, 128,
+                                jnp.int32).astype(jnp.int8)
+        s = jax.random.uniform(jax.random.PRNGKey(4), (n,), minval=0.001,
+                               maxval=0.02)
+        y = ops.qmatmul(a, wq, s)
+        yr = ref.quant_matmul_ref(a, wq, s)
+        rel = float(jnp.abs(y - yr).max() / (jnp.abs(yr).max() + 1e-9))
+        out[f"{m}x{k}x{n}"] = {
+            "rel_err_vs_ref": rel,
+            "weight_hbm_bytes": int(wq.size + n * 4),
+            "weight_hbm_bytes_bf16": int(k * n * 2),
+            "weight_traffic_ratio": (wq.size + n * 4) / (k * n * 2),
+            "interpret_s": _timeit(ops.qmatmul, a, wq, s),
+        }
+    return out
+
+
+def bench_kv_attention():
+    out = {}
+    for (b, h, kv, hd, t) in [(4, 8, 2, 64, 512), (2, 16, 16, 128, 1024)]:
+        q = jax.random.normal(jax.random.PRNGKey(5), (b, h, hd))
+        k_q = jax.random.randint(jax.random.PRNGKey(6), (b, t, kv, hd), -128,
+                                 128, jnp.int32).astype(jnp.int8)
+        v_q = jax.random.randint(jax.random.PRNGKey(7), (b, t, kv, hd), -128,
+                                 128, jnp.int32).astype(jnp.int8)
+        y = ops.kv_attention(q, k_q, v_q, t - 5, int_bits=2, frac_bits=6,
+                             block_t=128)
+        yr = ref.kv_attention_ref(q, k_q, v_q, 2, 6, t - 5)
+        out[f"B{b}H{h}KV{kv}hd{hd}T{t}"] = {
+            "max_err_vs_ref": float(jnp.abs(y - yr).max()),
+            "cache_bytes_int8": int(k_q.size + v_q.size),
+            "cache_bytes_bf16": int((k_q.size + v_q.size) * 2),
+            "cache_traffic_ratio": 0.5,
+            "interpret_s": _timeit(
+                lambda q, k, v: ops.kv_attention(
+                    q, k, v, t - 5, int_bits=2, frac_bits=6, block_t=128),
+                q, k_q, v_q),
+        }
+    return out
+
+
+def run(*, verbose=True):
+    res = {
+        "quant_cast": bench_quant_cast(),
+        "pack": bench_pack(),
+        "quant_matmul": bench_quant_matmul(),
+        "kv_attention": bench_kv_attention(),
+    }
+    if verbose:
+        print("[kernel_bench]")
+        for kname, rows in res.items():
+            for cfg, r in rows.items():
+                err = r.get("max_err_vs_ref", r.get("rel_err_vs_ref",
+                                                    r.get("roundtrip_exact")))
+                print(f"  {kname:13s} {cfg:18s} err/ok={err} ")
+    save_json("kernel_bench.json", res)
+    return res
+
+
+if __name__ == "__main__":
+    run()

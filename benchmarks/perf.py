@@ -1,0 +1,77 @@
+"""§Perf hillclimb tooling: diff dry-run variants + append to the log.
+
+Workflow per iteration (EXPERIMENTS.md §Perf):
+  1. baseline cell exists under results/dryrun/baseline/
+  2. run the candidate: ``python -m repro.launch.dryrun --arch A --shape S
+     --mesh single --tag <variant> [--set field=value] [--kv-bits N]``
+  3. ``python -m benchmarks.perf diff A S <variant>`` prints the term deltas
+  4. ``python -m benchmarks.perf log ...`` appends hypothesis/verdict to
+     results/perf_log.json (rendered into EXPERIMENTS.md by benchmarks.report)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from .roofline import analyze_record
+
+RESULTS = os.environ.get("REPRO_RESULTS", "results")
+
+
+def load_cell(arch, shape, tag="baseline", mesh="single"):
+    path = os.path.join(RESULTS, "dryrun", tag,
+                        f"{mesh}_{arch}_{shape}.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def terms(rec):
+    a = analyze_record(rec)
+    return {k: a[k] for k in ("compute_s", "memory_s", "collective_s",
+                              "dominant", "roofline_fraction", "fit_bytes")}
+
+
+def diff(arch, shape, tag, base_tag="baseline", mesh="single"):
+    b = terms(load_cell(arch, shape, base_tag, mesh))
+    v = terms(load_cell(arch, shape, tag, mesh))
+    print(f"{arch}/{shape} [{base_tag} -> {tag}]")
+    for k in ("compute_s", "memory_s", "collective_s"):
+        delta = (v[k] - b[k]) / b[k] if b[k] else float("inf")
+        print(f"  {k:14s} {b[k]:10.3f} -> {v[k]:10.3f}  ({delta:+.1%})")
+    print(f"  dominant       {b['dominant']} -> {v['dominant']}")
+    print(f"  roofline frac  {b['roofline_fraction']:.3f} -> "
+          f"{v['roofline_fraction']:.3f}")
+    print(f"  fit GiB        {b['fit_bytes'] / 2**30:.1f} -> "
+          f"{v['fit_bytes'] / 2**30:.1f}")
+    return b, v
+
+
+def log_entry(**e):
+    path = os.path.join(RESULTS, "perf_log.json")
+    log = []
+    if os.path.exists(path):
+        with open(path) as f:
+            log = json.load(f)
+    log.append(e)
+    with open(path, "w") as f:
+        json.dump(log, f, indent=1)
+    print(f"logged iteration {e.get('iter')} for "
+          f"{e.get('arch')}/{e.get('shape')}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    d = sub.add_parser("diff")
+    for a in ("arch", "shape", "tag"):
+        d.add_argument(a)
+    d.add_argument("--base", default="baseline")
+    d.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    if args.cmd == "diff":
+        diff(args.arch, args.shape, args.tag, args.base, args.mesh)
+
+
+if __name__ == "__main__":
+    main()

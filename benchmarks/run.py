@@ -1,0 +1,76 @@
+"""Benchmark orchestrator: one module per paper table/figure + the roofline.
+
+  uniform_sweep   — paper Fig. 2 (accuracy vs uniform bits, per network)
+  perlayer_sweep  — paper Fig. 3 (per-layer tolerance; the key observation)
+  traffic         — paper Fig. 4 (single vs batch traffic; + LM analogue)
+  pareto_search   — paper Fig. 5 / Table 2 (greedy search, TR@1/2/5/10%)
+  lm_precision    — beyond-paper: same machinery on a transformer LM
+  kernel_bench    — Pallas kernels vs oracles + footprint ratios
+  roofline        — EXPERIMENTS.md §Roofline terms from the dry-run JSONs
+
+``python -m benchmarks.run [--only a,b] [--fast]``
+(--fast restricts CNNs to lenet+convnet and shrinks the search budget)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args(argv)
+
+    import json
+    import os
+
+    from . import (kernel_bench, lm_precision, pareto_search, perlayer_sweep,
+                   report, roofline, traffic, uniform_sweep)
+
+    nets = ["lenet", "convnet"] if args.fast else None
+    stages = {
+        "uniform_sweep": lambda: uniform_sweep.run(nets=nets),
+        "perlayer_sweep": lambda: perlayer_sweep.run(nets=nets),
+        "traffic": traffic.run,
+        "pareto_search": lambda: pareto_search.run(nets=nets),
+        "lm_precision": lambda: lm_precision.run(
+            steps=120 if args.fast else 300),
+        "kernel_bench": kernel_bench.run,
+        "roofline": roofline.run,
+    }
+    # expensive searches reuse their saved results unless --force
+    cached = {"uniform_sweep": "uniform_sweep.json",
+              "perlayer_sweep": "perlayer_sweep.json",
+              "pareto_search": "pareto_search.json",
+              "lm_precision": "lm_precision.json"}
+    results_dir = os.environ.get("REPRO_RESULTS", "results")
+    only = [s for s in args.only.split(",") if s]
+    t00 = time.time()
+    for name, fn in stages.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"\n===== {name} =====")
+        cpath = cached.get(name)
+        if cpath and os.path.exists(os.path.join(results_dir, cpath)) \
+                and not getattr(args, "force", False) and not only:
+            with open(os.path.join(results_dir, cpath)) as f:
+                data = json.load(f)
+            print(f"[cached] results/{cpath} "
+                  f"(pass --only {name} to recompute). Summary:")
+            print(json.dumps(data, indent=1)[:2500])
+        else:
+            try:
+                fn()
+            except Exception as e:  # noqa: BLE001 — stage-isolate failures
+                import traceback
+                traceback.print_exc()
+                print(f"[stage {name} FAILED: {e!r} — continuing]")
+        print(f"===== {name} done in {time.time() - t0:.0f}s =====")
+    print(f"\nall benchmarks done in {time.time() - t00:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: the paper's method in ~60 lines.
+
+1. Build a tiny LeNet on procedural digits,
+2. quantize per layer with Q(I,F) formats,
+3. run the paper's greedy search,
+4. print the accuracy/traffic Pareto table (paper Table 2 format).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.fixedpoint import FixedPointFormat, fake_quant
+from repro.core.policy import PrecisionPolicy
+from repro.core.search import greedy_pareto_search
+from repro.data.synthetic import digits_dataset
+from repro.models.cnn import (LENET, cnn_accuracy, cnn_loss,
+                              cnn_traffic_model, init_cnn)
+
+
+def main():
+    # --- the core op: the paper's memory-boundary conversion -------------
+    x = jnp.asarray([0.7311, -1.2, 3.9, 0.01])
+    print("fake_quant Q(2,4):", fake_quant(x, 2, 4))   # grid of 1/16ths
+
+    # --- train LeNet quickly on synthetic digits -------------------------
+    spec = LENET
+    params = init_cnn(jax.random.PRNGKey(0), spec)
+    xs, ys = digits_dataset(2048, seed=0)
+    xv, yv = digits_dataset(512, seed=1)
+    grad = jax.jit(jax.grad(lambda p, b: cnn_loss(p, b, spec)))
+    print("training LeNet on procedural digits ...")
+    for i in range(200):
+        sl = slice((i * 64) % 1984, (i * 64) % 1984 + 64)
+        g = grad(params, {"image": jnp.asarray(xs[sl]),
+                          "label": jnp.asarray(ys[sl])})
+        params = jax.tree_util.tree_map(lambda p, g: p - 0.05 * g, params, g)
+    base = cnn_accuracy(params, jnp.asarray(xv), jnp.asarray(yv), spec)
+    print(f"baseline top-1: {base:.4f}")
+
+    # --- the paper's §2.5 search ------------------------------------------
+    tm = cnn_traffic_model(spec)
+    init = PrecisionPolicy.uniform(spec.layer_names,
+                                   FixedPointFormat(1, 10),  # weights Q1.10
+                                   FixedPointFormat(10, 4))  # data Q10.4
+    res = greedy_pareto_search(
+        lambda pol: cnn_accuracy(params, jnp.asarray(xv), jnp.asarray(yv),
+                                 spec, pol),
+        tm, init, baseline_accuracy=base, batch_size=50, verbose=False)
+    print(res.table())
+    pick = res.select(0.01)
+    if pick:
+        print(f"\nchosen mixed config @1% tolerance "
+              f"(TR={pick.traffic_ratio:.3f}):")
+        print(pick.policy.table())
+
+
+if __name__ == "__main__":
+    main()

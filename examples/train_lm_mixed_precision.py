@@ -1,0 +1,49 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+the paper's per-layer precision applied as a first-class training feature.
+
+Uses launch.train (the production launcher) twice:
+  1. fp32-boundary baseline,
+  2. per-layer quantized run (10-bit weights / 12-bit data / int8 KV,
+     int8 optimizer moments, int8-wire gradient compression),
+and compares the loss curves — the quantized run should track the baseline
+within a few percent while its boundary tensors carry 3x fewer bits.
+
+~100M params: xlstm-350m reduced to 12 layers, d_model 512
+(~97M with the tied embedding), CPU-trainable in minutes.
+
+Run:  PYTHONPATH=src python examples/train_lm_mixed_precision.py [--steps N]
+"""
+import argparse
+import json
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="deepseek-7b")
+    args = ap.parse_args()
+
+    common = ["--arch", args.arch, "--smoke", "--steps", str(args.steps),
+              "--batch-size", "8", "--seq-len", "256", "--lr", "1e-3",
+              "--log-every", "20"]
+
+    print("=== baseline (fp boundaries) ===")
+    base = train_mod.main(common)
+
+    print("=== per-layer quantized (W10/D12/KV8 + int8 moments + "
+          "int8 grad wire) ===")
+    quant = train_mod.main(common + [
+        "--weight-bits", "10", "--data-bits", "12", "--kv-bits", "8",
+        "--int8-moments", "--grad-compress"])
+
+    b, q = base[-1]["loss"], quant[-1]["loss"]
+    print(f"\nfinal loss: baseline={b:.4f} quantized={q:.4f} "
+          f"(+{(q - b) / b:+.2%})")
+    print("boundary bits: weights 32->10, data 32->12, KV 32->8, "
+          "optimizer moments 32->8(+scale), grad wire 32->8")
+
+
+if __name__ == "__main__":
+    main()

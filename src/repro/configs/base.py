@@ -1,0 +1,126 @@
+"""ModelConfig: one dataclass covering every assigned architecture family.
+
+Each ``configs/<arch>.py`` exports ``CONFIG`` (full size, dry-run only) and
+``smoke_config()`` (reduced same-family config for CPU tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encoder | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+
+    # --- attention ---
+    attention_type: str = "gqa"      # gqa | mla
+    attention_bias: bool = False     # Qwen-style QKV bias
+    causal: bool = True              # False for encoder-only
+    rope_theta: float = 1e4
+    mrope: bool = False              # Qwen2-VL multimodal RoPE
+    attn_chunk: int = 1024           # online-softmax KV chunk
+    attn_bf16: bool = False          # bf16 q/k/v chunk operands (fp32
+                                     # softmax state); halves score-matmul
+                                     # operand traffic + K/V gathers
+
+    # --- MLA (DeepSeek-V3) ---
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+    mla_absorbed: bool = False       # beyond-paper decode optimization
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0
+    first_k_dense: int = 0           # DeepSeek: leading dense layers
+    moe_every: int = 1               # Jamba: MoE on every n-th block
+    moe_offset: int = 0              # Jamba: expert_layer_offset
+    moe_mode: str = "scatter"        # scatter | eval_all
+    moe_capacity_factor: float = 1.25
+    moe_sigmoid_router: bool = False # DeepSeek-V3 scoring
+    moe_a2a_bits: int = 0            # int-quantized dispatch wire (0 = off):
+                                     # the paper's reduced-precision "data"
+                                     # applied to the EP all-to-all payload
+
+    # --- block pattern (hybrid / recurrent) ---
+    # cycled to num_layers; entries: "attn" | "mamba" | "mlstm" | "slstm"
+    block_pattern: Tuple[str, ...] = ("attn",)
+
+    # --- SSM / recurrent dims ---
+    ssm_state_dim: int = 16
+    ssm_conv_dim: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+
+    # --- embeddings / head / misc ---
+    tie_embeddings: bool = False
+    embedding_onehot: bool = False   # matmul-style lookup for sharded vocab
+    norm_eps: float = 1e-5
+    mtp_depth: int = 0               # DeepSeek-V3 multi-token prediction
+    frontend: Optional[str] = None   # "audio" | "vision" stubs (inputs = embeds)
+
+    # --- numerics ---
+    dtype: str = "bfloat16"          # activations/compute
+    param_dtype: str = "float32"
+    loss_chunk: int = 0              # seq-chunked CE (0 = off); bounds the
+                                     # fp32 logits transient at pod shapes
+
+    # --- distribution defaults (overridable per arch) ---
+    shard_heads: bool = True         # heads -> model axis (padded if needed)
+    remat: str = "block"             # none | block | full
+
+    # -------------------------------------------------------------------
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim",
+                               self.d_model // max(self.num_heads, 1))
+
+    @property
+    def compute_jnp_dtype(self):
+        return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[self.dtype]
+
+    @property
+    def param_jnp_dtype(self):
+        return {"float32": jnp.float32,
+                "bfloat16": jnp.bfloat16}[self.param_dtype]
+
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer block kind, the cycled pattern (+ DeepSeek dense head)."""
+        kinds = []
+        for i in range(self.num_layers):
+            kind = self.block_pattern[i % len(self.block_pattern)]
+            kinds.append(kind)
+        return tuple(kinds)
+
+    def is_moe_layer(self, idx: int) -> bool:
+        if not self.num_experts:
+            return False
+        if idx < self.first_k_dense:
+            return False
+        return (idx - self.first_k_dense - self.moe_offset) % self.moe_every == 0
+
+    # --- parameter counting (roofline MODEL_FLOPS uses these) -------------
+    def param_count(self) -> int:
+        from .counting import count_params
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from .counting import count_params
+        return count_params(self, active_only=True)

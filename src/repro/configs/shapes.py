@@ -1,0 +1,109 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+Four shapes per LM arch (assignment):
+  train_4k     seq 4096,   global_batch 256   -> train_step
+  prefill_32k  seq 32768,  global_batch 32    -> serve prefill (encoder fwd
+                                                 for encoder-only archs)
+  decode_32k   seq 32768,  global_batch 128   -> serve_step (1 new token, KV
+                                                 cache holding seq_len)
+  long_500k    seq 524288, global_batch 1     -> serve_step; only for archs
+                                                 with sub-quadratic state
+                                                 (ssm / hybrid)
+
+``input_specs`` builds the exact pytree of jax.ShapeDtypeStruct the step
+function is lowered against — weak-type-correct, no device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """Assignment skip rules (see DESIGN.md §Arch-applicability)."""
+    if shape.kind == "decode" and cfg.family == "encoder":
+        return False  # encoder-only: no autoregressive decode
+    if shape.name == "long_500k":
+        # needs sub-quadratic attention: only SSM / hybrid archs run it
+        return cfg.family in ("ssm", "hybrid")
+    return True
+
+
+def applicable_shapes(cfg: ModelConfig):
+    return [s for s in SHAPES.values() if applicable(cfg, s)]
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct builders
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                *, batch_override: Optional[int] = None) -> Dict:
+    """The data-batch pytree for a train/prefill forward pass."""
+    B = batch_override if batch_override is not None else shape.global_batch
+    S = shape.seq_len
+    specs: Dict = {}
+    if cfg.frontend is not None:
+        # modality-frontend STUB: precomputed frame/patch embeddings
+        specs["embeds"] = _sds((B, S, cfg.d_model), cfg.compute_jnp_dtype)
+    else:
+        specs["tokens"] = _sds((B, S), jnp.int32)
+    if cfg.mrope:
+        specs["mrope_positions"] = _sds((B, S, 3), jnp.int32)
+    if shape.kind == "train" or cfg.family == "encoder":
+        specs["labels"] = _sds((B, S), jnp.int32)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig,
+                 *, batch_override: Optional[int] = None,
+                 quant=None) -> Dict:
+    """Inputs for serve_step: one new token per sequence + the KV/state cache
+    preallocated at seq_len."""
+    from ..models.transformer import init_cache
+
+    B = batch_override if batch_override is not None else shape.global_batch
+    S = shape.seq_len
+    cache_shapes = jax.eval_shape(
+        lambda: init_cache(cfg, B, S, quant))
+    specs: Dict = {
+        "tokens": _sds((B,), jnp.int32),
+        "pos": _sds((), jnp.int32),
+        "caches": cache_shapes,
+    }
+    if cfg.frontend is not None:
+        specs.pop("tokens")
+        specs["embeds"] = _sds((B, 1, cfg.d_model), cfg.compute_jnp_dtype)
+    return specs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, quant=None,
+                batch_override: Optional[int] = None) -> Dict:
+    """Dispatch on the shape kind; the thing dryrun lowers against."""
+    if shape.kind in ("train", "prefill"):
+        return batch_specs(cfg, shape, batch_override=batch_override)
+    return decode_specs(cfg, shape, batch_override=batch_override, quant=quant)

@@ -1,0 +1,191 @@
+"""Parameterized fixed-point Q(I,F) representation (paper §2.1).
+
+The paper models reduced-precision *memory* with an N-bit fixed-point format
+split into I integer bits (including sign) and F fractional bits.  Values are
+quantized when they cross a memory boundary and converted back to float before
+compute ("fake quant").  This module is the numerical core: everything is pure
+jnp, jit/vmap/scan friendly, and format parameters may be Python ints *or*
+traced arrays (so per-layer formats ride through ``lax.scan`` as stacked
+(L,)-arrays of scales/bounds).
+
+Conventions
+-----------
+* ``int_bits``  I >= 1, includes the sign bit.
+* ``frac_bits`` F >= 0.
+* integer grid: q in [-(2^(I+F-1)), 2^(I+F-1) - 1], value = q * 2^-F.
+* representable range approx [-2^(I-1), 2^(I-1) - 2^-F].
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+RoundingMode = Literal["nearest", "stochastic", "floor"]
+
+MAX_TOTAL_BITS = 30  # int32-safe integer grid
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointFormat:
+    """A Q(I,F) fixed-point format. ``I`` includes the sign bit."""
+
+    int_bits: int
+    frac_bits: int
+
+    def __post_init__(self):
+        if self.int_bits < 1:
+            raise ValueError(f"int_bits must be >= 1 (sign), got {self.int_bits}")
+        if self.frac_bits < 0:
+            raise ValueError(f"frac_bits must be >= 0, got {self.frac_bits}")
+        if self.total_bits > MAX_TOTAL_BITS:
+            raise ValueError(f"total bits {self.total_bits} > {MAX_TOTAL_BITS}")
+
+    @property
+    def total_bits(self) -> int:
+        return self.int_bits + self.frac_bits
+
+    @property
+    def scale(self) -> float:
+        return float(2 ** self.frac_bits)
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.total_bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.total_bits - 1) - 1
+
+    @property
+    def max_value(self) -> float:
+        return self.qmax / self.scale
+
+    @property
+    def min_value(self) -> float:
+        return self.qmin / self.scale
+
+    @property
+    def resolution(self) -> float:
+        return 1.0 / self.scale
+
+    def container_dtype(self) -> jnp.dtype:
+        """Smallest signed-int container that holds the integer grid."""
+        if self.total_bits <= 8:
+            return jnp.dtype(jnp.int8)
+        if self.total_bits <= 16:
+            return jnp.dtype(jnp.int16)
+        return jnp.dtype(jnp.int32)
+
+    def short(self) -> str:
+        return f"Q{self.int_bits}.{self.frac_bits}"
+
+    @staticmethod
+    def parse(s: str) -> "FixedPointFormat":
+        s = s.strip().lstrip("Qq")
+        i, f = s.split(".")
+        return FixedPointFormat(int(i), int(f))
+
+
+def format_params(int_bits, frac_bits):
+    """(scale, qmin, qmax) as float arrays; accepts ints or traced arrays.
+
+    This is what lets per-layer formats flow through ``lax.scan``: stack
+    per-layer (I, F) into (L,) arrays and compute elementwise.
+    """
+    int_bits = jnp.asarray(int_bits, jnp.float32)
+    frac_bits = jnp.asarray(frac_bits, jnp.float32)
+    one = jnp.float32(1.0)
+    # ldexp gives exact powers of two; XLA's exp2 lowers to exp(x*ln2) and is
+    # off by ~5e-4 at 2^13, which breaks grid idempotency.
+    scale = jnp.ldexp(one, frac_bits.astype(jnp.int32))
+    half = jnp.ldexp(one, (int_bits + frac_bits - 1.0).astype(jnp.int32))
+    qmin = -half
+    qmax = half - 1.0
+    return scale, qmin, qmax
+
+
+def _round(x, mode: RoundingMode, key):
+    if mode == "nearest":
+        # round-half-away-from-zero, the usual hardware convert behaviour
+        return jnp.trunc(x + jnp.copysign(0.5, x))
+    if mode == "floor":
+        return jnp.floor(x)
+    if mode == "stochastic":
+        if key is None:
+            raise ValueError("stochastic rounding requires a PRNG key")
+        noise = jax.random.uniform(key, jnp.shape(x), jnp.float32)
+        return jnp.floor(x + noise)
+    raise ValueError(f"unknown rounding mode {mode!r}")
+
+
+def quantize(x, int_bits, frac_bits, *, rounding: RoundingMode = "nearest",
+             key=None):
+    """float -> integer grid (float-typed; cast to a container separately)."""
+    x = jnp.asarray(x, jnp.float32)
+    scale, qmin, qmax = format_params(int_bits, frac_bits)
+    q = _round(x * scale, rounding, key)
+    return jnp.clip(q, qmin, qmax)
+
+
+def dequantize(q, int_bits, frac_bits):
+    scale, _, _ = format_params(int_bits, frac_bits)
+    return jnp.asarray(q, jnp.float32) / scale
+
+
+def fake_quant(x, int_bits, frac_bits, *, rounding: RoundingMode = "nearest",
+               key=None):
+    """Quantize-then-dequantize: the paper's memory-boundary conversion.
+
+    Output dtype follows the input dtype (bf16 stays bf16) but the value set
+    is the Q(I,F) grid.
+    """
+    orig_dtype = jnp.result_type(x)
+    q = quantize(x, int_bits, frac_bits, rounding=rounding, key=key)
+    y = dequantize(q, int_bits, frac_bits)
+    return y.astype(orig_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through estimator variant: lets the same boundary op sit inside a
+# training graph (quantization-aware training; beyond-paper but standard).
+# ---------------------------------------------------------------------------
+@partial(jax.custom_vjp, nondiff_argnums=())
+def fake_quant_ste(x, int_bits, frac_bits):
+    return fake_quant(x, int_bits, frac_bits)
+
+
+def _fq_fwd(x, int_bits, frac_bits):
+    y = fake_quant(x, int_bits, frac_bits)
+    # pass-through gradient only inside the representable range
+    _, qmin, qmax = format_params(int_bits, frac_bits)
+    scale, _, _ = format_params(int_bits, frac_bits)
+    in_range = (x * scale >= qmin) & (x * scale <= qmax)
+    return y, (in_range,)
+
+
+def _fq_bwd(res, g):
+    (in_range,) = res
+    gx = jnp.where(in_range, g, 0.0).astype(g.dtype)
+    return (gx, None, None)
+
+
+fake_quant_ste.defvjp(_fq_fwd, _fq_bwd)
+
+
+def quantization_error(x, int_bits, frac_bits):
+    """RMS error introduced by the format on a tensor (diagnostics)."""
+    y = fake_quant(x, int_bits, frac_bits)
+    d = (jnp.asarray(x, jnp.float32) - jnp.asarray(y, jnp.float32))
+    return jnp.sqrt(jnp.mean(d * d))
+
+
+def required_int_bits(max_abs) -> jnp.ndarray:
+    """Smallest I (incl. sign) whose range covers ``max_abs`` (calibration)."""
+    max_abs = jnp.asarray(max_abs, jnp.float32)
+    # need 2^(I-1) >= max_abs  =>  I >= log2(max_abs) + 1
+    i = jnp.ceil(jnp.log2(jnp.maximum(max_abs, 1e-30))) + 1.0
+    return jnp.maximum(i, 1.0).astype(jnp.int32)

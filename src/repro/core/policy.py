@@ -1,0 +1,174 @@
+"""Per-layer precision policies (the paper's central object).
+
+A network is a sequence of named layers; each layer carries independent
+fixed-point formats for its **weights** and its output **data** (paper §2.1
+"Values Studied").  ``PrecisionPolicy`` is the thing the search in
+``core.search`` mutates, the traffic model prices, and ``quant.apply``
+installs into a model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable, Iterable, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from .fixedpoint import FixedPointFormat
+
+FIELDS = ("weight_int", "weight_frac", "data_int", "data_frac")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPolicy:
+    """Q(I,F) formats for one layer's weights and output data.
+
+    ``None`` for the weight format marks a weight-less layer (e.g. a residual
+    boundary or an activation-only stage).
+    """
+
+    weight: Optional[FixedPointFormat]
+    data: Optional[FixedPointFormat]
+
+    def with_field(self, field: str, value: int) -> "LayerPolicy":
+        w, d = self.weight, self.data
+        if field == "weight_int" and w:
+            w = FixedPointFormat(value, w.frac_bits)
+        elif field == "weight_frac" and w:
+            w = FixedPointFormat(w.int_bits, value)
+        elif field == "data_int" and d:
+            d = FixedPointFormat(value, d.frac_bits)
+        elif field == "data_frac" and d:
+            d = FixedPointFormat(d.int_bits, value)
+        return LayerPolicy(w, d)
+
+    def get_field(self, field: str) -> Optional[int]:
+        w, d = self.weight, self.data
+        return {
+            "weight_int": w.int_bits if w else None,
+            "weight_frac": w.frac_bits if w else None,
+            "data_int": d.int_bits if d else None,
+            "data_frac": d.frac_bits if d else None,
+        }[field]
+
+    def short(self) -> str:
+        ws = self.weight.short() if self.weight else "-"
+        ds = self.data.short() if self.data else "-"
+        return f"W:{ws}/D:{ds}"
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """An ordered mapping layer-name -> LayerPolicy."""
+
+    names: tuple
+    layers: tuple  # tuple[LayerPolicy]
+
+    def __post_init__(self):
+        assert len(self.names) == len(self.layers)
+
+    # -- constructors ---------------------------------------------------------
+    @staticmethod
+    def uniform(names: Sequence[str],
+                weight: Optional[FixedPointFormat],
+                data: Optional[FixedPointFormat]) -> "PrecisionPolicy":
+        return PrecisionPolicy(tuple(names),
+                               tuple(LayerPolicy(weight, data) for _ in names))
+
+    @staticmethod
+    def fp32_baseline(names: Sequence[str]) -> "PrecisionPolicy":
+        """The 'no quantization' marker policy (None formats everywhere)."""
+        return PrecisionPolicy(tuple(names),
+                               tuple(LayerPolicy(None, None) for _ in names))
+
+    # -- access / update ------------------------------------------------------
+    def __len__(self):
+        return len(self.names)
+
+    def __getitem__(self, name: str) -> LayerPolicy:
+        return self.layers[self.names.index(name)]
+
+    def replace_layer(self, idx: int, lp: LayerPolicy) -> "PrecisionPolicy":
+        layers = list(self.layers)
+        layers[idx] = lp
+        return PrecisionPolicy(self.names, tuple(layers))
+
+    def with_field(self, idx: int, field: str, value: int) -> "PrecisionPolicy":
+        return self.replace_layer(idx, self.layers[idx].with_field(field, value))
+
+    def decrement(self, idx: int, field: str) -> Optional["PrecisionPolicy"]:
+        """One step of the paper's search: remove one bit from (layer, field).
+
+        Returns None if the field is absent or already at its floor
+        (1 integer bit — the sign — or 0 fractional bits).
+        """
+        cur = self.layers[idx].get_field(field)
+        if cur is None:
+            return None
+        floor = 1 if field.endswith("_int") else 0
+        if cur <= floor:
+            return None
+        return self.with_field(idx, field, cur - 1)
+
+    def candidate_moves(self, fields: Iterable[str] = FIELDS):
+        """All single-bit decrements (the paper's 'delta configurations')."""
+        out = []
+        for i in range(len(self)):
+            for f in fields:
+                p = self.decrement(i, f)
+                if p is not None:
+                    out.append(((i, f), p))
+        return out
+
+    # -- vectorized views (for scan-over-layers models) ------------------------
+    def stacked_arrays(self, field_prefix: str):
+        """(int_bits, frac_bits) as (L,) float32 arrays for lax.scan bodies.
+
+        Layers with a ``None`` format get a sentinel wide format (Q16.15) that
+        is numerically a no-op at bf16/f32 ranges used here; the model also
+        receives an ``enabled`` mask.
+        """
+        ints, fracs, enabled = [], [], []
+        for lp in self.layers:
+            fmt = lp.weight if field_prefix == "weight" else lp.data
+            if fmt is None:
+                ints.append(16)
+                fracs.append(14)
+                enabled.append(False)
+            else:
+                ints.append(fmt.int_bits)
+                fracs.append(fmt.frac_bits)
+                enabled.append(True)
+        return (jnp.asarray(ints, jnp.float32), jnp.asarray(fracs, jnp.float32),
+                jnp.asarray(enabled, jnp.bool_))
+
+    # -- serialization ----------------------------------------------------------
+    def to_json(self) -> str:
+        def enc(fmt):
+            return None if fmt is None else [fmt.int_bits, fmt.frac_bits]
+        return json.dumps({
+            "names": list(self.names),
+            "layers": [{"weight": enc(lp.weight), "data": enc(lp.data)}
+                       for lp in self.layers],
+        })
+
+    @staticmethod
+    def from_json(s: str) -> "PrecisionPolicy":
+        obj = json.loads(s)
+        def dec(v):
+            return None if v is None else FixedPointFormat(v[0], v[1])
+        layers = tuple(LayerPolicy(dec(l["weight"]), dec(l["data"]))
+                       for l in obj["layers"])
+        return PrecisionPolicy(tuple(obj["names"]), layers)
+
+    def short(self) -> str:
+        return " | ".join(f"{n}={lp.short()}" for n, lp in zip(self.names, self.layers))
+
+    def table(self) -> str:
+        rows = ["layer            weight   data", "-" * 34]
+        for n, lp in zip(self.names, self.layers):
+            w = lp.weight.short() if lp.weight else "fp32"
+            d = lp.data.short() if lp.data else "fp32"
+            rows.append(f"{n:<16} {w:<8} {d}")
+        return "\n".join(rows)

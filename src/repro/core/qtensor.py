@@ -1,0 +1,136 @@
+"""Packed quantized tensors: real memory-footprint reduction.
+
+``fake_quant`` models the paper's accuracy effects; ``QuantizedTensor`` makes
+the footprint reduction real: integer grids live in the smallest byte-aligned
+container (int8/int16), and sub-byte formats (<= 8 bits) can additionally be
+lane-packed, k values per int32 word, matching how the TPU kernels in
+``repro.kernels`` store weights/KV in HBM.
+
+QuantizedTensor is a pytree, so it checkpoints, shards and jits like any
+array. ``nbytes`` reports the true stored size, which is what the traffic
+model and EXPERIMENTS.md footprint numbers are derived from.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fixedpoint import FixedPointFormat, dequantize, quantize
+
+
+# ---------------------------------------------------------------------------
+# Bit packing: k N-bit two's-complement values per int32 word (little-endian
+# within the word). Pure jnp so the Pallas kernels' unpack math has an oracle.
+# ---------------------------------------------------------------------------
+def values_per_word(bits: int) -> int:
+    if not (1 <= bits <= 16):
+        raise ValueError(f"pack supports 1..16 bit values, got {bits}")
+    return 32 // bits
+
+
+def pack_bits(q, bits: int):
+    """Pack integer-grid values (any int/float dtype, already clipped to the
+    N-bit two's-complement range) into int32 words along the last axis.
+
+    Last axis is padded to a multiple of values_per_word(bits).
+    Returns (packed int32 array, original last-dim size).
+    """
+    k = values_per_word(bits)
+    q = jnp.asarray(q)
+    n = q.shape[-1]
+    pad = (-n) % k
+    if pad:
+        q = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+    qi = jnp.asarray(q, jnp.int32) & ((1 << bits) - 1)  # two's complement field
+    qi = qi.reshape(*qi.shape[:-1], -1, k)
+    shifts = (jnp.arange(k, dtype=jnp.int32) * bits)[None, :]
+    packed = jnp.sum(qi << shifts, axis=-1).astype(jnp.int32)  # disjoint fields
+    return packed, n
+
+
+def unpack_bits(packed, bits: int, n: int):
+    """Inverse of :func:`pack_bits`; returns int32 sign-extended values."""
+    k = values_per_word(bits)
+    packed = jnp.asarray(packed, jnp.int32)
+    shifts = (jnp.arange(k, dtype=jnp.int32) * bits)[None, :]
+    fields = (packed[..., None] >> shifts) & ((1 << bits) - 1)
+    # sign extend
+    sign_bit = 1 << (bits - 1)
+    vals = (fields ^ sign_bit) - sign_bit
+    vals = vals.reshape(*packed.shape[:-1], packed.shape[-1] * k)
+    return vals[..., :n]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Fixed-point tensor with explicit storage container.
+
+    ``data`` is either a small-int container (int8/int16) holding the integer
+    grid directly, or an int32 lane-packed buffer when ``packed`` is True.
+    """
+
+    data: jnp.ndarray
+    int_bits: int
+    frac_bits: int
+    shape: tuple  # logical shape
+    packed: bool = False
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.data,), (self.int_bits, self.frac_bits, self.shape, self.packed)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        (data,) = children
+        int_bits, frac_bits, shape, packed = aux
+        return cls(data, int_bits, frac_bits, shape, packed)
+
+    # -- properties ----------------------------------------------------------
+    @property
+    def fmt(self) -> FixedPointFormat:
+        return FixedPointFormat(self.int_bits, self.frac_bits)
+
+    @property
+    def total_bits(self) -> int:
+        return self.int_bits + self.frac_bits
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.data.shape)) * self.data.dtype.itemsize
+
+    @property
+    def logical_nbytes_fp32(self) -> int:
+        return int(np.prod(self.shape)) * 4
+
+    @property
+    def footprint_ratio(self) -> float:
+        """stored bytes / fp32 bytes — the paper's TR numerator per tensor."""
+        return self.nbytes / max(self.logical_nbytes_fp32, 1)
+
+    # -- construction / use ----------------------------------------------------
+    @classmethod
+    def from_float(cls, x, int_bits: int, frac_bits: int, *, pack: bool = False,
+                   rounding="nearest", key=None) -> "QuantizedTensor":
+        fmt = FixedPointFormat(int_bits, frac_bits)
+        q = quantize(x, int_bits, frac_bits, rounding=rounding, key=key)
+        shape = tuple(x.shape)
+        if pack:
+            if fmt.total_bits > 16:
+                raise ValueError("packing supports <=16-bit formats")
+            flat = q.reshape(-1) if q.ndim == 0 else q.reshape(*q.shape)
+            packed, _ = pack_bits(flat, fmt.total_bits)
+            return cls(packed, int_bits, frac_bits, shape, packed=True)
+        return cls(q.astype(fmt.container_dtype()), int_bits, frac_bits, shape)
+
+    def dequantize(self, dtype=jnp.float32) -> jnp.ndarray:
+        if self.packed:
+            vals = unpack_bits(self.data, self.total_bits, self.shape[-1])
+            vals = vals.reshape(self.shape)
+        else:
+            vals = self.data
+        return dequantize(vals, self.int_bits, self.frac_bits).astype(dtype)

@@ -1,0 +1,6 @@
+from .synthetic import digits_dataset, shapes32_dataset
+from .lm import LMDataConfig, lm_batch, lm_eval_stream
+from .pipeline import DataPipeline, PipelineConfig
+
+__all__ = ["digits_dataset", "shapes32_dataset", "LMDataConfig", "lm_batch",
+           "lm_eval_stream", "DataPipeline", "PipelineConfig"]

@@ -1,0 +1,65 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU —
+the same call sites serve tests and production. Each op has a ``*_ref``
+oracle in kernels.ref; tests/test_kernels.py sweeps shapes/dtypes
+(hypothesis) asserting allclose.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kv_attention import kv_attention_decode
+from .pack import pack_2d, unpack_2d, values_per_word
+from .quant_cast import quant_cast_2d
+from .quant_matmul import quant_matmul
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def quant_cast(x, int_bits: int, frac_bits: int, *, interpret=None):
+    """Fake-quant Q(I,F) on arbitrary-rank input (kernel works on 2-D)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1]) if x.ndim != 2 else x
+    if x2.ndim == 1:
+        x2 = x2[None, :]
+    y = quant_cast_2d(x2, int_bits=int_bits, frac_bits=frac_bits,
+                      interpret=interpret)
+    return y.reshape(shape)
+
+
+def pack(q, bits: int, *, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    shape = q.shape
+    q2 = q.reshape(-1, shape[-1])
+    w = pack_2d(q2, bits=bits, interpret=interpret)
+    return w.reshape(*shape[:-1], shape[-1] // values_per_word(bits))
+
+
+def unpack(w, bits: int, *, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    shape = w.shape
+    w2 = w.reshape(-1, shape[-1])
+    q = unpack_2d(w2, bits=bits, interpret=interpret)
+    return q.reshape(*shape[:-1], shape[-1] * values_per_word(bits))
+
+
+def qmatmul(a, wq, scales, *, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return quant_matmul(a, wq, scales, interpret=interpret)
+
+
+def kv_attention(q, k_q, v_q, kv_len, *, int_bits: int, frac_bits: int,
+                 interpret=None, block_t: int = 512):
+    interpret = _default_interpret() if interpret is None else interpret
+    return kv_attention_decode(q, k_q, v_q, kv_len, int_bits=int_bits,
+                               frac_bits=frac_bits, block_t=block_t,
+                               interpret=interpret)
+
+
+__all__ = ["quant_cast", "pack", "unpack", "qmatmul", "kv_attention", "ref"]

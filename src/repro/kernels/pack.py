@@ -1,0 +1,93 @@
+"""Pallas kernels: N-bit <-> int32 lane packing.
+
+TPU HBM is byte-addressed with 32-bit-friendly layouts; "N-bit memory" from
+the paper becomes k = 32/N grid values packed into one int32 lane
+(DESIGN.md §3 hardware adaptation). The packed tensor's footprint is truly
+N/32 of an int32 tensor — this is what the traffic/footprint numbers in
+EXPERIMENTS.md are backed by at runtime.
+
+pack : (M, N)  int32 grid vals -> (M, N/vpw) int32 words
+unpack: (M, N/vpw) int32 words -> (M, N)    int32 grid vals (sign-extended)
+
+Tiles keep the UNPACKED side at (256, 512) int32 (512 KB) and the packed
+side at (256, 512/vpw); both fit VMEM with double buffering. Bit ops run on
+the VPU; uint32 shifts avoid signed-overflow traps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def values_per_word(bits: int) -> int:
+    assert bits in (2, 4, 8, 16), bits
+    return 32 // bits
+
+
+def _pack_kernel(x_ref, o_ref, *, bits):
+    vpw = 32 // bits
+    x = x_ref[...]
+    mask = jnp.uint32((1 << bits) - 1)
+    qu = x.astype(jnp.uint32) & mask
+    grp = qu.reshape(x.shape[0], x.shape[1] // vpw, vpw)
+    word = jnp.zeros(grp.shape[:-1], jnp.uint32)
+    for i in range(vpw):  # static unroll: vpw in {2,4,8,16}
+        word = word | (grp[..., i] << jnp.uint32(i * bits))
+    o_ref[...] = jax.lax.bitcast_convert_type(word, jnp.int32)
+
+
+def _unpack_kernel(w_ref, o_ref, *, bits):
+    vpw = 32 // bits
+    wu = jax.lax.bitcast_convert_type(w_ref[...], jnp.uint32)
+    mask = jnp.uint32((1 << bits) - 1)
+    sign = jnp.uint32(1 << (bits - 1))
+    fields = (wu[..., None] >> (jnp.arange(vpw, dtype=jnp.uint32) * bits)) \
+        & mask
+    vals = (fields ^ sign).astype(jnp.int32) - jnp.int32(sign)
+    o_ref[...] = vals.reshape(wu.shape[0], wu.shape[1] * vpw)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_rows",
+                                             "interpret"))
+def pack_2d(q, *, bits: int, block_rows: int = 256,
+            interpret: bool = False):
+    """q: (M, N) int32 grid values, N % (32/bits) == 0."""
+    vpw = values_per_word(bits)
+    M, N = q.shape
+    assert N % vpw == 0, (N, vpw)
+    bm = min(block_rows, M)
+    pm = (-M) % bm
+    qp = jnp.pad(q, ((0, pm), (0, 0))) if pm else q
+    out = pl.pallas_call(
+        functools.partial(_pack_kernel, bits=bits),
+        grid=(qp.shape[0] // bm,),
+        in_specs=[pl.BlockSpec((bm, N), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, N // vpw), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((qp.shape[0], N // vpw), jnp.int32),
+        interpret=interpret,
+    )(qp)
+    return out[:M] if pm else out
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_rows",
+                                             "interpret"))
+def unpack_2d(w, *, bits: int, block_rows: int = 256,
+              interpret: bool = False):
+    """w: (M, W) int32 packed words -> (M, W * 32/bits) int32 values."""
+    vpw = values_per_word(bits)
+    M, W = w.shape
+    bm = min(block_rows, M)
+    pm = (-M) % bm
+    wp = jnp.pad(w, ((0, pm), (0, 0))) if pm else w
+    out = pl.pallas_call(
+        functools.partial(_unpack_kernel, bits=bits),
+        grid=(wp.shape[0] // bm,),
+        in_specs=[pl.BlockSpec((bm, W), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, W * vpw), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((wp.shape[0], W * vpw), jnp.int32),
+        interpret=interpret,
+    )(wp)
+    return out[:M] if pm else out

@@ -1,0 +1,52 @@
+"""Pallas kernel: tiled fake-quant Q(I,F) — the paper's memory-boundary op.
+
+HBM -> VMEM tile -> (scale, round-half-away, clip, rescale) on the VPU ->
+VMEM -> HBM. Tile (256, 512) fp32 = 512 KB in / 512 KB out, comfortably
+inside v5e's ~16 MB VMEM with double buffering; last dim 512 = 4 lanes of
+128. Format parameters are compile-time constants (per-layer formats are a
+handful of variants, each a tiny kernel specialization).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK = (256, 512)
+
+
+def _quant_cast_kernel(x_ref, o_ref, *, scale, qmin, qmax):
+    x = x_ref[...].astype(jnp.float32)
+    s = x * scale
+    q = jnp.trunc(s + jnp.copysign(0.5, s))       # round half away from zero
+    q = jnp.clip(q, qmin, qmax)
+    o_ref[...] = (q * (1.0 / scale)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("int_bits", "frac_bits", "block",
+                                    "interpret"))
+def quant_cast_2d(x, *, int_bits: int, frac_bits: int,
+                  block=DEFAULT_BLOCK, interpret: bool = False):
+    """x: (M, N). Returns fake-quantized array, same shape/dtype."""
+    M, N = x.shape
+    bm, bn = min(block[0], M), min(block[1], N)
+    pm, pn = (-M) % bm, (-N) % bn
+    xp = jnp.pad(x, ((0, pm), (0, pn))) if (pm or pn) else x
+    Mp, Np = xp.shape
+    scale = float(2 ** frac_bits)
+    qmax = float(2 ** (int_bits + frac_bits - 1) - 1)
+    qmin = -float(2 ** (int_bits + frac_bits - 1))
+    out = pl.pallas_call(
+        functools.partial(_quant_cast_kernel, scale=scale, qmin=qmin,
+                          qmax=qmax),
+        grid=(Mp // bm, Np // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=interpret,
+    )(xp)
+    return out[:M, :N] if (pm or pn) else out

@@ -1,0 +1,71 @@
+"""Pallas kernel: A(bf16/f32) x W(int8 grid, per-channel scale) -> f32.
+
+The paper's per-layer weight bits, made computable without a dequantized
+weight copy in HBM: W ships int8 (optionally int4-packed via kernels.pack,
+unpacked on the fly by the int4 variant), is dequantized TILE-BY-TILE in
+VMEM, and feeds the MXU as fp32.
+
+Blocking: (bm, bk) x (bk, bn) -> (bm, bn) with grid (M/bm, N/bn, K/bk);
+K innermost (sequential) so the output block accumulates in place across K
+steps. Defaults bm=bn=256, bk=512: VMEM footprint
+  A 256x512 f32 = 512 KB, W 512x256 int8 = 128 KB, O 256x256 f32 = 256 KB
+and all matmul dims are multiples of 128 (MXU-aligned). Per-channel scales
+apply once, on the LAST K step (one multiply per output element total).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qmm_kernel(a_ref, w_ref, s_ref, o_ref, *, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)          # int8 -> f32 dequant in VMEM
+    o_ref[...] += jnp.dot(a, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _scale():
+        o_ref[...] = o_ref[...] * s_ref[...].astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def quant_matmul(a, wq, scales, *, block=(256, 256, 512),
+                 interpret: bool = False):
+    """a: (M, K) float; wq: (K, N) int8/int16; scales: (N,) f32.
+    Returns (M, N) f32 = a @ (wq * scales)."""
+    M, K = a.shape
+    K2, N = wq.shape
+    assert K == K2 and scales.shape == (N,)
+    bm, bn, bk = (min(block[0], M), min(block[1], N), min(block[2], K))
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        wq = jnp.pad(wq, ((0, pk), (0, pn)))
+    if pn:
+        scales = jnp.pad(scales, (0, pn))
+    Mp, Kp = a.shape
+    Np = wq.shape[1]
+    nk = Kp // bk
+    out = pl.pallas_call(
+        functools.partial(_qmm_kernel, nk=nk),
+        grid=(Mp // bm, Np // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        interpret=interpret,
+    )(a, wq, scales[None, :])
+    return out[:M, :N] if (pm or pn) else out

@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Shared numerics with the core library where it matters: the fake-quant grid
+definition is imported from core.fixedpoint, so kernel == library == paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.fixedpoint import fake_quant, format_params
+
+NEG_INF = -1e30
+
+
+def quant_cast_ref(x, int_bits: int, frac_bits: int):
+    """Fake-quant Q(I,F): round-half-away, clip, rescale (paper §2.1)."""
+    return fake_quant(x, int_bits, frac_bits)
+
+
+# ---------------------------------------------------------------------------
+# Lane packing: k N-bit fields per int32 word, little-endian in bit order.
+# ---------------------------------------------------------------------------
+def values_per_word(bits: int) -> int:
+    assert bits in (2, 4, 8, 16), bits
+    return 32 // bits
+
+
+def pack_ref(q, bits: int):
+    """q: (..., N) int32 integer-grid values in [-2^(bits-1), 2^(bits-1)-1].
+    Returns (..., N // vpw) int32 packed words."""
+    vpw = values_per_word(bits)
+    assert q.shape[-1] % vpw == 0
+    mask = jnp.uint32((1 << bits) - 1)
+    qu = q.astype(jnp.uint32) & mask
+    grp = qu.reshape(*q.shape[:-1], q.shape[-1] // vpw, vpw)
+    shifts = (jnp.arange(vpw, dtype=jnp.uint32) * bits)
+    word = jnp.bitwise_or.reduce(grp << shifts, axis=-1) \
+        if hasattr(jnp.bitwise_or, "reduce") else None
+    if word is None:
+        word = jnp.zeros(grp.shape[:-1], jnp.uint32)
+        for i in range(vpw):
+            word = word | (grp[..., i] << jnp.uint32(i * bits))
+    return jax.lax.bitcast_convert_type(word, jnp.int32)
+
+
+def unpack_ref(w, bits: int):
+    """Inverse of pack_ref (sign-extending). w: (..., M) int32 ->
+    (..., M * vpw) int32."""
+    vpw = values_per_word(bits)
+    wu = jax.lax.bitcast_convert_type(w, jnp.uint32)
+    shifts = (jnp.arange(vpw, dtype=jnp.uint32) * bits)
+    mask = jnp.uint32((1 << bits) - 1)
+    fields = (wu[..., None] >> shifts) & mask              # (..., M, vpw)
+    sign = jnp.uint32(1 << (bits - 1))
+    vals = (fields ^ sign).astype(jnp.int32) - jnp.int32(sign)
+    return vals.reshape(*w.shape[:-1], w.shape[-1] * vpw)
+
+
+# ---------------------------------------------------------------------------
+# Quantized matmul: W stored on an int grid, per-output-channel scale.
+# ---------------------------------------------------------------------------
+def quant_matmul_ref(a, wq, scales):
+    """a: (M, K) float; wq: (K, N) int8/int16 grid; scales: (N,) fp32.
+    out (M, N) fp32 = a @ (wq * scales)."""
+    af = a.astype(jnp.float32)
+    wf = wq.astype(jnp.float32) * scales[None, :].astype(jnp.float32)
+    return af @ wf
+
+
+# ---------------------------------------------------------------------------
+# Decode attention over an int8-quantized KV cache (per-layer Q(I,F)).
+# ---------------------------------------------------------------------------
+def kv_attention_ref(q, k_q, v_q, int_bits, frac_bits, kv_len):
+    """q: (B, H, hd) float; k_q/v_q: (B, T, KV, hd) int8 grid; kv_len: int.
+    GQA decode: one new token attends to the first kv_len cache entries.
+    Returns (B, H, hd) float32."""
+    B, H, hd = q.shape
+    T, KV = k_q.shape[1], k_q.shape[2]
+    G = H // KV
+    scale, _, _ = format_params(int_bits, frac_bits)
+    k = k_q.astype(jnp.float32) / scale
+    v = v_q.astype(jnp.float32) / scale
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32) / np.sqrt(hd)
+    s = jnp.einsum("bkgh,btkh->bkgt", qg, k)
+    mask = jnp.arange(T)[None, None, None, :] < kv_len
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkh->bkgh", p, v)
+    return o.reshape(B, H, hd)

@@ -1,0 +1,156 @@
+"""Optimized-HLO analysis: collective bytes for the roofline's third term.
+
+``compiled.as_text()`` is the SPMD-partitioned module, so instruction shapes
+are PER-DEVICE. For every collective op we record operand/output bytes and
+the replica-group size g, then convert to ring-model WIRE bytes per device:
+
+    all-gather          (g-1)/g x output bytes      (received)
+    all-reduce          2 (g-1)/g x operand bytes   (RS + AG rings)
+    reduce-scatter      (g-1)/g x operand bytes
+    all-to-all          (g-1)/g x operand bytes
+    collective-permute  1.0     x operand bytes     (one hop)
+
+cost_analysis() gives HLO_FLOPs / HLO_bytes for the compute and memory terms;
+this module is the only place HLO text is parsed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8,
+    "c128": 16, "u1": 1, "s1": 1, "s2": 1, "u2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s+"
+    r"([a-z][\w\-]*)\((.*)$")
+_GROUPS_NEW_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_RING_FACTOR = {
+    "all-gather": lambda g: (g - 1) / g,
+    "all-reduce": lambda g: 2 * (g - 1) / g,
+    "reduce-scatter": lambda g: (g - 1) / g,
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    opcode: str
+    name: str
+    output_bytes: int
+    operand_bytes: int
+    group_size: int
+    wire_bytes: float  # ring-model per-device wire bytes
+
+
+def _base_opcode(op: str) -> Optional[str]:
+    op = op.removesuffix("-start")
+    return op if op in COLLECTIVE_OPS else None
+
+
+def parse_collectives(hlo_text: str, *, default_group: int = 1
+                      ) -> List[CollectiveOp]:
+    # pass 1: name -> output bytes
+    shapes: Dict[str, int] = {}
+    defs = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        shapes[name] = _type_bytes(type_str)
+        defs.append((name, type_str, opcode, rest))
+
+    out: List[CollectiveOp] = []
+    for name, type_str, opcode, rest in defs:
+        base = _base_opcode(opcode)
+        if base is None:
+            continue
+        out_bytes = shapes[name]
+        # operands: %name references inside the parens
+        paren = rest.split(")")[0]
+        operand_names = re.findall(r"%([\w.\-]+)", paren)
+        op_bytes = sum(shapes.get(n, 0) for n in operand_names)
+        if op_bytes == 0:  # typed-operand style or unresolvable: use text
+            op_bytes = _type_bytes(paren) or out_bytes
+        g = default_group
+        m = _GROUPS_NEW_RE.search(rest)
+        if m:
+            g = int(m.group(2))  # [num_groups, group_size]
+        else:
+            m = _GROUPS_OLD_RE.search(rest)
+            if m:
+                g = max(1, m.group(1).count(",") + 1)
+        wire = _RING_FACTOR[base](max(g, 1)) * (
+            out_bytes if base == "all-gather" else op_bytes)
+        out.append(CollectiveOp(base, name, out_bytes, op_bytes, g, wire))
+    return out
+
+
+def collective_summary(hlo_text: str) -> dict:
+    ops = parse_collectives(hlo_text)
+    by_type: Dict[str, dict] = {}
+    for op in ops:
+        d = by_type.setdefault(op.opcode, {"count": 0, "operand_bytes": 0,
+                                           "output_bytes": 0,
+                                           "wire_bytes": 0.0})
+        d["count"] += 1
+        d["operand_bytes"] += op.operand_bytes
+        d["output_bytes"] += op.output_bytes
+        d["wire_bytes"] += op.wire_bytes
+    return {
+        "per_type": by_type,
+        "total_operand_bytes": sum(o.operand_bytes for o in ops),
+        "total_wire_bytes_per_device": sum(o.wire_bytes for o in ops),
+        "count": len(ops),
+    }
+
+
+def memory_summary(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        ma = None
+    if ma is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "peak_memory_in_bytes", "generated_code_size_in_bytes")
+    return {k: int(getattr(ma, k, 0)) for k in keys}
+
+
+def cost_summary(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if ca is None:
+        return {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0))}

@@ -1,0 +1,370 @@
+"""Loop-aware cost model over optimized HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE — useless for
+scan-over-layers models where >95% of work sits inside loops. This module
+parses the SPMD-partitioned HLO text and aggregates, with every while body
+multiplied by its ``known_trip_count``:
+
+  * flops      — 2*prod(out)*prod(contracting) per dot (descends into fusions)
+  * hbm_bytes  — operands+output bytes of every FUSION-BOUNDARY instruction
+                 (XLA moves HBM data at fusion boundaries; inside-fusion
+                 temporaries stay in registers/VMEM)
+  * wire_bytes — ring-model collective bytes (see hlo_analysis)
+
+Shapes in the partitioned module are per-device, so all results are
+per-device per-step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+from .hlo_analysis import (_DTYPE_BYTES, _RING_FACTOR, _SHAPE_RE,
+                           COLLECTIVE_OPS, _base_opcode, _type_bytes)
+
+_COMP_HDR_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s*->\s*(.*?)\s*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\)|[a-z][a-z0-9]*\[[^\]]*\](?:\{[^}]*\})?))\s+([a-z][\w\-]*)\((.*)$")
+_PARAM_RE = re.compile(r"([\w.\-]+)\s*:\s*((?:\([^()]*\)|[a-z][a-z0-9]*\[[^\]]*\]))")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|body|to_apply|true_computation|false_computation)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_NEW_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+
+# ops that move no HBM data at the top level
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota",
+             "all-gather-done", "all-reduce-done", "collective-permute-done",
+             "copy-done", "opt-barrier", "custom-call-done"}
+# control-flow / call ops we descend into instead of pricing directly
+_DESCEND = {"while", "call", "conditional", "fusion"}
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    out_type: str
+    opcode: str
+    rest: str            # everything after the opening paren
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]
+    instrs: List[Instr]
+
+
+def parse_module(hlo_text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR_RE.match(line.strip()) if "{" in line else None
+        if m and ("->" in line):
+            is_entry, name, params_str, _ = m.groups()
+            params = dict(_PARAM_RE.findall(params_str))
+            cur = Computation(name, params, [])
+            comps[name] = cur
+            if is_entry:
+                entry = name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            name, out_type, opcode, rest = mi.groups()
+            cur.instrs.append(Instr(name, out_type, opcode, rest,
+                                    is_root=line.lstrip().startswith("ROOT")))
+    return comps, entry
+
+
+def _operand_names(rest: str) -> List[str]:
+    # operands live before the first "), " at paren depth 0
+    depth, end = 1, len(rest)
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return re.findall(r"%([\w.\-]+)", rest[:end]), rest[end:]
+
+
+def _dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.hbm_bytes += o.hbm_bytes
+        self.wire_bytes += o.wire_bytes
+        for k, v in o.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v
+        return self
+
+    def scaled(self, m: float) -> "Cost":
+        return Cost(self.flops * m, self.hbm_bytes * m, self.wire_bytes * m,
+                    {k: v * m for k, v in self.coll.items()})
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps, self.entry = parse_module(hlo_text)
+        self._memo: Dict[Tuple[str, bool], Cost] = {}
+        self.warnings: List[str] = []
+        self.loops: List[dict] = []   # populated during cost_of()
+
+    # -- shape environment per computation -------------------------------
+    def _shapes(self, comp: Computation) -> Dict[str, str]:
+        env = dict(comp.params)
+        for ins in comp.instrs:
+            env[ins.name] = ins.out_type
+        return env
+
+    def _flops_of_dot(self, ins: Instr, env: Dict[str, str]) -> float:
+        out_elems = 1
+        for d in _dims(ins.out_type):
+            out_elems *= d
+        operands, attrs = _operand_names(ins.rest)
+        contract = 1
+        m = _CONTRACT_RE.search(attrs)
+        if m and operands:
+            lhs_dims = _dims(env.get(operands[0], ""))
+            idxs = [int(i) for i in m.group(1).split(",")] if m.group(1) \
+                else []
+            for i in idxs:
+                if i < len(lhs_dims):
+                    contract *= lhs_dims[i]
+        return 2.0 * out_elems * contract
+
+    # slicing ops read/write only the slice, not the whole operand buffer
+    _READ_SLICE = {"slice", "dynamic-slice", "gather"}
+    _ALIASED_WRITE = {"dynamic-update-slice", "scatter"}
+
+    def _root_opcode(self, ins: Instr) -> str:
+        if ins.opcode != "fusion":
+            return ins.opcode
+        _, attrs = _operand_names(ins.rest)
+        for c in _CALL_ATTR_RE.findall(attrs):
+            comp = self.comps.get(c)
+            if comp:
+                for i2 in comp.instrs:
+                    if i2.is_root:
+                        return i2.opcode
+        return ins.opcode
+
+    def _fusion_param_slice_bytes(self, called: str) -> Dict[int, float]:
+        """For a fused computation: param index -> total bytes actually READ
+        when every consumer of that param is a (dynamic-)slice/gather (the
+        scan xs pattern: fusions embed a per-step slice of a big stacked
+        buffer; HBM traffic is the slice, not the buffer)."""
+        comp = self.comps.get(called)
+        if comp is None:
+            return {}
+        pidx: Dict[str, int] = {}
+        for ins in comp.instrs:
+            if ins.opcode == "parameter":
+                mnum = re.match(r"\s*(\d+)", ins.rest)
+                if mnum:
+                    pidx[ins.name] = int(mnum.group(1))
+        consumers: Dict[str, List[Instr]] = {n: [] for n in pidx}
+        for ins in comp.instrs:
+            ops, _ = _operand_names(ins.rest)
+            for o in ops:
+                if o in consumers:
+                    consumers[o].append(ins)
+        out: Dict[int, float] = {}
+        for name, idx in pidx.items():
+            cons = consumers.get(name, [])
+            if cons and all(c.opcode in ("dynamic-slice", "slice", "gather")
+                            for c in cons):
+                out[idx] = float(sum(_type_bytes(c.out_type) for c in cons))
+        return out
+
+    def _bytes_of(self, ins: Instr, env: Dict[str, str]) -> float:
+        operands, attrs = _operand_names(ins.rest)
+        op_bytes = [_type_bytes(env.get(o, "")) for o in operands]
+        out_b = _type_bytes(ins.out_type)
+        root = self._root_opcode(ins) if ins.opcode in (
+            "fusion", "dynamic-slice", "slice", "gather",
+            "dynamic-update-slice", "scatter") else ins.opcode
+        if ins.opcode == "fusion":
+            for c in _CALL_ATTR_RE.findall(attrs):
+                for idx, b in self._fusion_param_slice_bytes(c).items():
+                    if idx < len(op_bytes):
+                        op_bytes[idx] = min(op_bytes[idx], b)
+        big = max(op_bytes, default=0)
+        if root in self._READ_SLICE and op_bytes:
+            # read the slice (out) + indices; not the whole source buffer
+            return float(sum(op_bytes) - big + out_b)
+        if root in self._ALIASED_WRITE and op_bytes:
+            # in-place window write: update + indices (buffer is aliased)
+            return float(sum(op_bytes) - big + max(out_b - big, 0))
+        return float(sum(op_bytes) + out_b)
+
+    def _wire_of(self, ins: Instr, env: Dict[str, str], base: str) -> float:
+        operands, attrs = _operand_names(ins.rest)
+        out_b = _type_bytes(ins.out_type)
+        op_b = sum(_type_bytes(env.get(o, "")) for o in operands) or out_b
+        g = 1
+        m = _GROUPS_NEW_RE.search(attrs)
+        if m:
+            g = int(m.group(2))
+        else:
+            m = _GROUPS_OLD_RE.search(attrs)
+            if m:
+                g = max(1, m.group(1).count(",") + 1)
+        return _RING_FACTOR[base](max(g, 1)) * (
+            out_b if base == "all-gather" else op_b)
+
+    # -- recursive cost ----------------------------------------------------
+    def cost_of(self, comp_name: str, *, inside_fusion: bool = False) -> Cost:
+        key = (comp_name, inside_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return Cost()
+        env = self._shapes(comp)
+        total = Cost()
+        for ins in comp.instrs:
+            op = ins.opcode
+            base = _base_opcode(op)
+            if base is not None:
+                w = self._wire_of(ins, env, base)
+                total += Cost(0.0, 0.0 if inside_fusion
+                              else self._bytes_of(ins, env), w,
+                              {base: w})
+                continue
+            if op == "dot":
+                total += Cost(self._flops_of_dot(ins, env),
+                              0.0 if inside_fusion
+                              else self._bytes_of(ins, env), 0.0)
+                continue
+            if op == "while":
+                _, attrs = _operand_names(ins.rest)
+                mt = _TRIP_RE.search(attrs)
+                trip = int(mt.group(1)) if mt else 1
+                if not mt:
+                    self.warnings.append(
+                        f"while {ins.name}: no known_trip_count; using 1")
+                called = _CALL_ATTR_RE.findall(attrs)
+                body = [c for c in called if self.comps.get(c)]
+                inner = Cost()
+                for c in body:
+                    inner += self.cost_of(c)
+                self.loops.append({
+                    "name": ins.name, "in": comp_name, "trip": trip,
+                    "carry_bytes": _type_bytes(ins.out_type),
+                    "body_flops": inner.flops,
+                    "body_hbm_bytes": inner.hbm_bytes,
+                    "body_wire_bytes": inner.wire_bytes,
+                    "total_hbm_bytes": inner.hbm_bytes * trip,
+                })
+                total += inner.scaled(trip)
+                continue
+            if op == "fusion":
+                _, attrs = _operand_names(ins.rest)
+                for c in _CALL_ATTR_RE.findall(attrs):
+                    total += self.cost_of(c, inside_fusion=True)
+                total += Cost(0.0, self._bytes_of(ins, env), 0.0)
+                continue
+            if op in ("call", "conditional", "async-start"):
+                _, attrs = _operand_names(ins.rest)
+                branches = _CALL_ATTR_RE.findall(attrs)
+                mb = _BRANCHES_RE.search(attrs)
+                if mb:
+                    branches += re.findall(r"%?([\w.\-]+)", mb.group(1))
+                sub = [self.cost_of(c) for c in branches
+                       if self.comps.get(c)]
+                if op == "conditional" and sub:
+                    # price the most expensive branch
+                    total += max(sub, key=lambda c: c.flops + c.hbm_bytes)
+                else:
+                    for c in sub:
+                        total += c
+                continue
+            if op in _FREE_OPS:
+                continue
+            if op == "custom-call":
+                # e.g. topk; price data movement only
+                if not inside_fusion:
+                    total += Cost(0.0, self._bytes_of(ins, env), 0.0)
+                continue
+            # plain op at fusion boundary: price its data movement
+            if not inside_fusion:
+                total += Cost(0.0, self._bytes_of(ins, env), 0.0)
+        self._memo[key] = total
+        return total
+
+    def total(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.cost_of(self.entry)
+
+
+def analyze(hlo_text: str, *, loops: bool = False) -> dict:
+    model = HloCostModel(hlo_text)
+    c = model.total()
+    out = {
+        "flops": c.flops,
+        "hbm_bytes": c.hbm_bytes,
+        "wire_bytes": c.wire_bytes,
+        "collectives": c.coll,
+        "warnings": model.warnings[:20],
+    }
+    if loops:
+        out["loops"] = sorted(model.loops,
+                              key=lambda d: -d["total_hbm_bytes"])
+    return out
+
+
+def top_instructions(hlo_text: str, comp_name: str, *, by: str = "bytes",
+                     n: int = 10) -> List[dict]:
+    """Most expensive instructions of one computation (perf-loop drilldown)."""
+    model = HloCostModel(hlo_text)
+    comp = model.comps.get(comp_name)
+    if comp is None:
+        return []
+    env = model._shapes(comp)
+    rows = []
+    for ins in comp.instrs:
+        if ins.opcode in _FREE_OPS:
+            continue
+        if ins.opcode == "fusion":
+            _, attrs = _operand_names(ins.rest)
+            fl = sum(model.cost_of(c, inside_fusion=True).flops
+                     for c in _CALL_ATTR_RE.findall(attrs))
+        elif ins.opcode == "dot":
+            fl = model._flops_of_dot(ins, env)
+        else:
+            fl = 0.0
+        rows.append({"name": ins.name, "op": ins.opcode,
+                     "bytes": model._bytes_of(ins, env), "flops": fl,
+                     "out": ins.out_type[:60]})
+    key = "bytes" if by == "bytes" else "flops"
+    return sorted(rows, key=lambda r: -r[key])[:n]

@@ -1,0 +1,29 @@
+"""Production mesh construction (dry-run target: TPU v5e pods).
+
+A FUNCTION, not a module-level constant — importing this module must never
+touch jax device state (smoke tests see 1 CPU device; only dryrun.py forces
+512 host devices via XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16) data x model single pod; (2,16,16) pod x data x model for the
+    2-pod = 512-chip configuration."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host actually has, as a 1-D data mesh (real training on
+    this container: 1 CPU device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small fake mesh for subprocess-based distribution tests."""
+    return jax.make_mesh(shape, axes)

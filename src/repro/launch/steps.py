@@ -1,0 +1,107 @@
+"""Step functions shared by dryrun / train / serve.
+
+Everything here is mesh-agnostic pure functions; launchers wrap them in
+jax.jit with shardings from parallel.sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import (forward, init_cache, init_model, train_loss)
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
+from ..optim.compress import CompressionConfig, compress_gradients, \
+    error_feedback_init
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    lr: float = 3e-4
+    adamw: AdamWConfig = AdamWConfig()
+    lb_coeff: float = 0.01
+    grad_compress: Optional[CompressionConfig] = None
+
+
+def init_train_state(key, cfg, hp: TrainHParams):
+    params = init_model(key, cfg)
+    state = {"params": params, "opt": adamw_init(params, hp.adamw)}
+    if hp.grad_compress is not None:
+        state["ef_residual"] = error_feedback_init(params)
+    return state
+
+
+def make_train_step(cfg, hp: TrainHParams, *, quant=None):
+    """Returns fn(state, batch) -> (state, metrics)."""
+
+    def step(state, batch):
+        def loss_fn(params):
+            return train_loss(params, batch, cfg, quant=quant,
+                              lb_coeff=hp.lb_coeff)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        if hp.grad_compress is not None:
+            grads, new_res = compress_gradients(
+                grads, state["ef_residual"], hp.grad_compress)
+        params, opt, opt_metrics = adamw_update(
+            state["params"], grads, state["opt"], hp.lr, hp.adamw)
+        new_state = {"params": params, "opt": opt}
+        if hp.grad_compress is not None:
+            new_state["ef_residual"] = new_res
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return new_state, metrics
+
+    return step
+
+
+def make_prefill_step(cfg, *, max_len: int, quant=None):
+    """fn(params, batch) -> (last_logits, caches). Encoder archs return
+    (logits, None) — a plain forward."""
+
+    def step(params, batch):
+        if cfg.family == "encoder":
+            _, logits, _, _ = forward(params, batch, cfg, quant=quant)
+            return logits, None
+        B = (batch["tokens"].shape[0] if "tokens" in batch
+             else batch["embeds"].shape[0])
+        caches = init_cache(cfg, B, max_len, quant)
+        _, logits, caches, _ = forward(params, batch, cfg, quant=quant,
+                                       caches=caches, cache_pos=0)
+        return logits[:, -1], caches
+
+    return step
+
+
+def make_decode_step(cfg, *, quant=None, greedy: bool = True):
+    """fn(params, tokens (B,), pos, caches) -> (next_tokens, logits, caches).
+
+    One new token per sequence against a preallocated cache — the function
+    the decode_32k / long_500k cells lower."""
+
+    def step(params, tokens, pos, caches):
+        batch = {"tokens": tokens[:, None]}
+        _, logits, caches, _ = forward(params, batch, cfg, quant=quant,
+                                       caches=caches, cache_pos=pos)
+        logits = logits[:, 0]
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, logits, caches
+
+    return step
+
+
+def make_embed_decode_step(cfg, *, quant=None):
+    """Decode step for frontend-stub archs (inputs are embeds)."""
+
+    def step(params, embeds, pos, caches):
+        batch = {"embeds": embeds}
+        _, logits, caches, _ = forward(params, batch, cfg, quant=quant,
+                                       caches=caches, cache_pos=pos)
+        logits = logits[:, 0]
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, logits, caches
+
+    return step

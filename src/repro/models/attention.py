@@ -1,0 +1,434 @@
+"""Attention: GQA (with optional QKV bias / M-RoPE) and MLA (DeepSeek-V3).
+
+Three memory-relevant design points, all tied to the paper:
+
+* **Chunked (online-softmax) attention** — scores never materialize beyond a
+  (..., S, chunk) tile, so 32k prefill and 500k decode stay within HBM. This
+  is the pure-JAX analogue of the Pallas ``kv_attention`` kernel and serves
+  as its oracle at integration level.
+* **Quantized KV cache** — the paper's per-layer "data" quantization applied
+  to the tensor that dominates decode traffic. The cache stores an int8/int16
+  integer grid; (scale, qmin, qmax) ride through ``lax.scan`` as per-layer
+  scalars.
+* Caches are preallocated to ``max_len`` and updated with dynamic slices, so
+  decode steps compile once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.fixedpoint import format_params
+from ..parallel.hints import constrain
+from .common import apply_mrope, apply_rope, dense_init, init_rmsnorm, rmsnorm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class KVQuantSpec:
+    """Per-layer fixed-point spec for the KV cache (the paper's data bits)."""
+
+    int_bits: object  # python int or traced scalar (inside lax.scan)
+    frac_bits: object
+    container: str = "int8"  # static storage dtype
+
+    @property
+    def dtype(self):
+        return {"int8": jnp.int8, "int16": jnp.int16}[self.container]
+
+
+def init_kv_cache(batch, max_len, n_kv, head_dim, dtype,
+                  quant: Optional[KVQuantSpec] = None):
+    store = quant.dtype if quant is not None else dtype
+    shape = (batch, max_len, n_kv, head_dim)
+    return {"k": jnp.zeros(shape, store), "v": jnp.zeros(shape, store)}
+
+
+def _q_store(x, quant: Optional[KVQuantSpec]):
+    if quant is None:
+        return x
+    scale, qmin, qmax = format_params(quant.int_bits, quant.frac_bits)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) * scale), qmin, qmax)
+    return q.astype(quant.dtype)
+
+
+def _q_load(x, quant: Optional[KVQuantSpec], dtype):
+    if quant is None:
+        return x.astype(dtype)
+    scale, _, _ = format_params(quant.int_bits, quant.frac_bits)
+    return (x.astype(jnp.float32) / scale).astype(dtype)
+
+
+def cache_update(cache, k_new, v_new, pos, quant=None):
+    """Write S_new tokens at offset ``pos`` (scalar int32)."""
+    k_q = _q_store(k_new, quant)
+    v_q = _q_store(v_new, quant)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_q.astype(cache["k"].dtype), pos, 1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_q.astype(cache["v"].dtype), pos, 1)
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (grouped heads, online softmax over KV chunks)
+# ---------------------------------------------------------------------------
+def _split_heads(x, n, d):
+    return x.reshape(*x.shape[:-1], n, d)
+
+
+def attend_full(q, k, v, q_pos, kv_pos, *, causal=True, kv_len=None,
+                scale=None):
+    """Reference full-materialization attention (small shapes / oracle).
+
+    q: (B,S,H,hd); k,v: (B,T,KV,hd); q_pos: (B,S); kv_pos: (T,)
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    vd = v.shape[-1]            # may differ from hd (MLA: dn+dr vs dv)
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.ones((B, S, k.shape[1]), bool)
+    if causal:
+        mask &= kv_pos[None, None, :] <= q_pos[:, :, None]
+    if kv_len is not None:
+        mask &= kv_pos[None, None, :] < kv_len
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkh->bskgh", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, S, H, vd).astype(q.dtype)
+
+
+def attend_chunked(q, k, v, q_pos, kv_start, *, causal=True, kv_len=None,
+                   chunk=1024, kv_quant: Optional[KVQuantSpec] = None,
+                   scale=None, operand_dtype=jnp.float32):
+    """Flash-style online-softmax attention, scanning KV in chunks.
+
+    k/v may be an integer-grid quantized cache; each chunk is dequantized in
+    registers (the jnp analogue of the Pallas kernel's VMEM dequant).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    vd = v.shape[-1]            # may differ from hd (MLA: dn+dr vs dv)
+    T = k.shape[1]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    chunk = min(chunk, T)
+    if T % chunk:
+        pad = chunk - T % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        T = T + pad
+        if kv_len is None:
+            kv_len = T - pad
+    nc = T // chunk
+    if S == 1:
+        # decode: grouped (KV, G) math — tensors are tiny at S=1 and the
+        # G-fold K/V expansion of the training path would multiply the
+        # dominant cache-read bytes by the group size (§Perf iteration)
+        return _attend_chunked_grouped(q, k, v, q_pos, kv_start,
+                                       causal=causal, kv_len=kv_len,
+                                       chunk=chunk, kv_quant=kv_quant,
+                                       scale=scale, nc=nc)
+    # Work in EXPANDED H-head space, not (KV, G): H is divisible by the TP
+    # degree when KV isn't (GQA kv=8 on a 16-way model axis), so all chunk
+    # transients shard. K/V chunks expand on the fly (head h -> kv h // G).
+    # ``operand_dtype=bf16`` (cfg.attn_bf16) halves the q/k/v chunk bytes +
+    # gathers; softmax state and dot accumulation stay fp32.
+    odt = operand_dtype
+    qh = constrain((q.astype(jnp.float32) * scale).astype(odt),
+                   "dp", None, "tp", None)
+
+    k_c = jnp.moveaxis(k.reshape(B, nc, chunk, KV, hd), 1, 0)
+    v_c = jnp.moveaxis(v.reshape(B, nc, chunk, KV, vd), 1, 0)
+
+    m0 = jnp.full((B, H, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    a0 = jnp.zeros((B, S, H, vd), jnp.float32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        idx, kc, vc = inp
+        kc = _q_load(kc, kv_quant, odt)
+        vc = _q_load(vc, kv_quant, odt)
+        if G > 1:
+            kc = jnp.repeat(kc, G, axis=2)
+            vc = jnp.repeat(vc, G, axis=2)
+        kc = constrain(kc, "dp", None, "tp", None)
+        vc = constrain(vc, "dp", None, "tp", None)
+        s = jnp.einsum("bshd,bthd->bhst", qh, kc,
+                       preferred_element_type=jnp.float32)
+        pos = kv_start + idx * chunk + jnp.arange(chunk)
+        valid = jnp.ones((B, S, chunk), bool)
+        if causal:
+            valid &= pos[None, None, :] <= q_pos[:, :, None]
+        if kv_len is not None:
+            valid &= pos[None, None, :] < kv_len
+        s = jnp.where(valid[:, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhst,bthd->bshd", p, vc,
+                        preferred_element_type=jnp.float32)
+        corr_t = jnp.transpose(corr, (0, 2, 1))[..., None]   # (B,S,H,1)
+        acc_new = acc * corr_t + pv
+        return (m_new, l_new, acc_new), None
+
+    idxs = jnp.arange(nc)
+    # checkpoint the chunk body: backward recomputes s/p per chunk instead of
+    # saving the stacked (nc, B, H, S, chunk) probabilities — the flash-
+    # attention memory property at the jnp level
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
+                                  (idxs, k_c, v_c))
+    l_t = jnp.transpose(l, (0, 2, 1))[..., None]
+    out = acc / jnp.maximum(l_t, 1e-30)
+    return out.astype(q.dtype)
+
+
+def _attend_chunked_grouped(q, k, v, q_pos, kv_start, *, causal, kv_len,
+                            chunk, kv_quant, scale, nc):
+    """Online-softmax decode attention in grouped (B,KV,G) layout; K/V are
+    read chunk-by-chunk in their stored (possibly int8) form and never
+    expanded across the group dim. S is 1 (a single new token)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    vd = v.shape[-1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32) * scale
+
+    k_c = jnp.moveaxis(k.reshape(B, nc, chunk, KV, hd), 1, 0)
+    v_c = jnp.moveaxis(v.reshape(B, nc, chunk, KV, vd), 1, 0)
+
+    m0 = jnp.full((B, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, vd), jnp.float32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        idx, kc, vc = inp
+        kc = _q_load(kc, kv_quant, jnp.float32)
+        vc = _q_load(vc, kv_quant, jnp.float32)
+        s = jnp.einsum("bkgh,btkh->bkgt", qg, kc,
+                       preferred_element_type=jnp.float32)
+        pos = kv_start + idx * chunk + jnp.arange(chunk)
+        valid = pos[None, :] <= q_pos[:, -1:]  # causal vs the new token
+        if kv_len is not None:
+            valid = valid & (pos[None, :] < kv_len)
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgt,btkh->bkgh", p, vc, preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (jnp.arange(nc), k_c, v_c))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, 1, H, vd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+def init_gqa(key, cfg):
+    """cfg: ModelConfig (configs.base). One layer; no leading L dim."""
+    ks = jax.random.split(key, 4)
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = cfg.param_jnp_dtype
+    p = {
+        "wq": dense_init(ks[0], (D, H * hd), dt),
+        "wk": dense_init(ks[1], (D, KV * hd), dt),
+        "wv": dense_init(ks[2], (D, KV * hd), dt),
+        "wo": dense_init(ks[3], (H * hd, D), dt, scale=1.0 / np.sqrt(H * hd)),
+    }
+    if cfg.attention_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((KV * hd,), dt)
+        p["bv"] = jnp.zeros((KV * hd,), dt)
+    return p
+
+
+def gqa_apply(params, x, positions, *, cfg, cache=None, cache_pos=None,
+              kv_quant: Optional[KVQuantSpec] = None, mrope_positions=None,
+              chunked: Optional[bool] = None):
+    """Returns (y, new_cache). ``positions``: (B, S) absolute positions.
+
+    Train/prefill: cache=None -> attends within the sequence (causal per cfg),
+    optionally returning a fresh cache when ``cache`` is a preallocated dict.
+    Decode: cache given and S is the new-token count (usually 1).
+    """
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    cd = x.dtype
+
+    q = x @ params["wq"].astype(cd)
+    k = x @ params["wk"].astype(cd)
+    v = x @ params["wv"].astype(cd)
+    if cfg.attention_bias:
+        q = q + params["bq"].astype(cd)
+        k = k + params["bk"].astype(cd)
+        v = v + params["bv"].astype(cd)
+    q = constrain(_split_heads(q, H, hd), "dp", None, "tp", None)
+    k = constrain(_split_heads(k, KV, hd), "dp", None, "tp", None)
+    v = constrain(_split_heads(v, KV, hd), "dp", None, "tp", None)
+
+    if cfg.mrope and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.rope_theta)
+        k = apply_mrope(k, mrope_positions, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    use_chunked = (chunked if chunked is not None
+                   else (S * max(S, 1) > cfg.attn_chunk ** 2 or cache is not None))
+
+    if cache is not None:
+        pos = cache_pos
+        new_cache = cache_update(cache, k, v, pos, kv_quant)
+        kv_len = pos + S
+        o = attend_chunked(q, new_cache["k"], new_cache["v"], positions, 0,
+                           causal=cfg.causal, kv_len=kv_len,
+                           chunk=cfg.attn_chunk, kv_quant=kv_quant,
+                           operand_dtype=jnp.bfloat16 if cfg.attn_bf16
+                           else jnp.float32)
+    else:
+        new_cache = None
+        if use_chunked:
+            o = attend_chunked(q, k, v, positions, 0, causal=cfg.causal,
+                               chunk=cfg.attn_chunk,
+                               operand_dtype=jnp.bfloat16 if cfg.attn_bf16
+                               else jnp.float32)
+        else:
+            o = attend_full(q, k, v, positions, jnp.arange(S),
+                            causal=cfg.causal)
+
+    y = o.reshape(B, S, H * hd) @ params["wo"].astype(cd)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3): low-rank latent KV — the cache holds only
+# (kv_lora_rank + rope_dim) per token, and that latent is what we quantize.
+# ---------------------------------------------------------------------------
+def init_mla(key, cfg):
+    ks = jax.random.split(key, 6)
+    D, H = cfg.d_model, cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dt = cfg.param_jnp_dtype
+    return {
+        "wq_a": dense_init(ks[0], (D, qr), dt),
+        "q_norm": init_rmsnorm(qr, dt),
+        "wq_b": dense_init(ks[1], (qr, H * (dn + dr)), dt),
+        "wkv_a": dense_init(ks[2], (D, kvr + dr), dt),
+        "kv_norm": init_rmsnorm(kvr, dt),
+        "wkv_b": dense_init(ks[3], (kvr, H * (dn + dv)), dt),
+        "wo": dense_init(ks[4], (H * dv, D), dt, scale=1.0 / np.sqrt(H * dv)),
+    }
+
+
+def init_mla_cache(batch, max_len, cfg, dtype,
+                   quant: Optional[KVQuantSpec] = None):
+    store = quant.dtype if quant is not None else dtype
+    width = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+    return {"latent": jnp.zeros((batch, max_len, width), store)}
+
+
+def mla_apply(params, x, positions, *, cfg, cache=None, cache_pos=None,
+              kv_quant: Optional[KVQuantSpec] = None, absorbed: bool = False):
+    """Returns (y, new_cache). Latent cache = [c_kv(kvr) ; k_rope(dr)].
+
+    ``absorbed=False`` (baseline) expands the latent to per-head K/V at use.
+    ``absorbed=True`` folds W_uk into the query and W_uv into the output
+    projection so decode attends directly in latent space — the beyond-paper
+    perf option (see EXPERIMENTS.md §Perf).
+    """
+    B, S, D = x.shape
+    H = cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    cd = x.dtype
+    sm_scale = 1.0 / np.sqrt(dn + dr)
+
+    # --- queries ---
+    cq = rmsnorm(params["q_norm"], x @ params["wq_a"].astype(cd), cfg.norm_eps)
+    q = (cq @ params["wq_b"].astype(cd)).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    # --- latent KV ---
+    kv_a = x @ params["wkv_a"].astype(cd)
+    c_kv = rmsnorm(params["kv_norm"], kv_a[..., :kvr], cfg.norm_eps)
+    k_rope = apply_rope(kv_a[..., kvr:][:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    latent = jnp.concatenate([c_kv, k_rope], axis=-1)  # (B, S, kvr+dr)
+
+    if cache is not None:
+        lat_q = _q_store(latent, kv_quant)
+        new_cache = {"latent": jax.lax.dynamic_update_slice_in_dim(
+            cache["latent"], lat_q.astype(cache["latent"].dtype), cache_pos, 1)}
+        lat_all = _q_load(new_cache["latent"], kv_quant, cd)
+        kv_len = cache_pos + S
+        T = lat_all.shape[1]
+    else:
+        new_cache = None
+        lat_all, kv_len, T = latent, None, S
+
+    c_all, kr_all = lat_all[..., :kvr], lat_all[..., kvr:]
+
+    wkv_b = params["wkv_b"].astype(cd).reshape(kvr, H, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]  # (kvr, H, dn), (kvr, H, dv)
+
+    if absorbed:
+        # fold W_uk into q: q_lat = q_nope @ W_uk^T per head -> (B,S,H,kvr)
+        q_lat = jnp.einsum("bshd,khd->bshk", q_nope, w_uk)
+        # scores over latent + rope parts; latent plays the role of K
+        k_lat = c_all  # (B,T,kvr) shared across heads
+        s = (jnp.einsum("bshk,btk->bhst", q_lat.astype(jnp.float32),
+                        k_lat.astype(jnp.float32))
+             + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                          kr_all.astype(jnp.float32))) * sm_scale
+        mask = jnp.ones((B, S, T), bool)
+        if cfg.causal:
+            mask &= jnp.arange(T)[None, None, :] <= positions[:, :, None]
+        if kv_len is not None:
+            mask &= jnp.arange(T)[None, None, :] < kv_len
+        s = jnp.where(mask[:, None, :, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhst,btk->bshk", p, c_all.astype(jnp.float32))
+        o = jnp.einsum("bshk,khd->bshd", o_lat, w_uv.astype(jnp.float32))
+        o = o.astype(cd)
+    else:
+        # expand latent to per-head K/V (baseline; memory-heavier at decode)
+        # pin head sharding at the source: without it GSPMD all-gathers the
+        # (B,T,H,dn+dr) expansion to FULL H around the attention chunk scan
+        # (§Perf deepseek-v3 iteration)
+        k_nope = jnp.einsum("btk,khd->bthd", c_all, w_uk)
+        vv = constrain(jnp.einsum("btk,khd->bthd", c_all, w_uv),
+                       "dp", None, "tp", None)
+        k_full = constrain(jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_all[:, :, None, :], (B, T, H, dr))],
+            axis=-1), "dp", None, "tp", None)
+        q_full = constrain(jnp.concatenate([q_nope, q_rope], axis=-1),
+                           "dp", None, "tp", None)
+        o = attend_chunked(q_full, k_full, vv, positions, 0, causal=cfg.causal,
+                           kv_len=kv_len, chunk=cfg.attn_chunk, scale=sm_scale,
+                           operand_dtype=jnp.bfloat16 if cfg.attn_bf16
+                           else jnp.float32)
+
+    y = o.reshape(B, S, H * dv) @ params["wo"].astype(cd)
+    return y, new_cache

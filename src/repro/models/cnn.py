@@ -1,0 +1,285 @@
+"""Paper-faithful CNNs (LeNet / Convnet / AlexNet-small) with per-layer
+precision boundaries.
+
+Layer grouping follows the paper's Appendix A: a "layer" is the main
+conv/fc stage plus its activation/pool stages, and carries ONE (weight, data)
+format pair — the paper found stages within a layer share tolerance (Fig. 1).
+
+``cnn_forward(params, x, spec, policy)`` applies the paper's §2.1 conversion:
+weights are fake-quantized before use, each layer's output data (and the
+network input) is fake-quantized at the memory boundary. Compute stays fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.fixedpoint import fake_quant
+from ..core.policy import PrecisionPolicy
+from ..core.traffic import LayerTraffic, TrafficModel
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNLayerSpec:
+    name: str
+    kind: str                 # "conv" | "fc"
+    features: int             # out channels / out features
+    kernel: int = 0           # conv kernel size (square)
+    pool: int = 0             # maxpool window/stride after activation (0=off)
+    relu: bool = True
+    padding: str = "VALID"
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNSpec:
+    name: str
+    input_shape: Tuple[int, int, int]     # (H, W, C)
+    num_classes: int
+    layers: Tuple[CNNLayerSpec, ...]
+
+    @property
+    def layer_names(self):
+        return tuple(l.name for l in self.layers)
+
+
+# ---------------------------------------------------------------------------
+# The paper's three CPU-trainable networks (Appendix A structures; AlexNet is
+# width/kernel-scaled to 32x32 synthetic data — see DESIGN.md §2).
+# ---------------------------------------------------------------------------
+LENET = CNNSpec(
+    name="lenet", input_shape=(28, 28, 1), num_classes=10,
+    layers=(
+        CNNLayerSpec("layer1", "conv", 20, kernel=5, pool=2, relu=False),
+        CNNLayerSpec("layer2", "conv", 50, kernel=5, pool=2, relu=False),
+        CNNLayerSpec("layer3", "fc", 500, relu=True),
+        CNNLayerSpec("layer4", "fc", 10, relu=False),
+    ))
+
+CONVNET = CNNSpec(
+    name="convnet", input_shape=(32, 32, 3), num_classes=10,
+    layers=(
+        CNNLayerSpec("layer1", "conv", 32, kernel=5, pool=2, padding="SAME"),
+        CNNLayerSpec("layer2", "conv", 32, kernel=5, pool=2, padding="SAME"),
+        CNNLayerSpec("layer3", "conv", 64, kernel=5, pool=2, padding="SAME"),
+        CNNLayerSpec("layer4", "fc", 64, relu=True),
+        CNNLayerSpec("layer5", "fc", 10, relu=False),
+    ))
+
+ALEXNET_SMALL = CNNSpec(
+    name="alexnet_small", input_shape=(32, 32, 3), num_classes=10,
+    layers=(
+        CNNLayerSpec("layer1", "conv", 48, kernel=3, pool=2, padding="SAME"),
+        CNNLayerSpec("layer2", "conv", 96, kernel=3, pool=2, padding="SAME"),
+        CNNLayerSpec("layer3", "conv", 128, kernel=3, padding="SAME"),
+        CNNLayerSpec("layer4", "conv", 128, kernel=3, padding="SAME"),
+        CNNLayerSpec("layer5", "conv", 96, kernel=3, pool=2, padding="SAME"),
+        CNNLayerSpec("layer6", "fc", 256, relu=True),
+        CNNLayerSpec("layer7", "fc", 256, relu=True),
+        CNNLayerSpec("layer8", "fc", 10, relu=False),
+    ))
+
+SPECS = {"lenet": LENET, "convnet": CONVNET, "alexnet_small": ALEXNET_SMALL}
+
+
+# ---------------------------------------------------------------------------
+# Init / forward
+# ---------------------------------------------------------------------------
+def _shapes_through(spec: CNNSpec):
+    """Activation shape after each layer (H, W, C) or (F,) — drives init and
+    the traffic model."""
+    h, w, c = spec.input_shape
+    shapes = []
+    flat = None
+    for l in spec.layers:
+        if l.kind == "conv":
+            if l.padding == "VALID":
+                h, w = h - l.kernel + 1, w - l.kernel + 1
+            c = l.features
+            if l.pool:
+                h, w = h // l.pool, w // l.pool
+            shapes.append((h, w, c))
+        else:
+            if flat is None:
+                flat = h * w * c
+            shapes.append((l.features,))
+            flat = l.features
+    return tuple(shapes)
+
+
+def init_cnn(key, spec: CNNSpec, dtype=jnp.float32):
+    params = {}
+    h, w, c = spec.input_shape
+    shapes = _shapes_through(spec)
+    in_feat = None
+    for i, l in enumerate(spec.layers):
+        key, k = jax.random.split(key)
+        if l.kind == "conv":
+            fan_in = l.kernel * l.kernel * c
+            wshape = (l.kernel, l.kernel, c, l.features)
+            c = l.features
+        else:
+            if in_feat is None:
+                ph, pw, pc = shapes[i - 1] if i else spec.input_shape
+                in_feat = ph * pw * pc
+            fan_in = in_feat
+            wshape = (in_feat, l.features)
+            in_feat = l.features
+        std = np.sqrt(2.0 / fan_in)
+        params[l.name] = {
+            "w": (jax.random.truncated_normal(k, -2, 2, wshape, jnp.float32)
+                  * std).astype(dtype),
+            "b": jnp.zeros((l.features,), dtype),
+        }
+        if l.kind == "conv" and l.pool:
+            pass
+    return params
+
+
+def _maybe_fq(x, fmt, rounding="nearest"):
+    if fmt is None:
+        return x
+    return fake_quant(x, fmt.int_bits, fmt.frac_bits, rounding=rounding)
+
+
+def cnn_forward(params, x, spec: CNNSpec,
+                policy: Optional[PrecisionPolicy] = None):
+    """x: (B, H, W, C) float32 in [0,1]. Returns logits (B, classes)."""
+    pol = {n: policy[n] for n in spec.layer_names} if policy is not None \
+        else {n: None for n in spec.layer_names}
+
+    # network input is the first layer's input data (paper counts it as data)
+    first = pol[spec.layers[0].name]
+    if first is not None:
+        x = _maybe_fq(x, first.data)
+
+    for l in spec.layers:
+        lp = pol[l.name]
+        w = params[l.name]["w"]
+        b = params[l.name]["b"]
+        if lp is not None:
+            w = _maybe_fq(w, lp.weight)
+        if l.kind == "conv":
+            x = jax.lax.conv_general_dilated(
+                x, w, window_strides=(1, 1), padding=l.padding,
+                dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+        else:
+            if x.ndim > 2:
+                x = x.reshape(x.shape[0], -1)
+            x = x @ w + b
+        if l.relu:
+            x = jax.nn.relu(x)
+        if l.kind == "conv" and l.pool:
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max,
+                (1, l.pool, l.pool, 1), (1, l.pool, l.pool, 1), "VALID")
+        if lp is not None:
+            x = _maybe_fq(x, lp.data)   # the paper's "data" boundary
+    return x
+
+
+@partial(jax.jit, static_argnums=(2,))
+def cnn_loss(params, batch, spec: CNNSpec):
+    logits = cnn_forward(params, batch["image"], spec)
+    labels = batch["label"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - ll)
+
+
+def policy_bit_arrays(spec: CNNSpec, policy: Optional[PrecisionPolicy]):
+    """policy -> ((L,2) weight bits, (L,2) data bits) float32 arrays with a
+    (-1,-1) sentinel for fp32 layers. Formats become TRACED values, so one
+    jitted forward serves every policy (the search runs thousands of
+    evaluations — recompiling per policy is 50x slower)."""
+    L = len(spec.layers)
+    wb = np.full((L, 2), -1.0, np.float32)
+    db = np.full((L, 2), -1.0, np.float32)
+    if policy is not None:
+        for i, lp in enumerate(policy.layers):
+            if lp.weight is not None:
+                wb[i] = (lp.weight.int_bits, lp.weight.frac_bits)
+            if lp.data is not None:
+                db[i] = (lp.data.int_bits, lp.data.frac_bits)
+    return jnp.asarray(wb), jnp.asarray(db)
+
+
+def _maybe_fq_arr(x, bits2):
+    """bits2: (2,) traced (I, F); (-1,-1) sentinel = no quantization."""
+    y = fake_quant(x, jnp.maximum(bits2[0], 1), jnp.maximum(bits2[1], 0))
+    return jnp.where(bits2[0] < 0, x, y.astype(x.dtype))
+
+
+def cnn_forward_bits(params, x, spec: CNNSpec, wbits, dbits):
+    """cnn_forward with traced per-layer bit arrays (see policy_bit_arrays)."""
+    x = _maybe_fq_arr(x, dbits[0])
+    for li, l in enumerate(spec.layers):
+        w = _maybe_fq_arr(params[l.name]["w"], wbits[li])
+        b = params[l.name]["b"]
+        if l.kind == "conv":
+            x = jax.lax.conv_general_dilated(
+                x, w, window_strides=(1, 1), padding=l.padding,
+                dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+        else:
+            if x.ndim > 2:
+                x = x.reshape(x.shape[0], -1)
+            x = x @ w + b
+        if l.relu:
+            x = jax.nn.relu(x)
+        if l.kind == "conv" and l.pool:
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max,
+                (1, l.pool, l.pool, 1), (1, l.pool, l.pool, 1), "VALID")
+        x = _maybe_fq_arr(x, dbits[li])
+    return x
+
+
+@partial(jax.jit, static_argnums=(3,))
+def _acc_kernel(params, images, labels, spec, wbits, dbits):
+    logits = cnn_forward_bits(params, images, spec, wbits, dbits)
+    return jnp.sum(jnp.argmax(logits, -1) == labels)
+
+
+def cnn_accuracy(params, images, labels, spec: CNNSpec,
+                 policy: Optional[PrecisionPolicy] = None,
+                 batch: int = 1024) -> float:
+    """Top-1 accuracy under a policy (the search's eval_fn). One compile
+    per spec/shape; policies ride in as traced bit arrays."""
+    n = images.shape[0]
+    wbits, dbits = policy_bit_arrays(spec, policy)
+    correct = 0
+    for i in range(0, n, batch):
+        correct += int(_acc_kernel(params, images[i:i + batch],
+                                   labels[i:i + batch], spec, wbits, dbits))
+    return correct / n
+
+
+# ---------------------------------------------------------------------------
+# Traffic model (paper §2.4): each datum touched once per layer.
+# ---------------------------------------------------------------------------
+def cnn_traffic_model(spec: CNNSpec) -> TrafficModel:
+    shapes = _shapes_through(spec)
+    h, w, c = spec.input_shape
+    in_elems = h * w * c
+    layers = []
+    prev_elems = in_elems
+    in_feat = None
+    ch = c
+    for i, l in enumerate(spec.layers):
+        if l.kind == "conv":
+            wparams = l.kernel * l.kernel * ch * l.features + l.features
+            ch = l.features
+        else:
+            if in_feat is None:
+                ph, pw, pc = shapes[i - 1] if i else spec.input_shape
+                in_feat = ph * pw * pc
+            wparams = in_feat * l.features + l.features
+            in_feat = l.features
+        out_elems = int(np.prod(shapes[i]))
+        layers.append(LayerTraffic(l.name, wparams, prev_elems, out_elems))
+        prev_elems = out_elems
+    return TrafficModel(tuple(layers))

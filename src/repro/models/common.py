@@ -1,0 +1,190 @@
+"""Shared model components: norms, RoPE (incl. M-RoPE), embeddings, init.
+
+Functional style throughout: ``init_*`` builds a params pytree (no leading
+layer dim — stacking over layers happens in ``transformer.py`` via vmap),
+``*_apply`` is pure. Compute dtype and param dtype are decoupled so the same
+code serves fp32 unit tests and bf16 pod-scale dry-runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (what most LLM stacks use)."""
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps=1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings. ``positions`` is (B, S) int32; M-RoPE takes
+# (B, S, 3) — temporal/height/width ids (Qwen2-VL) — and splits the head dim
+# into three bands rotated by each id stream.
+# ---------------------------------------------------------------------------
+def rope_angles(head_dim: int, theta: float):
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    return jnp.asarray(inv)  # (half,)
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    inv = rope_angles(x.shape[-1], theta)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(dt)
+
+
+MROPE_SECTIONS = (0.25, 0.375, 0.375)  # temporal / height / width band split
+
+
+def apply_mrope(x, positions3, theta: float = 1e6):
+    """Qwen2-VL multimodal RoPE. positions3: (B, S, 3)."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    inv = rope_angles(x.shape[-1], theta)  # (half,)
+    # band boundaries over the half-dim frequency axis
+    b0 = int(half * MROPE_SECTIONS[0])
+    b1 = b0 + int(half * MROPE_SECTIONS[1])
+    sel = jnp.zeros((half,), jnp.int32).at[b0:b1].set(1).at[b1:].set(2)
+    pos = jnp.take(positions3.astype(jnp.float32), sel, axis=-1)  # (B, S, half)
+    ang = pos * inv
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head. ``onehot`` mode expresses lookup as a matmul so SPMD
+# partitioning over the vocab axis produces a clean psum instead of a gather
+# of a sharded table (see DESIGN.md §4 / parallel.sharding).
+# ---------------------------------------------------------------------------
+def init_embedding(key, vocab, d_model, dtype):
+    return {"table": embed_init(key, (vocab, d_model), dtype)}
+
+
+def embed_tokens(params, ids, *, onehot: bool = False, compute_dtype=None):
+    table = params["table"]
+    if compute_dtype is not None:
+        table = table.astype(compute_dtype)
+    if onehot:
+        oh = jax.nn.one_hot(ids, table.shape[0], dtype=table.dtype)
+        return oh @ table
+    return jnp.take(table, ids, axis=0)
+
+
+def init_lm_head(key, d_model, vocab, dtype):
+    return {"kernel": dense_init(key, (d_model, vocab), dtype)}
+
+
+def lm_head(params, x, *, tied_table=None):
+    if tied_table is not None:
+        return x @ tied_table.T.astype(x.dtype)
+    return x @ params["kernel"].astype(x.dtype)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token cross-entropy in fp32; labels < 0 are ignored."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    nll = lse - ll
+    valid = (labels >= 0)
+    if mask is not None:
+        valid = valid & (mask > 0)
+    valid = valid.astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+def chunked_ce_loss(hidden, head_w, labels, *, chunk: int, mask=None):
+    """Fused head-matmul + CE, scanned over seq chunks with rematerialized
+    logits — the (B, S, V) fp32 logits tensor never exists; peak transient is
+    (B, chunk, V). hidden: (B, S, D); head_w: (D, V); labels: (B, S)."""
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        pad = chunk - S % chunk
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-100)
+        if mask is not None:
+            mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        S += pad
+    nc = S // chunk
+    h_c = jnp.moveaxis(hidden.reshape(B, nc, chunk, D), 1, 0)
+    l_c = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+    m_c = (jnp.moveaxis(mask.reshape(B, nc, chunk), 1, 0)
+           if mask is not None else jnp.zeros((nc, 0)))
+
+    @jax.checkpoint
+    def body(carry, inp):
+        nll_sum, n_valid = carry
+        h, lab = inp[0], inp[1]
+        logits = (h @ head_w.astype(h.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, jnp.maximum(lab, 0)[..., None],
+                                 axis=-1)[..., 0]
+        valid = (lab >= 0)
+        if mask is not None:
+            valid = valid & (inp[2] > 0)
+        v = valid.astype(jnp.float32)
+        return (nll_sum + jnp.sum((lse - ll) * v), n_valid + jnp.sum(v)), None
+
+    xs = (h_c, l_c, m_c) if mask is not None else (h_c, l_c)
+    (nll, nv), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), xs)
+    return nll / jnp.maximum(nv, 1.0)

@@ -1,0 +1,48 @@
+"""Feed-forward layers: SwiGLU (LLaMA-family) and GELU (encoder family)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.hints import constrain
+from .common import dense_init
+
+
+def init_swiglu(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype,
+                             scale=1.0 / np.sqrt(d_ff)),
+    }
+
+
+def swiglu_apply(params, x):
+    cd = x.dtype
+    hint = ("dp",) + (None,) * (x.ndim - 2) + ("tp",)
+    g = constrain(x @ params["w_gate"].astype(cd), *hint)
+    u = x @ params["w_up"].astype(cd)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(cd) * u
+    return h @ params["w_down"].astype(cd)
+
+
+def init_gelu_mlp(key, d_model, d_ff, dtype):
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "w_in": dense_init(k1, (d_model, d_ff), dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": dense_init(k2, (d_ff, d_model), dtype,
+                            scale=1.0 / np.sqrt(d_ff)),
+        "b_out": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp_apply(params, x):
+    cd = x.dtype
+    hint = ("dp",) + (None,) * (x.ndim - 2) + ("tp",)
+    h = constrain(x @ params["w_in"].astype(cd) + params["b_in"].astype(cd),
+                  *hint)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(cd)
+    return h @ params["w_out"].astype(cd) + params["b_out"].astype(cd)

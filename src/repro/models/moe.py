@@ -1,0 +1,237 @@
+"""Mixture-of-Experts FFN with top-k routing.
+
+Two dispatch modes:
+
+* ``eval_all`` — every expert runs on every token, outputs combined by router
+  weight. Exact (no capacity drops); used for reduced-config smoke tests and
+  as the oracle for the dispatch path.
+* ``scatter`` — capacity-bounded slot dispatch: for each of the k routing
+  slots, tokens are scattered into an (E, C, D) buffer (position-in-expert via
+  a one-hot cumsum, overflow dropped), a grouped SwiGLU runs per expert, and
+  results gather back. Expert-parallel sharding puts E on the ``model`` mesh
+  axis; XLA turns the scatter/gather resharding into the EP all-to-all
+  (inspected in the dry-run HLO — see EXPERIMENTS.md §Roofline).
+
+Router: softmax over top-k logits (Mixtral/Jamba style); optional
+normalized-sigmoid scoring (DeepSeek-V3 style) via ``cfg.moe_sigmoid_router``.
+Aux: Switch-style load-balance loss + router z-loss, returned for the trainer.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.hints import active_plan, constrain
+from .common import dense_init
+from .mlp import init_swiglu, swiglu_apply
+
+
+def init_moe(key, cfg):
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    dt = cfg.param_jnp_dtype
+    p = {
+        "router": dense_init(ks[0], (D, E), dt, scale=0.02),
+        # nested under "experts/" so sharding rules can EP-shard the E dim
+        # without colliding with dense-MLP w_gate/w_up/w_down paths
+        "experts": {
+            "w_gate": dense_init(ks[1], (E, D, F), dt),
+            "w_up": dense_init(ks[2], (E, D, F), dt),
+            "w_down": dense_init(ks[3], (E, F, D), dt,
+                                 scale=1.0 / np.sqrt(F)),
+        },
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_swiglu(ks[4], D,
+                                  F * cfg.num_shared_experts, dt)
+    return p
+
+
+def _route(params, x, cfg):
+    """x: (..., D) -> (weights (..., k), idx (..., k), aux dict).
+
+    Stays at the input rank: reshaping (B, S, D) -> (B*S, D) would merge a
+    dp-sharded dim with a tp-sharded dim and force GSPMD to all-gather the
+    sequence dim (§Perf deepseek-v3 iteration)."""
+    logits = (x @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    k = cfg.experts_per_token
+    if cfg.moe_sigmoid_router:
+        scores = jax.nn.sigmoid(logits)
+        top_w, top_i = jax.lax.top_k(scores, k)
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    else:
+        top_l, top_i = jax.lax.top_k(logits, k)
+        top_w = jax.nn.softmax(top_l, axis=-1)
+
+    # Switch load-balance loss: E * sum_e (frac tokens to e) * (mean prob e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    E = cfg.num_experts
+    flat_i = top_i.reshape(-1, k)
+    assign = jax.nn.one_hot(flat_i[:, 0], E, dtype=jnp.float32)
+    lb = E * jnp.sum(assign.mean(0) * probs.reshape(-1, E).mean(0))
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return top_w, top_i, {"moe_lb_loss": lb, "moe_z_loss": z}
+
+
+def _local_dispatch_ffn(experts, x_loc, idx_loc, w_loc, cfg, *,
+                        ep_axes=None):
+    """Capacity-bounded top-k dispatch + expert FFN on LOCAL tokens.
+
+    x_loc: (T, D) tokens local to this device (or the whole batch when no
+    mesh is active); idx_loc/w_loc: (T, k). experts: {w_gate (E,D,F), ...}
+    with the FULL E dim when ep_axes is None, or this device's E/ep slice
+    inside shard_map (ep_axes = mesh axis name for the all-to-all).
+
+    Position-in-expert = one-hot cumsum over LOCAL assignments only — the
+    global-cumsum-over-sharded-tokens trap (DESIGN.md §4) never appears.
+    Capacity C = ceil(T*k/E * cf) is per token shard, the production
+    per-device-capacity convention.
+    """
+    T, D = x_loc.shape
+    cd = x_loc.dtype
+    E, k = cfg.num_experts, cfg.experts_per_token
+    A = T * k
+    C = max(1, int(np.ceil(T * k / E * cfg.moe_capacity_factor)))
+
+    e_a = idx_loc.reshape(A)                              # (A,)
+    oh = jax.nn.one_hot(e_a, E, dtype=jnp.int32)          # (A, E)
+    pos = jnp.take_along_axis(jnp.cumsum(oh, axis=0), e_a[:, None],
+                              axis=1)[:, 0] - 1           # (A,)
+    keep = pos < C
+    pos_s = jnp.where(keep, pos, C - 1)
+    x_a = jnp.repeat(x_loc, k, axis=0)                    # (A, D)
+
+    buf = jnp.zeros((E, C, D), cd).at[e_a, pos_s].add(
+        x_a * keep[:, None].astype(cd), mode="drop")
+
+    def _a2a(t, split, concat):
+        """EP all-to-all, optionally with an int8/int16 wire format — the
+        paper's reduced-precision data applied to the dispatch payload
+        (per (expert,slot)-row absmax scale rides alongside, fp32)."""
+        bits = cfg.moe_a2a_bits
+        if not bits:
+            return jax.lax.all_to_all(t, ep_axes, split_axis=split,
+                                      concat_axis=concat, tiled=True)
+        qmax = 2.0 ** (bits - 1) - 1
+        scale = jnp.max(jnp.abs(t), axis=-1, keepdims=True) \
+            .astype(jnp.float32) / qmax
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -qmax, qmax) \
+            .astype(jnp.int8 if bits <= 8 else jnp.int16)
+        q = jax.lax.all_to_all(q, ep_axes, split_axis=split,
+                               concat_axis=concat, tiled=True)
+        scale = jax.lax.all_to_all(scale, ep_axes, split_axis=split,
+                                   concat_axis=concat, tiled=True)
+        return (q.astype(jnp.float32) * scale).astype(t.dtype)
+
+    if ep_axes is not None:
+        # THE MoE all-to-all: expert rows leave for their owner shard;
+        # (E, C, D) -> (E/ep, C*ep, D) on each device.
+        buf = _a2a(buf, 0, 1)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, experts["w_gate"].astype(cd))
+    u = jnp.einsum("ecd,edf->ecf", buf, experts["w_up"].astype(cd))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(cd) * u
+    y = jnp.einsum("ecf,efd->ecd", h, experts["w_down"].astype(cd))
+
+    if ep_axes is not None:
+        y = _a2a(y, 1, 0)                                 # back to (E, C, D)
+
+    y_a = y[e_a, pos_s] * keep[:, None].astype(cd)        # (A, D)
+    out = (y_a.reshape(T, k, D)
+           * w_loc.reshape(T, k)[..., None].astype(cd)).sum(axis=1)
+    return out
+
+
+def _sharded_dispatch(params, x, idx, w, cfg, plan):
+    """shard_map EP dispatch (DESIGN.md §4):
+      * tokens stay on their (dp x tp) shard; position-in-expert is local,
+      * expert weights live E/tp (EP) x F/dp (ZeRO-3); the F-shards are
+        all-gathered over "data" per layer (transient) before compute,
+      * the exchange is an explicit lax.all_to_all over the model axis.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    B, S, D = x.shape
+    dp = plan.batch_axes if B % plan.batch_size_divisor == 0 else None
+    if isinstance(dp, tuple) and len(dp) == 1:
+        dp = dp[0]
+    tp = plan.model_axis if S % plan.mesh.shape[plan.model_axis] == 0 else None
+    x_spec = P(dp, tp, None)
+    fsdp = plan.fsdp_axis
+    shard_f = fsdp is not None and cfg.moe_d_ff % plan.mesh.shape[fsdp] == 0
+    f_ax = fsdp if shard_f else None
+    ex_specs = {"w_gate": P(plan.model_axis, None, f_ax),
+                "w_up": P(plan.model_axis, None, f_ax),
+                "w_down": P(plan.model_axis, f_ax, None)}
+
+    def body(ex_loc, x_loc, idx_loc, w_loc):
+        if shard_f:
+            # ZeRO-3 gather of this layer's expert F-shards (freed after use)
+            ex_loc = {
+                "w_gate": jax.lax.all_gather(ex_loc["w_gate"], fsdp, axis=2,
+                                             tiled=True),
+                "w_up": jax.lax.all_gather(ex_loc["w_up"], fsdp, axis=2,
+                                           tiled=True),
+                "w_down": jax.lax.all_gather(ex_loc["w_down"], fsdp, axis=1,
+                                             tiled=True),
+            }
+        Bl, Sl, _ = x_loc.shape
+        out = _local_dispatch_ffn(ex_loc, x_loc.reshape(Bl * Sl, D),
+                                  idx_loc.reshape(Bl * Sl, -1),
+                                  w_loc.reshape(Bl * Sl, -1), cfg,
+                                  ep_axes=plan.model_axis)
+        return out.reshape(Bl, Sl, D)
+
+    fn = shard_map(body, mesh=plan.mesh,
+                   in_specs=(ex_specs, x_spec, x_spec, x_spec),
+                   out_specs=x_spec,
+                   check_rep=False)
+    return fn(params["experts"], x, idx, w)
+
+
+def moe_apply(params, x, *, cfg, mode: Optional[str] = None):
+    """x: (B, S, D). Returns (y, aux). All paths keep the (B, S, ...) rank —
+    see _route's sharding note."""
+    B, S, D = x.shape
+    cd = x.dtype
+    E, k = cfg.num_experts, cfg.experts_per_token
+    mode = mode or cfg.moe_mode
+    T = B * S
+    w, idx, aux = _route(params, x, cfg)      # (B, S, k)
+
+    if mode == "eval_all":
+        ex = params["experts"]
+        x2 = x.reshape(T, D)
+        w2, idx2 = w.reshape(T, k), idx.reshape(T, k)
+        g = jnp.einsum("td,edf->etf", x2, ex["w_gate"].astype(cd))
+        u = jnp.einsum("td,edf->etf", x2, ex["w_up"].astype(cd))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(cd) * u
+        y_all = jnp.einsum("etf,efd->etd", h, ex["w_down"].astype(cd))
+        # combine top-k
+        out = jnp.zeros((T, D), cd)
+        for j in range(k):
+            yj = jnp.take_along_axis(
+                y_all, idx2[:, j][None, :, None], axis=0)[0]
+            out = out + w2[:, j, None].astype(cd) * yj
+        out = out.reshape(B, S, D)
+    elif mode == "scatter":
+        plan = active_plan()
+        E_ok = (plan is not None and plan.model_axis is not None
+                and E % plan.mesh.shape[plan.model_axis] == 0)
+        if E_ok:
+            out = _sharded_dispatch(params, x, idx, w, cfg, plan)
+        else:
+            out = _local_dispatch_ffn(params["experts"], x.reshape(T, D),
+                                      idx.reshape(T, k), w.reshape(T, k),
+                                      cfg).reshape(B, S, D)
+    else:
+        raise ValueError(f"unknown moe mode {mode!r}")
+
+    if cfg.num_shared_experts:
+        out = out + swiglu_apply(params["shared"], x)
+    return out, aux

@@ -1,0 +1,439 @@
+"""Model assembly: blocks, segmented scan-over-layers, train/serve steps.
+
+Layers are grouped into **segments** of identical structure (e.g. DeepSeek-V3:
+3 dense layers then 58 MoE layers; Jamba: 4 periods of the 8-layer
+mamba/attn/MoE pattern). Each segment is a single ``lax.scan`` over stacked
+parameters, so an 80-layer model compiles one block body — essential for the
+1-CPU-core 512-fake-device dry-run, and it is also how per-layer precision
+stays free: the per-layer Q(I,F) scale/bound vectors are just more scanned
+operands (DESIGN.md §3).
+
+Per-layer quantization hooks (all optional, driven by ``ModelQuant``):
+  * weights: fake-quant of >=2-D block params before use (paper "weights"),
+  * residual stream: fake-quant of each block's output (paper "data"),
+  * KV/SSM state: integer-grid storage via KVQuantSpec / state_quant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.fixedpoint import fake_quant
+from ..parallel.hints import constrain
+from .attention import (KVQuantSpec, gqa_apply, init_gqa, init_kv_cache,
+                        init_mla, init_mla_cache, mla_apply)
+from .common import (chunked_ce_loss, cross_entropy, dense_init, embed_tokens,
+                     init_embedding, init_lm_head, init_rmsnorm, lm_head,
+                     rmsnorm)
+from .mlp import gelu_mlp_apply, init_gelu_mlp, init_swiglu, swiglu_apply
+from .moe import init_moe, moe_apply
+from .ssm import (init_mamba, init_mamba_state, init_mlstm, init_mlstm_state,
+                  init_slstm, init_slstm_state, mamba_apply, mlstm_apply,
+                  slstm_apply)
+
+
+# ---------------------------------------------------------------------------
+# Quantization plumbing
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelQuant:
+    """Stacked per-layer Q(I,F) parameters; (L,) float32 arrays (or None).
+
+    Built from a PrecisionPolicy by ``repro.quant.apply.build_model_quant``.
+    """
+
+    w_int: Optional[jnp.ndarray] = None
+    w_frac: Optional[jnp.ndarray] = None
+    a_int: Optional[jnp.ndarray] = None
+    a_frac: Optional[jnp.ndarray] = None
+    kv_int: Optional[jnp.ndarray] = None
+    kv_frac: Optional[jnp.ndarray] = None
+    kv_container: str = "int8"
+
+    def layer_slice(self, sl):
+        """Slice all stacked arrays with ``sl`` (layer indices)."""
+        f = lambda a: None if a is None else a[sl]
+        return ModelQuant(f(self.w_int), f(self.w_frac), f(self.a_int),
+                          f(self.a_frac), f(self.kv_int), f(self.kv_frac),
+                          self.kv_container)
+
+
+def _mq_flatten(mq):
+    return ((mq.w_int, mq.w_frac, mq.a_int, mq.a_frac, mq.kv_int,
+             mq.kv_frac), mq.kv_container)
+
+
+def _mq_unflatten(aux, children):
+    return ModelQuant(*children, kv_container=aux)
+
+
+jax.tree_util.register_pytree_node(ModelQuant, _mq_flatten, _mq_unflatten)
+
+
+def _quant_weights(params, w_int, w_frac):
+    """Fake-quant all >=2-D float leaves (the paper's weight quantization;
+    1-D leaves — biases, norm scales, SSM log-decays — stay full precision)."""
+    if w_int is None:
+        return params
+
+    def q(leaf):
+        if (hasattr(leaf, "ndim") and leaf.ndim >= 2
+                and jnp.issubdtype(leaf.dtype, jnp.floating)):
+            return fake_quant(leaf, w_int, w_frac)
+        return leaf
+
+    return jax.tree_util.tree_map(q, params)
+
+
+# ---------------------------------------------------------------------------
+# Segment structure
+# ---------------------------------------------------------------------------
+def layer_signatures(cfg) -> Tuple[Tuple[str, str], ...]:
+    """Per-layer (kind, ffn) with ffn in {mlp, moe, none}."""
+    sigs = []
+    kinds = cfg.layer_kinds
+    for i in range(cfg.num_layers):
+        kind = kinds[i]
+        if kind in ("mlstm", "slstm"):
+            ffn = "none"
+        elif cfg.is_moe_layer(i):
+            ffn = "moe"
+        else:
+            ffn = "mlp"
+        sigs.append((kind, ffn))
+    return tuple(sigs)
+
+
+def layer_segments(cfg):
+    """Split layers into (pattern, periods, start_idx) segments where
+    ``pattern`` repeats exactly ``periods`` times."""
+    sigs = layer_signatures(cfg)
+    bounds = [0]
+    if 0 < cfg.first_k_dense < cfg.num_layers:
+        bounds.append(cfg.first_k_dense)
+    bounds.append(cfg.num_layers)
+    segments = []
+    for b0, b1 in zip(bounds[:-1], bounds[1:]):
+        seg = sigs[b0:b1]
+        n = len(seg)
+        period = n
+        for p in range(1, n + 1):
+            if n % p == 0 and all(seg[i] == seg[i % p] for i in range(n)):
+                period = p
+                break
+        segments.append((tuple(seg[:period]), n // period, b0))
+    return segments
+
+
+# ---------------------------------------------------------------------------
+# Single block (pre-norm residual): x += mixer(norm(x)); x += ffn(norm(x))
+# ---------------------------------------------------------------------------
+def init_block(key, cfg, sig):
+    kind, ffn = sig
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_jnp_dtype
+    p = {"norm1": init_rmsnorm(cfg.d_model, dt)}
+    if kind == "attn":
+        p["mixer"] = (init_mla(ks[0], cfg) if cfg.attention_type == "mla"
+                      else init_gqa(ks[0], cfg))
+    elif kind == "mamba":
+        p["mixer"] = init_mamba(ks[0], cfg)
+    elif kind == "mlstm":
+        p["mixer"] = init_mlstm(ks[0], cfg)
+    elif kind == "slstm":
+        p["mixer"] = init_slstm(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if ffn != "none":
+        p["norm2"] = init_rmsnorm(cfg.d_model, dt)
+        if ffn == "moe":
+            p["ffn"] = init_moe(ks[1], cfg)
+        elif cfg.family == "encoder":
+            p["ffn"] = init_gelu_mlp(ks[1], cfg.d_model, cfg.d_ff, dt)
+        else:
+            p["ffn"] = init_swiglu(ks[1], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def block_apply(params, x, positions, *, cfg, sig, cache=None, cache_pos=None,
+                quant: Optional[ModelQuant] = None, mrope_positions=None):
+    """Returns (x, new_cache, aux). ``quant`` holds per-THIS-layer scalars."""
+    kind, ffn = sig
+    aux = {}
+    if quant is not None:
+        params = _quant_weights(params, quant.w_int, quant.w_frac)
+        kv_quant = (KVQuantSpec(quant.kv_int, quant.kv_frac, quant.kv_container)
+                    if quant.kv_int is not None else None)
+        state_quant = ((quant.kv_int, quant.kv_frac)
+                       if quant.kv_int is not None else None)
+    else:
+        kv_quant = state_quant = None
+
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if kind == "attn":
+        if cfg.attention_type == "mla":
+            y, new_cache = mla_apply(params["mixer"], h, positions, cfg=cfg,
+                                     cache=cache, cache_pos=cache_pos,
+                                     kv_quant=kv_quant,
+                                     absorbed=cfg.mla_absorbed)
+        else:
+            y, new_cache = gqa_apply(params["mixer"], h, positions, cfg=cfg,
+                                     cache=cache, cache_pos=cache_pos,
+                                     kv_quant=kv_quant,
+                                     mrope_positions=mrope_positions)
+    elif kind == "mamba":
+        y, new_cache = mamba_apply(params["mixer"], h, cfg=cfg, state=cache,
+                                   state_quant=state_quant)
+    elif kind == "mlstm":
+        y, new_cache = mlstm_apply(params["mixer"], h, cfg=cfg, state=cache,
+                                   state_quant=state_quant)
+    elif kind == "slstm":
+        y, new_cache = slstm_apply(params["mixer"], h, cfg=cfg, state=cache,
+                                   state_quant=state_quant)
+    else:
+        raise ValueError(kind)
+    x = x + y
+
+    if ffn != "none":
+        h = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            y, aux = moe_apply(params["ffn"], h, cfg=cfg)
+        elif cfg.family == "encoder":
+            y = gelu_mlp_apply(params["ffn"], h)
+        else:
+            y = swiglu_apply(params["ffn"], h)
+        x = x + y
+
+    if quant is not None and quant.a_int is not None:
+        x = fake_quant(x, quant.a_int, quant.a_frac)  # paper's "data" bits
+    # SP: the residual carried between blocks (== the remat-saved tensor) is
+    # sequence-sharded over "model"; compute inside the block re-gathers.
+    # Cuts saved-activation HBM by the TP degree (16x on the prod mesh).
+    x = constrain(x, "dp", "tp", None)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (stacked per segment/position)
+# ---------------------------------------------------------------------------
+def init_block_cache(cfg, sig, batch, max_len, dtype, kv_quant=None):
+    kind, _ = sig
+    if kind == "attn":
+        if cfg.attention_type == "mla":
+            return init_mla_cache(batch, max_len, cfg, dtype, kv_quant)
+        return init_kv_cache(batch, max_len, cfg.num_kv_heads, cfg.head_dim,
+                             dtype, kv_quant)
+    if kind == "mamba":
+        return init_mamba_state(batch, cfg, dtype)
+    if kind == "mlstm":
+        return init_mlstm_state(batch, cfg, dtype)
+    if kind == "slstm":
+        return init_slstm_state(batch, cfg, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg, batch, max_len, quant: Optional[ModelQuant] = None):
+    """Full-model cache: list per segment of tuple per pattern position of
+    stacked (periods, ...) block caches."""
+    kv_quant = None
+    if quant is not None and quant.kv_int is not None:
+        kv_quant = KVQuantSpec(8, 0, quant.kv_container)  # container only
+    caches = []
+    for pattern, periods, start in layer_segments(cfg):
+        seg = []
+        for sig in pattern:
+            one = init_block_cache(cfg, sig, batch, max_len,
+                                   cfg.compute_jnp_dtype, kv_quant)
+            seg.append(jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (periods,) + a.shape), one))
+        caches.append(tuple(seg))
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Model init / forward
+# ---------------------------------------------------------------------------
+def init_model(key, cfg):
+    k_embed, k_head, k_mtp, k_layers = jax.random.split(key, 4)
+    params: Dict[str, Any] = {}
+    params["embed"] = init_embedding(k_embed, cfg.vocab_size, cfg.d_model,
+                                     cfg.param_jnp_dtype)
+    params["final_norm"] = init_rmsnorm(cfg.d_model, cfg.param_jnp_dtype)
+    if not cfg.tie_embeddings:
+        params["head"] = init_lm_head(k_head, cfg.d_model, cfg.vocab_size,
+                                      cfg.param_jnp_dtype)
+    segs = []
+    for si, (pattern, periods, start) in enumerate(layer_segments(cfg)):
+        seg_params = []
+        for pi, sig in enumerate(pattern):
+            keys = jax.random.split(
+                jax.random.fold_in(k_layers, si * 64 + pi), periods)
+            stacked = jax.vmap(lambda k: init_block(k, cfg, sig))(keys)
+            seg_params.append(stacked)
+        segs.append(tuple(seg_params))
+    params["segments"] = segs
+    if cfg.mtp_depth > 0:
+        params["mtp"] = {
+            "proj": dense_init(k_mtp, (2 * cfg.d_model, cfg.d_model),
+                               cfg.param_jnp_dtype),
+            "block": init_block(jax.random.fold_in(k_mtp, 1), cfg,
+                                ("attn", "mlp")),
+            "norm": init_rmsnorm(cfg.d_model, cfg.param_jnp_dtype),
+        }
+    return params
+
+
+def _segment_scan(seg_params, x, positions, *, cfg, pattern, start, periods,
+                  caches=None, cache_pos=None, quant=None,
+                  mrope_positions=None):
+    """Scan one segment. Returns (x, new_caches, aux_sums)."""
+    npos = len(pattern)
+    layer_idx = start + jnp.arange(periods * npos).reshape(periods, npos)
+    quant_x = (quant.layer_slice(layer_idx) if quant is not None else None)
+
+    def body(carry, xs):
+        x = carry
+        seg_p, cache_p, q_p = xs
+        new_caches, auxes = [], []
+        for pi, sig in enumerate(pattern):
+            q_i = (q_p.layer_slice(pi) if q_p is not None else None)
+            c_i = cache_p[pi] if cache_p is not None else None
+            x, nc, aux = block_apply(
+                seg_p[pi], x, positions, cfg=cfg, sig=sig, cache=c_i,
+                cache_pos=cache_pos, quant=q_i,
+                mrope_positions=mrope_positions)
+            new_caches.append(nc)
+            auxes.append(aux.get("moe_lb_loss", jnp.zeros((), jnp.float32)))
+        return x, (tuple(new_caches), jnp.stack(auxes).sum())
+
+    body_fn = body
+    if cfg.remat != "none":
+        body_fn = jax.checkpoint(body,
+                                 policy=jax.checkpoint_policies.nothing_saveable
+                                 if cfg.remat == "full" else None)
+
+    xs = (tuple(seg_params), caches, quant_x)
+    x, (new_caches, aux_per) = jax.lax.scan(body_fn, x, xs)
+    return x, new_caches, aux_per.sum()
+
+
+def forward_hidden(params, batch, cfg, *, quant: Optional[ModelQuant] = None,
+                   caches=None, cache_pos=None):
+    """Backbone only: returns (hidden_after_final_norm, aux); aux carries
+    "caches" when caches were threaded.
+
+    batch: {"tokens": (B,S)} or {"embeds": (B,S,D)} (stub frontends), plus
+    optional "positions" (B,S), "mrope_positions" (B,S,3).
+    """
+    cd = cfg.compute_jnp_dtype
+    if "embeds" in batch:
+        x = batch["embeds"].astype(cd)
+    else:
+        x = embed_tokens(params["embed"], batch["tokens"],
+                         onehot=cfg.embedding_onehot, compute_dtype=cd)
+    B, S = x.shape[0], x.shape[1]
+    if "positions" in batch:
+        positions = batch["positions"]
+    else:
+        base = cache_pos if cache_pos is not None else 0
+        positions = jnp.broadcast_to(base + jnp.arange(S)[None, :], (B, S))
+    mrope_positions = batch.get("mrope_positions")
+
+    if quant is not None and quant.a_int is not None:
+        x = fake_quant(x, quant.a_int[0], quant.a_frac[0])  # embed output
+    x = constrain(x, "dp", None, None)   # batch over ("pod","data")
+
+    new_caches, moe_aux = [], jnp.zeros((), jnp.float32)
+    for si, (pattern, periods, start) in enumerate(layer_segments(cfg)):
+        seg_cache = caches[si] if caches is not None else None
+        x, nc, aux = _segment_scan(
+            params["segments"][si], x, positions, cfg=cfg, pattern=pattern,
+            start=start, periods=periods, caches=seg_cache,
+            cache_pos=cache_pos, quant=quant, mrope_positions=mrope_positions)
+        new_caches.append(nc)
+        moe_aux = moe_aux + aux
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, {"moe_lb_loss": moe_aux,
+               "caches": (new_caches if caches is not None else None)}
+
+
+def forward(params, batch, cfg, *, quant: Optional[ModelQuant] = None,
+            caches=None, cache_pos=None):
+    """Returns (hidden, logits, new_caches, aux)."""
+    x, aux = forward_hidden(params, batch, cfg, quant=quant, caches=caches,
+                            cache_pos=cache_pos)
+    tied = params["embed"]["table"] if cfg.tie_embeddings else None
+    logits = lm_head(params.get("head"), x, tied_table=tied)
+    return x, logits, aux.pop("caches"), aux
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+def _head_weight(params, cfg):
+    return (params["embed"]["table"].T if cfg.tie_embeddings
+            else params["head"]["kernel"])
+
+
+def train_loss(params, batch, cfg, *, quant=None, lb_coeff=0.01):
+    if cfg.loss_chunk > 0:
+        # fused head+CE over seq chunks: the (B,S,V) logits never materialize
+        hidden, aux = forward_hidden(params, batch, cfg, quant=quant)
+        loss = chunked_ce_loss(hidden, _head_weight(params, cfg),
+                               batch["labels"], chunk=cfg.loss_chunk,
+                               mask=batch.get("mask"))
+    else:
+        hidden, logits, _, aux = forward(params, batch, cfg, quant=quant)
+        loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    metrics = {"ce_loss": loss, "moe_lb_loss": aux["moe_lb_loss"]}
+    if cfg.num_experts:
+        loss = loss + lb_coeff * aux["moe_lb_loss"]
+    if cfg.mtp_depth > 0:
+        mtp = params["mtp"]
+        cd = cfg.compute_jnp_dtype
+        nxt = embed_tokens(params["embed"], batch["tokens"][:, 1:],
+                           onehot=cfg.embedding_onehot, compute_dtype=cd)
+        h = jnp.concatenate([hidden[:, :-1], nxt], axis=-1) @ \
+            mtp["proj"].astype(cd)
+        pos = jnp.broadcast_to(jnp.arange(h.shape[1])[None, :], h.shape[:2])
+        h, _, _ = block_apply(mtp["block"], h, pos, cfg=cfg,
+                              sig=("attn", "mlp"))
+        h = rmsnorm(mtp["norm"], h, cfg.norm_eps)
+        if cfg.loss_chunk > 0:
+            mtp_loss = chunked_ce_loss(h, _head_weight(params, cfg),
+                                       batch["labels"][:, 1:],
+                                       chunk=cfg.loss_chunk)
+        else:
+            tied = params["embed"]["table"] if cfg.tie_embeddings else None
+            mtp_logits = lm_head(params.get("head"), h, tied_table=tied)
+            mtp_loss = cross_entropy(mtp_logits, batch["labels"][:, 1:])
+        metrics["mtp_loss"] = mtp_loss
+        loss = loss + 0.3 * mtp_loss
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def prefill(params, batch, cfg, *, quant=None, max_len):
+    """Run the prompt through the model, building caches. Returns
+    (logits_last, caches, next_pos)."""
+    B, S = (batch["tokens"].shape if "tokens" in batch
+            else batch["embeds"].shape[:2])
+    caches = init_cache(cfg, B, max_len, quant)
+    _, logits, caches, _ = forward(params, batch, cfg, quant=quant,
+                                   caches=caches, cache_pos=0)
+    return logits[:, -1], caches, S
+
+
+def decode_step(params, tokens, pos, caches, cfg, *, quant=None):
+    """One decode step. tokens: (B,) int32; pos: scalar int32 current length.
+    Returns (logits (B,V), new_caches)."""
+    batch = {"tokens": tokens[:, None]}
+    _, logits, caches, _ = forward(params, batch, cfg, quant=quant,
+                                   caches=caches, cache_pos=pos)
+    return logits[:, 0], caches

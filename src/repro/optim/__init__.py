@@ -1,0 +1,9 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update
+from .schedule import constant_lr, cosine_warmup, linear_warmup
+from .compress import (CompressionConfig, error_feedback_init,
+                       quantized_allreduce, compress_gradients)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update",
+           "constant_lr", "cosine_warmup", "linear_warmup",
+           "CompressionConfig", "error_feedback_init",
+           "quantized_allreduce", "compress_gradients"]

@@ -1,0 +1,129 @@
+"""AdamW with optionally int8-quantized moment state ("bounded memory" for
+the optimizer, the paper's idea applied to training state).
+
+Moment quantization (beyond-paper, motivated by DESIGN.md §3 table):
+  * first moment m: signed int8 grid, per-row absmax scale,
+  * second moment v: non-negative; stored as int8 of sqrt(v) (halves the
+    dynamic range the grid must cover), per-row absmax scale.
+Scales live on the last-but-one axes (one scale per row of the last dim);
+1-D leaves get a single per-tensor scale. All updates compute in fp32.
+
+With ``quantize_moments=False`` this is a plain fp32 AdamW — the default for
+accuracy-sensitive runs; the quantized variant trades a bounded (~1e-3
+relative) moment error for 4x optimizer-state footprint.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    quantize_moments: bool = False
+
+
+# ---------------------------------------------------------------------------
+# int8 moment container
+# ---------------------------------------------------------------------------
+def _q8_encode(x):
+    """fp32 -> (int8 q, fp32 scale). Per-row absmax over the last dim."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _q8_decode(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def _encode_moment(x, signed_sqrt: bool):
+    if signed_sqrt:
+        x = jnp.sqrt(jnp.maximum(x, 0.0))
+    return _q8_encode(x)
+
+
+def _decode_moment(q, scale, signed_sqrt: bool):
+    x = _q8_decode(q, scale)
+    if signed_sqrt:
+        x = x * x
+    return x
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    def zeros_like_f32(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
+    if not cfg.quantize_moments:
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree_util.tree_map(zeros_like_f32, params),
+            "v": jax.tree_util.tree_map(zeros_like_f32, params),
+        }
+
+    def zq(p):
+        q, s = _q8_encode(jnp.zeros(p.shape, jnp.float32))
+        return {"q": q, "scale": s}
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree_util.tree_map(zq, params),
+        "v": jax.tree_util.tree_map(zq, params),
+    }
+
+
+def _global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(params, grads, state, lr, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m_c, v_c):
+        g = g.astype(jnp.float32) * clip
+        if cfg.quantize_moments:
+            m = _decode_moment(m_c["q"], m_c["scale"], False)
+            v = _decode_moment(v_c["q"], v_c["scale"], True)
+        else:
+            m, v = m_c, v_c
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        wd = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        newp = (p.astype(jnp.float32) - lr * (delta + wd)).astype(p.dtype)
+        if cfg.quantize_moments:
+            mq, ms = _encode_moment(m, False)
+            vq, vs = _encode_moment(v, True)
+            return newp, {"q": mq, "scale": ms}, {"q": vq, "scale": vs}
+        return newp, m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    return new_params, new_state, {"grad_norm": gnorm, "clip": clip}

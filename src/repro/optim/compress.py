@@ -1,0 +1,131 @@
+"""Gradient compression: int8 fixed-point ring all-reduce + error feedback.
+
+The paper cites Seide et al. (2014) 1-bit SGD as the communication-side
+motivation for reduced precision; this module is that idea built on JAX
+collectives so the wire dtype is REALLY int8 (visible in the lowered HLO and
+priced by the roofline's collective term):
+
+* ``quantized_allreduce(x, axis_name)`` — inside ``shard_map``: a
+  reduce-scatter ring over ``lax.ppermute`` whose hops carry int8 payloads
+  (fp32 accumulation, re-quantized per hop), then an int8 all-gather ring.
+  N-1 + N-1 hops of (elems/N) int8 — 4x less ICI traffic than an fp32 ring.
+* error feedback: the quantization residual of each step is carried in the
+  train state and added back before the next compression (bounds the bias;
+  standard EF-SGD result).
+
+``compress_gradients`` is the drop-in used by the explicit-DP trainer; the
+pjit trainer keeps XLA's native all-reduce (see DESIGN.md §4: compression is
+an opt-in feature flag, ``--grad-compress``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    bits: int = 8
+    error_feedback: bool = True
+
+
+def _q_encode(x, bits: int):
+    """Symmetric per-tensor absmax fixed-point; returns (int8/int16, scale)."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(absmax, 1e-12) / qmax
+    dtype = jnp.int8 if bits <= 8 else jnp.int16
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(dtype)
+    return q, scale
+
+
+def _q_decode(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def quantized_allreduce(x, axis_name: str, *, bits: int = 8,
+                        mean: bool = True):
+    """Ring all-reduce with int-quantized hops. Call inside shard_map.
+
+    x: identically-shaped per-device fp32 array (leading dim divisible by the
+    axis size). Returns the (approximately) all-reduced array.
+    """
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    if n == 1:
+        return x
+    orig_shape = x.shape
+    pad = (-x.size) % n
+    xf = jnp.pad(x.reshape(-1).astype(jnp.float32), (0, pad)).reshape(n, -1)
+
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+
+    # --- reduce-scatter ring: after n-1 hops, device d owns the full sum of
+    # chunk (d+1) % n.  Hop payloads are quantized.
+    def rs_body(i, acc):
+        # send chunk (idx - i) mod n, receive into chunk (idx - i - 1) mod n
+        send_c = (idx - i) % n
+        recv_c = (idx - i - 1) % n
+        payload = jnp.take(acc, send_c, axis=0)
+        q, s = _q_encode(payload, bits)
+        q_r = jax.lax.ppermute(q, axis_name, fwd)
+        s_r = jax.lax.ppermute(s, axis_name, fwd)
+        contrib = _q_decode(q_r, s_r)
+        return acc.at[recv_c].add(contrib)
+
+    acc = jax.lax.fori_loop(0, n - 1, rs_body, xf)
+    own = (idx + 1) % n  # fully-reduced chunk this device owns
+
+    # --- all-gather ring: circulate the owned (quantized) chunk.
+    def ag_body(i, st):
+        out, q, s = st
+        q = jax.lax.ppermute(q, axis_name, fwd)
+        s = jax.lax.ppermute(s, axis_name, fwd)
+        src = (own - i - 1) % n   # whose chunk just arrived
+        out = out.at[src].set(_q_decode(q, s))
+        return out, q, s
+
+    q0, s0 = _q_encode(jnp.take(acc, own, axis=0), bits)
+    out0 = jnp.zeros_like(xf).at[own].set(_q_decode(q0, s0))
+    out, _, _ = jax.lax.fori_loop(0, n - 1, ag_body, (out0, q0, s0))
+
+    res = out.reshape(-1)
+    if pad:
+        res = res[:-pad]
+    res = res.reshape(orig_shape)
+    return res / n if mean else res
+
+
+# ---------------------------------------------------------------------------
+# Error feedback (per-leaf residual carried in the train state)
+# ---------------------------------------------------------------------------
+def error_feedback_init(grads_like):
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def compress_gradients(grads, residual, cfg: CompressionConfig):
+    """Simulated-wire compression for the pjit path: quantize (grad +
+    residual), keep the quantization error as the next residual.
+
+    Returns (compressed_grads fp32-valued-on-grid, new_residual). The wire
+    quantization here is the same Q used by ``quantized_allreduce``; in the
+    pjit trainer XLA still all-reduces fp32 values that lie ON the int grid,
+    so accuracy effects are faithful while staying a single-jit program.
+    """
+    def one(g, r):
+        gf = g.astype(jnp.float32) + (r if cfg.error_feedback else 0.0)
+        q, s = _q_encode(gf, cfg.bits)
+        deq = _q_decode(q, s)
+        return deq.astype(g.dtype), (gf - deq)
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = tdef.flatten_up_to(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    comp = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_res = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    return comp, new_res

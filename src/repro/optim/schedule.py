@@ -1,0 +1,27 @@
+"""LR schedules as pure functions of the (traced) step."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def linear_warmup(lr: float, warmup: int):
+    def f(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.float32(step)
+        return jnp.float32(lr) * jnp.minimum(1.0, (s + 1.0) / max(warmup, 1))
+    return f
+
+
+def cosine_warmup(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.float32(step)
+        warm = jnp.minimum(1.0, (s + 1.0) / max(warmup, 1))
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1.0 - final_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr) * warm * cos
+    return f

@@ -1,0 +1,5 @@
+from .sharding import (MeshPlan, auto_batch_sharding, cache_shardings,
+                       param_shardings, plan_for_mesh)
+
+__all__ = ["MeshPlan", "auto_batch_sharding", "cache_shardings",
+           "param_shardings", "plan_for_mesh"]

@@ -1,0 +1,87 @@
+"""Activation-sharding hints: model code declares LOGICAL axes; a launcher
+activates a mesh mapping and the hints become with_sharding_constraint.
+
+With no active mapping (unit tests, single-CPU training) ``constrain`` is an
+exact no-op, so model code stays mesh-free.
+
+Logical names:
+  "dp" -> the batch axes ("pod","data");  "tp"/"ep" -> "model";  None -> skip.
+Every assignment is divisibility-checked like parallel.sharding.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .sharding import MeshPlan
+
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_sharding_hints", default=None)
+
+
+@contextlib.contextmanager
+def activation_hints(plan: MeshPlan):
+    token = _ACTIVE.set(plan)
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(token)
+
+
+def _resolve(plan: MeshPlan, logical: Optional[str], dim: int):
+    if logical is None:
+        return None
+    if logical == "dp":
+        axes = plan.batch_axes
+        size = plan.batch_size_divisor
+        if dim % size == 0:
+            return axes if len(axes) > 1 else axes[0]
+        # fall back to the inner data axis alone
+        for ax in axes[::-1]:
+            if dim % plan.mesh.shape[ax] == 0:
+                return ax
+        return None
+    ax = plan.model_axis if logical in ("tp", "ep") else None
+    if ax is None:
+        return None
+    return ax if dim % plan.mesh.shape[ax] == 0 else None
+
+
+def active_plan() -> Optional[MeshPlan]:
+    """The MeshPlan installed by activation_hints, or None (no mesh)."""
+    return _ACTIVE.get()
+
+
+def model_shards(dim: int) -> int:
+    """How many ways ``dim`` is sharded over the model axis under the active
+    plan (1 when no plan / not divisible). Used by MoE dispatch to pick
+    block-local cumsum granularity."""
+    plan = _ACTIVE.get()
+    if plan is None or plan.model_axis is None:
+        return 1
+    n = plan.mesh.shape[plan.model_axis]
+    return n if dim % n == 0 else 1
+
+
+def constrain(x, *logical):
+    """x: array; logical: one entry per dim ("dp" | "tp" | "ep" | None)."""
+    plan: Optional[MeshPlan] = _ACTIVE.get()
+    if plan is None:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    used, spec = set(), []
+    for dim, name in zip(x.shape, logical):
+        ax = _resolve(plan, name, dim)
+        key = tuple(ax) if isinstance(ax, (tuple, list)) else ax
+        if ax is None or key in used:
+            spec.append(None)
+        else:
+            used.add(key)
+            spec.append(ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(plan.mesh, P(*spec)))

@@ -1,0 +1,259 @@
+"""Logical-axis sharding rules (MaxText-style) -> NamedSharding per leaf.
+
+Production mesh axes (launch.mesh):
+  single pod : ("data", "model") = (16, 16)
+  multi-pod  : ("pod", "data", "model") = (2, 16, 16)
+
+Logical plan (DESIGN.md §4):
+  * params: FSDP over "data" on the embed/reduction dim, TP over "model" on
+    heads/ffn/vocab dims; experts EP over "model". Replicated over "pod"
+    (cross-pod traffic = gradient all-reduce only, the classic multi-pod DP
+    design — DCN-friendly).
+  * batch dims of activations/inputs: ("pod", "data").
+  * KV/state caches: heads (or latent/head_dim fallback) over "model",
+    batch over ("pod", "data") when divisible.
+
+Every assignment is divisibility-checked: a dim that doesn't divide by the
+mesh axis stays unsharded rather than failing to lower (e.g. hubert's
+vocab=504 head). Rules are ordered regex -> logical axes for the TRAILING
+dims; leading stacked dims (scan: (periods, ...)) are never sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    mesh: Mesh
+    batch_axes: Tuple[str, ...]     # ("pod", "data") or ("data",)
+    fsdp_axis: Optional[str]        # "data"
+    model_axis: Optional[str]       # "model"
+
+    @property
+    def batch_size_divisor(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.batch_axes]))
+
+    def axis_size(self, logical: Optional[str]) -> int:
+        if logical is None:
+            return 1
+        if logical == "batch":
+            return self.batch_size_divisor
+        return int(self.mesh.shape[logical])
+
+    def mesh_axes(self, logical: Optional[str]):
+        if logical == "batch":
+            return self.batch_axes
+        return logical
+
+
+def plan_for_mesh(mesh: Mesh) -> MeshPlan:
+    names = mesh.axis_names
+    model = "model" if "model" in names else None
+    if "pod" in names:
+        return MeshPlan(mesh, ("pod", "data"), "data", model)
+    if "data" in names:
+        return MeshPlan(mesh, ("data",), "data", model)
+    # single-axis test meshes
+    ax = names[0]
+    return MeshPlan(mesh, (ax,), None, None)
+
+
+# ---------------------------------------------------------------------------
+# Param rules: (path regex, logical axes for trailing dims).
+# logical: "fsdp" -> data, "tp" -> model, "ep" -> model (expert dim), None.
+# ---------------------------------------------------------------------------
+_PARAM_RULES: Sequence[Tuple[str, Tuple[Optional[str], ...]]] = (
+    (r"embed/table$",            ("fsdp", "tp")),
+    (r"head/kernel$",            ("fsdp", "tp")),
+    (r"(mixer|block)/w[qkv]$",   ("fsdp", "tp")),
+    (r"(mixer|block)/b[qkv]$",   ("tp",)),
+    (r"(mixer|block)/wo$",       ("tp", "fsdp")),
+    (r"wq_a$",                   ("fsdp", "tp")),
+    (r"wq_b$",                   ("fsdp", "tp")),
+    (r"wkv_a$",                  ("fsdp", "tp")),
+    (r"wkv_b$",                  ("fsdp", "tp")),
+    (r"ffn/router$",             ("fsdp", None)),
+    # routed experts: EP over model x ZeRO-3 over data on the F dim. The
+    # shard_map dispatch (models.moe._sharded_dispatch) all-gathers each
+    # layer's F-shards over "data" right before use (transient, freed after
+    # the layer) — storage is E/tp x F/dp per device, compute is local.
+    (r"experts/w_gate$",         ("ep", None, "fsdp")),
+    (r"experts/w_up$",           ("ep", None, "fsdp")),
+    (r"experts/w_down$",         ("ep", "fsdp", None)),
+    # shared expert / dense mlp (2-D)
+    (r"(shared|ffn)/w_gate$",    ("fsdp", "tp")),
+    (r"(shared|ffn)/w_up$",      ("fsdp", "tp")),
+    (r"(shared|ffn)/w_down$",    ("tp", "fsdp")),
+    (r"ffn/w_in$",               ("fsdp", "tp")),
+    (r"ffn/w_out$",              ("tp", "fsdp")),
+    (r"ffn/b_in$",               ("tp",)),
+    (r"ffn/b_out$",              (None,)),
+    # SSM / recurrent
+    (r"mixer/in_proj$",          ("fsdp", "tp")),
+    (r"mixer/out_proj$",         ("tp", "fsdp")),
+    (r"mixer/up_proj$",          ("fsdp", "tp")),
+    (r"mixer/down_proj$",        ("tp", "fsdp")),
+    (r"mixer/conv_w$",           (None, "tp")),
+    (r"mixer/w_[if]$",           ("fsdp", None)),
+    (r"mixer/r$",                (None, None, "tp")),
+    (r"mixer/w_in$",             ("fsdp", "tp")),
+    (r"mtp/proj$",               ("fsdp", "tp")),
+)
+
+_LOGICAL_TO_KIND = {"fsdp": "fsdp", "tp": "model", "ep": "model"}
+
+
+def _leaf_path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _spec_for_leaf(path_str: str, shape, plan: MeshPlan,
+                   *, inference: bool = False) -> P:
+    ndim = len(shape)
+    trailing = None
+    for pat, axes in _PARAM_RULES:
+        if re.search(pat, path_str):
+            trailing = axes
+            break
+    if trailing is None:
+        # generic fallback: 2-D+ leaves get FSDP x TP, 1-D replicated
+        trailing = ("fsdp", "tp") if ndim >= 2 else (None,)
+    if inference:
+        # decode-serving mode: weights TP-only (resident, model-sharded),
+        # replicated over "data" — FSDP weight-gathers per decoded token
+        # would dominate the step (see EXPERIMENTS.md §Perf).
+        trailing = tuple(None if t == "fsdp" else t for t in trailing)
+    k = min(len(trailing), ndim)
+    trailing = trailing[-k:]
+    lead = ndim - k
+    spec = [None] * lead
+    used = set()
+    for dim_axis, logical in zip(range(lead, ndim), trailing):
+        if logical is None:
+            spec.append(None)
+            continue
+        mesh_axis = (plan.fsdp_axis if logical == "fsdp" else plan.model_axis)
+        if mesh_axis is None or mesh_axis in used:
+            spec.append(None)
+            continue
+        if shape[dim_axis] % plan.mesh.shape[mesh_axis] != 0:
+            spec.append(None)   # divisibility fallback: replicate this dim
+            continue
+        used.add(mesh_axis)
+        spec.append(mesh_axis)
+    return P(*spec)
+
+
+def param_shardings(params, plan: MeshPlan, *, inference: bool = False):
+    """Pytree of NamedSharding matching ``params`` (works on ShapeDtypeStructs
+    or concrete arrays). ``inference=True`` = TP-only (no FSDP gathers)."""
+    def f(path, leaf):
+        ps = _leaf_path_str(path)
+        return NamedSharding(plan.mesh, _spec_for_leaf(ps, leaf.shape, plan,
+                                                       inference=inference))
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def state_shardings(state, plan: MeshPlan):
+    """Shardings for a full train state {params, opt{step,m,v}, ...}.
+
+    Optimizer moments mirror the param tree (the path rules match through the
+    ``opt/m/...`` prefix since rules anchor on suffixes). Quantized moments
+    ({q, scale}) shard ``q`` like the param and ``scale`` like the param with
+    its last dim replicated (scale shape (..., 1) never divides anyway)."""
+    def f(path, leaf):
+        ps = _leaf_path_str(path)
+        if ps.endswith("/q"):
+            ps = ps[:-2]
+        elif ps.endswith("/scale") and not ps.endswith("norm/scale"):
+            ps = ps[:-6]
+        return NamedSharding(plan.mesh, _spec_for_leaf(ps, leaf.shape, plan))
+    return jax.tree_util.tree_map_with_path(f, state)
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation shardings
+# ---------------------------------------------------------------------------
+def _batch_axes_for(plan: MeshPlan, size: int):
+    """Largest prefix/suffix combination of batch axes that divides size."""
+    if size % plan.batch_size_divisor == 0:
+        return plan.batch_axes if len(plan.batch_axes) > 1 else plan.batch_axes[0]
+    for ax in plan.batch_axes[::-1]:     # try "data" alone, then "pod"
+        if size % plan.mesh.shape[ax] == 0:
+            return ax
+    return None
+
+
+def auto_batch_sharding(batch, plan: MeshPlan):
+    """Inputs: dim 0 = batch -> ("pod","data") (divisibility-checked);
+    scalars replicated. Used for tokens/labels/embeds/positions."""
+    def f(leaf):
+        if not hasattr(leaf, "shape") or len(leaf.shape) == 0:
+            return NamedSharding(plan.mesh, P())
+        spec = [None] * len(leaf.shape)
+        spec[0] = _batch_axes_for(plan, leaf.shape[0])
+        return NamedSharding(plan.mesh, P(*spec))
+    return jax.tree_util.tree_map(f, batch)
+
+
+def cache_shardings(caches, plan: MeshPlan, *, lead: int = 1):
+    """KV / SSM-state cache shardings.
+
+    ``lead`` = number of stacked scan dims before the batch dim (init_cache
+    stacks each pattern position's cache as (periods, B, ...), so lead=1).
+
+    Core-shape patterns after the lead dims:
+      kv     : (B, T, KV, hd)    -> batch dp, KV over model (fallback: hd)
+      latent : (B, T, W)         -> batch dp, W over model
+      ssm    : (B, nh, N, P)     -> batch dp, nh over model (fallback: N/P)
+      conv   : (B, k-1, di)      -> batch dp, di over model
+      mlstm C: (B, nh, dk, dv+1) -> batch dp, nh over model (fallback: dk)
+      m/n/h  : (B, nh[, hd])     -> batch dp, nh over model
+    Structural rule: batch dim (index ``lead``) over dp axes, then the first
+    dim from index lead+2 onward divisible by "model" (skipping the time/seq
+    dim right after batch, which dynamic_update_slice writes into); fall back
+    to the time dim last.
+    """
+    model = plan.model_axis
+    msize = plan.mesh.shape[model] if model else 1
+
+    # recurrent-state leaves have a heads dim right after batch (no time dim)
+    _STATE_KEYS = {"ssm", "C", "h", "c", "n", "m"}
+
+    def f(path, leaf):
+        shape = leaf.shape
+        ndim = len(shape)
+        if ndim <= lead:
+            return NamedSharding(plan.mesh, P())
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        spec = [None] * ndim
+        b_idx = lead
+        spec[b_idx] = _batch_axes_for(plan, shape[b_idx])
+        if model is not None:
+            if key in _STATE_KEYS:
+                cand = list(range(b_idx + 1, ndim))      # nh first
+            else:
+                cand = list(range(b_idx + 2, ndim)) + \
+                    ([b_idx + 1] if b_idx + 1 < ndim else [])
+            for i in cand:
+                if spec[i] is None and shape[i] % msize == 0 \
+                        and shape[i] >= msize:
+                    spec[i] = model
+                    break
+        return NamedSharding(plan.mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(f, caches)

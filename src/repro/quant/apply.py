@@ -1,0 +1,154 @@
+"""Glue between the paper's PrecisionPolicy and the transformer stack.
+
+* ``transformer_layer_names`` — the policy's layer-name space for an arch.
+* ``build_model_quant`` — policy -> ModelQuant (stacked (L,) Q(I,F) arrays
+  that ride the scan; weights, residual data, and KV/state bits).
+* ``transformer_traffic_model`` — the paper's §2.4 access counting applied to
+  a transformer workload (train / prefill / decode), so the §2.5 search can
+  optimize real LLM traffic.
+* ``quantize_param_tree`` — pack a trained param tree into QuantizedTensors
+  (real checkpoint footprint reduction, not just fake-quant).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.policy import PrecisionPolicy
+from ..core.qtensor import QuantizedTensor
+from ..core.traffic import LayerTraffic, TrafficModel
+from ..configs.counting import kv_bytes_per_token, layer_param_count
+from ..models.transformer import ModelQuant
+
+
+def transformer_layer_names(cfg) -> Tuple[str, ...]:
+    return tuple(f"layer_{i:03d}" for i in range(cfg.num_layers))
+
+
+def build_model_quant(policy: Optional[PrecisionPolicy], cfg,
+                      *, quantize_kv: bool = True,
+                      quantize_activations: bool = True,
+                      kv_container: str = "int8") -> Optional[ModelQuant]:
+    """PrecisionPolicy -> ModelQuant. Policy layer i == transformer layer i.
+
+    The KV/state cache inherits each layer's *data* format (the cache IS the
+    layer's inter-step data), clipped to the container width.
+    ``quantize_activations=False`` restricts the data bits to the cache only
+    (KV-quantized serving without residual-stream fake-quant).
+    """
+    if policy is None:
+        return None
+    assert len(policy) == cfg.num_layers, \
+        f"policy has {len(policy)} layers, model has {cfg.num_layers}"
+    w_i, w_f, w_en = policy.stacked_arrays("weight")
+    a_i, a_f, a_en = policy.stacked_arrays("data")
+    kv_i = kv_f = None
+    if quantize_kv:
+        cap = 8 if kv_container == "int8" else 16
+        tot = jnp.clip(a_i + a_f, 2, cap)
+        kv_i = jnp.minimum(a_i, tot - 1)
+        kv_f = tot - kv_i
+    act_on = quantize_activations and bool(a_en.any())
+    return ModelQuant(
+        w_int=w_i if bool(w_en.any()) else None,
+        w_frac=w_f if bool(w_en.any()) else None,
+        a_int=a_i if act_on else None,
+        a_frac=a_f if act_on else None,
+        kv_int=kv_i, kv_frac=kv_f, kv_container=kv_container)
+
+
+def transformer_traffic_model(cfg, *, batch: int, seq_len: int,
+                              mode: str = "train") -> TrafficModel:
+    """Access counts per layer for the paper's traffic accounting.
+
+    train/prefill: weights once per batch; data = residual in+out per token.
+    decode: per generated token — weights once, KV history read once
+    (the dominant term the paper's 'batch' analysis predicts).
+    """
+    from ..models.transformer import layer_signatures
+    names = transformer_layer_names(cfg)
+    sigs = layer_signatures(cfg)
+    layers = []
+    tok = batch * seq_len
+    D = cfg.d_model
+    for i, n in enumerate(names):
+        w = layer_param_count(cfg, i, active_only=True)
+        if mode in ("train", "prefill"):
+            d_in = tok * D
+            d_out = tok * D
+        elif mode == "decode":
+            kind, _ = sigs[i]
+            kv_hist = 0
+            if kind == "attn":
+                kv_hist = (seq_len * (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+                           if cfg.attention_type == "mla"
+                           else seq_len * 2 * cfg.num_kv_heads * cfg.head_dim)
+            d_in = batch * (D + kv_hist)
+            d_out = batch * D
+        else:
+            raise ValueError(mode)
+        layers.append(LayerTraffic(n, w, d_in, d_out))
+    return TrafficModel(tuple(layers))
+
+
+def quantize_param_tree(params, policy: PrecisionPolicy, cfg, *,
+                        pack: bool = True):
+    """Pack each segment's stacked weights into QuantizedTensors using the
+    per-layer weight formats (bucketing by container is implicit: each layer's
+    stacked leaf gets the max container among its layers' formats).
+
+    Used by the quantized-checkpoint path; compute-side dequant happens in
+    kernels/quant_matmul or via .dequantize().
+    """
+    from ..models.transformer import layer_segments
+
+    def fmt_for(start, periods, npos):
+        idx = [start + p * npos + j for p in range(periods) for j in range(npos)]
+        fmts = [policy.layers[i].weight for i in idx]
+        return fmts
+
+    out = {"embed": params["embed"], "final_norm": params["final_norm"]}
+    if "head" in params:
+        out["head"] = params["head"]
+    if "mtp" in params:
+        out["mtp"] = params["mtp"]
+    segs_q = []
+    for (pattern, periods, start), seg in zip(layer_segments(cfg),
+                                              params["segments"]):
+        npos = len(pattern)
+        fmts = fmt_for(start, periods, npos)
+        ib = max((f.int_bits for f in fmts if f), default=2)
+        fb = max((f.frac_bits for f in fmts if f), default=6)
+
+        def q(leaf):
+            if leaf.ndim >= 3 and jnp.issubdtype(leaf.dtype, jnp.floating):
+                return QuantizedTensor.from_float(
+                    leaf, ib, fb, pack=pack and (ib + fb) <= 8)
+            return leaf
+        segs_q.append(jax.tree_util.tree_map(q, seg))
+    out["segments"] = segs_q
+    return out
+
+
+def policy_footprint_report(policy: PrecisionPolicy, cfg, *, batch: int,
+                            seq_len: int) -> dict:
+    """Bytes summary for EXPERIMENTS.md: weights / KV / residual data under
+    the policy vs fp32 and 16-bit baselines."""
+    tm = transformer_traffic_model(cfg, batch=batch, seq_len=seq_len,
+                                   mode="decode")
+    tr = tm.traffic_ratio(policy, batch_size=1)
+    w_bits = [lp.weight.total_bits if lp.weight else 32
+              for lp in policy.layers]
+    d_bits = [lp.data.total_bits if lp.data else 32 for lp in policy.layers]
+    return {
+        "traffic_ratio_vs_fp32": tr,
+        "traffic_ratio_vs_16b": tr * 2.0,
+        "mean_weight_bits": float(np.mean(w_bits)),
+        "mean_data_bits": float(np.mean(d_bits)),
+        "kv_bytes_per_token_fp32": kv_bytes_per_token(cfg, 4.0),
+        "kv_bytes_per_token_policy": kv_bytes_per_token(
+            cfg, float(np.mean(d_bits)) / 8.0),
+    }

@@ -1,0 +1,5 @@
+from .fault import FaultInjection, StragglerMonitor, TrainSupervisor
+from .elastic import elastic_restore, divisor_meshes
+
+__all__ = ["FaultInjection", "StragglerMonitor", "TrainSupervisor",
+           "elastic_restore", "divisor_meshes"]

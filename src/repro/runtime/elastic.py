@@ -1,0 +1,37 @@
+"""Elastic scaling: restore a checkpoint onto a DIFFERENT mesh.
+
+Checkpoints are global-shape (mesh-agnostic, see checkpoint.ckpt), so elastic
+re-scaling = rebuild the mesh at the new device count, recompute shardings
+from the same logical rules, and device_put each array. The only constraints
+are divisibility (handled by the rules' fallbacks) and global-batch
+adjustment, which the caller owns (batch is a pure function of step).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import numpy as np
+
+from ..checkpoint.ckpt import restore_checkpoint
+from ..parallel.sharding import MeshPlan, param_shardings, plan_for_mesh
+
+
+def divisor_meshes(n_devices: int) -> List[Tuple[int, int]]:
+    """All (data, model) factorizations of a device count — the shapes an
+    elastic job can land on."""
+    out = []
+    for m in range(1, n_devices + 1):
+        if n_devices % m == 0:
+            out.append((n_devices // m, m))
+    return out
+
+
+def elastic_restore(ckpt_dir: str, template, mesh) -> tuple:
+    """Restore latest checkpoint resharded for ``mesh``.
+
+    Returns (step, state, extra). ``template`` must carry the target
+    shapes/dtypes (e.g. from jax.eval_shape of the init fn)."""
+    plan = plan_for_mesh(mesh)
+    shardings = param_shardings(template, plan)
+    return restore_checkpoint(ckpt_dir, template, shardings=shardings)

@@ -1,0 +1,126 @@
+"""Checkpointing (atomic/async/quantized) + fault-tolerance supervisor."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import (CheckpointManager, latest_step,
+                                   restore_checkpoint, save_checkpoint)
+from repro.core.fixedpoint import FixedPointFormat
+from repro.core.policy import LayerPolicy, PrecisionPolicy
+from repro.runtime.fault import (FaultInjection, StragglerMonitor,
+                                 TrainSupervisor)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"layer_000": jax.random.normal(k, (8, 16)),
+                       "norm": jnp.ones(16)},
+            "opt": {"step": jnp.int32(7), "m": jnp.zeros((8, 16))}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    d = str(tmp_path / "ckpt")
+    st = _state()
+    save_checkpoint(d, 42, st, extra={"foo": 1})
+    assert latest_step(d) == 42
+    step, restored, extra = restore_checkpoint(d, jax.eval_shape(lambda: st))
+    assert step == 42 and extra == {"foo": 1}
+    for a, b in zip(jax.tree_util.tree_leaves(st),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_async_save_and_gc(tmp_path):
+    d = str(tmp_path / "ckpt")
+    st = _state()
+    threads = [save_checkpoint(d, s, st, async_=True, keep=2)
+               for s in (1, 2, 3, 4)]
+    for t in threads:
+        t.join()
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(d))
+    assert steps == [3, 4]  # keep=2 GC'd the rest
+
+
+def test_incomplete_checkpoint_is_skipped(tmp_path):
+    d = str(tmp_path / "ckpt")
+    st = _state()
+    save_checkpoint(d, 10, st)
+    # simulate a crash mid-save: dir without COMMIT
+    os.makedirs(os.path.join(d, "step_000000011"))
+    assert latest_step(d) == 10
+
+
+def test_quantized_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path / "ckpt")
+    st = _state()
+    pol = PrecisionPolicy(("layer_000",),
+                          (LayerPolicy(FixedPointFormat(3, 5), None),))
+    save_checkpoint(d, 1, st, policy=pol)
+    # container on disk is int8
+    npz = np.load(os.path.join(d, "step_000000001", "arrays.npz"))
+    assert npz["params::layer_000"].dtype == np.int8
+    _, restored, _ = restore_checkpoint(d, jax.eval_shape(lambda: st))
+    # dequantized values within the Q(3,5) grid resolution
+    np.testing.assert_allclose(restored["params"]["layer_000"],
+                               st["params"]["layer_000"], atol=2 ** -5)
+    # non-policy leaves exact
+    np.testing.assert_array_equal(restored["params"]["norm"],
+                                  st["params"]["norm"])
+
+
+def test_supervisor_restarts_from_checkpoint(tmp_path):
+    """Inject failures at chosen steps; training must complete with the
+    correct final counter, replaying from the last checkpoint."""
+    d = str(tmp_path / "ckpt")
+    ckpt = CheckpointManager(d, interval=2)
+    fail_at = {5: True, 9: True}
+    executed = []
+
+    def step_fn(state, step):
+        if fail_at.pop(step, None):
+            raise FaultInjection(f"node lost at step {step}")
+        executed.append(step)
+        return {"x": state["x"] + 1}, {"step": step}
+
+    def save_hook(step, state):
+        ckpt.maybe_save(step, state, extra={})
+
+    def restore_fn():
+        ckpt.wait()
+        step, state, _ = ckpt.restore_latest(
+            jax.eval_shape(lambda: {"x": jnp.int32(0)}))
+        return step, state
+
+    sup = TrainSupervisor(step_fn=step_fn, save_hook=save_hook,
+                          restore_fn=restore_fn, max_restarts=5)
+    state, metrics = sup.run({"x": jnp.int32(0)}, 0, 12)
+    assert sup.restarts == 2
+    assert int(state["x"]) == 12  # every step counted exactly once
+    assert len(metrics) >= 12
+
+
+def test_supervisor_gives_up_after_max_restarts(tmp_path):
+    def step_fn(state, step):
+        raise FaultInjection("always down")
+
+    sup = TrainSupervisor(step_fn=step_fn, save_hook=lambda *a: None,
+                          restore_fn=lambda: (0, {}), max_restarts=2)
+    with pytest.raises(RuntimeError, match="exceeded"):
+        sup.run({}, 0, 5)
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(threshold=2.0, window=50)
+    for i in range(20):
+        mon.observe(i, 0.1)
+    rec = mon.observe(20, 0.5)   # 5x median
+    assert rec.flagged
+    assert mon.flagged_steps == [20]
+    s = mon.summary()
+    assert s["steps"] == 21 and s["flagged"] == 1

@@ -1,0 +1,132 @@
+"""Data pipelines + the paper's CNNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.lm import LMDataConfig, lm_batch
+from repro.data.pipeline import DataPipeline
+from repro.data.synthetic import digits_dataset, shapes32_dataset
+from repro.models.cnn import (ALEXNET_SMALL, CONVNET, LENET, cnn_accuracy,
+                              cnn_forward, cnn_loss, cnn_traffic_model,
+                              init_cnn)
+from repro.core.fixedpoint import FixedPointFormat
+from repro.core.policy import LayerPolicy, PrecisionPolicy
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+def test_digits_deterministic_and_shaped():
+    x1, y1 = digits_dataset(32, seed=7)
+    x2, y2 = digits_dataset(32, seed=7)
+    np.testing.assert_array_equal(x1, x2)
+    assert x1.shape == (32, 28, 28, 1) and x1.min() >= 0 and x1.max() <= 1
+    assert set(np.unique(y1)).issubset(set(range(10)))
+
+
+def test_shapes32_all_classes():
+    x, y = shapes32_dataset(200, seed=0)
+    assert x.shape == (200, 32, 32, 3)
+    assert len(np.unique(y)) == 10
+
+
+def test_lm_batch_deterministic_and_learnable():
+    cfg = LMDataConfig(vocab_size=64, seq_len=128, batch_size=4, seed=3)
+    b1, b2 = lm_batch(cfg, 5), lm_batch(cfg, 5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (4, 128)
+    # labels shift
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+    # Markov structure: the same (prev, cur) state recurs with few successors
+    toks = np.asarray(lm_batch(cfg, 0)["tokens"]).reshape(-1)
+    from collections import defaultdict
+    succ = defaultdict(set)
+    for a, b, c in zip(toks[:-2], toks[1:-1], toks[2:]):
+        succ[(a, b)].add(c)
+    multi = [s for s in succ.values() if len(s) > 0]
+    avg_branch = np.mean([len(s) for s in multi])
+    assert avg_branch < cfg.vocab_size / 4  # far from uniform
+
+
+def test_pipeline_prefetch_and_restore():
+    produced = []
+
+    def batch_fn(step):
+        produced.append(step)
+        return {"step": np.asarray(step)}
+
+    p = DataPipeline(batch_fn, cfg=None)
+    b0 = next(p)
+    b1 = next(p)
+    assert int(b0["step"]) == 0 and int(b1["step"]) == 1
+    st = p.state
+    p2 = DataPipeline(batch_fn, start_step=0)
+    p2.restore(st)
+    assert int(next(p2)["step"]) == st["step"]
+
+
+# ---------------------------------------------------------------------------
+# CNNs (paper networks)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("spec", [LENET, CONVNET, ALEXNET_SMALL])
+def test_cnn_forward_shapes(spec):
+    params = init_cnn(jax.random.PRNGKey(0), spec)
+    x = jnp.zeros((2,) + spec.input_shape)
+    logits = cnn_forward(params, x, spec)
+    assert logits.shape == (2, spec.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_cnn_learns_digits_quickly():
+    """A few hundred LeNet steps reach >80% on synthetic digits — the
+    accuracy signal the paper's experiments need."""
+    spec = LENET
+    params = init_cnn(jax.random.PRNGKey(0), spec)
+    xs, ys = digits_dataset(2048, seed=0)
+    xv, yv = digits_dataset(512, seed=1)
+    lr = 0.05
+    grad = jax.jit(jax.grad(lambda p, b: cnn_loss(p, b, spec)))
+    for i in range(170):
+        sl = slice((i * 64) % 1984, (i * 64) % 1984 + 64)
+        g = grad(params, {"image": jnp.asarray(xs[sl]),
+                          "label": jnp.asarray(ys[sl])})
+        params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, g)
+    acc = cnn_accuracy(params, jnp.asarray(xv), jnp.asarray(yv), spec)
+    assert acc > 0.85, acc
+
+
+def test_cnn_policy_quantization_changes_output():
+    spec = LENET
+    params = init_cnn(jax.random.PRNGKey(0), spec)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (4,) + spec.input_shape)
+    full = cnn_forward(params, x, spec)
+    pol = PrecisionPolicy.uniform(
+        spec.layer_names, FixedPointFormat(1, 2), FixedPointFormat(2, 0))
+    quant = cnn_forward(params, x, spec, pol)
+    assert not np.allclose(np.asarray(full), np.asarray(quant))
+    # generous precision ~= full precision
+    pol_hi = PrecisionPolicy.uniform(
+        spec.layer_names, FixedPointFormat(2, 12), FixedPointFormat(8, 8))
+    hi = cnn_forward(params, x, spec, pol_hi)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(hi),
+                               rtol=0.02, atol=0.02)
+
+
+def test_cnn_traffic_model_matches_paper_structure():
+    tm = cnn_traffic_model(LENET)
+    assert tm.names == ("layer1", "layer2", "layer3", "layer4")
+    # LeNet weights ~= 431k params
+    w, d = tm.accesses(batch_size=1, mode="single")
+    total_params = sum(l.weight_elems for l in tm.layers)
+    assert 400_000 < total_params < 450_000
+    # batch mode amortizes weights
+    w_b, d_b = tm.accesses(batch_size=100, mode="batch")
+    w_s, d_s = tm.accesses(batch_size=100, mode="single")
+    assert w_s == 100 * w_b and d_b == d_s
+    # TR for a uniform 8-bit policy = 0.25 exactly
+    pol = PrecisionPolicy.uniform(tm.names, FixedPointFormat(1, 7),
+                                  FixedPointFormat(4, 4))
+    assert tm.traffic_ratio(pol, batch_size=50) == pytest.approx(0.25)

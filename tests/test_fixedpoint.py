@@ -1,0 +1,163 @@
+"""Unit + property tests for the fixed-point core (paper §2.1 semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FixedPointFormat, QuantizedTensor, fake_quant,
+                        fake_quant_ste, format_params, pack_bits, quantize,
+                        dequantize, required_int_bits, unpack_bits)
+
+
+class TestFormat:
+    def test_basic_properties(self):
+        f = FixedPointFormat(4, 3)  # Q4.3: 7 bits total
+        assert f.total_bits == 7
+        assert f.scale == 8.0
+        assert f.qmax == 63 and f.qmin == -64
+        assert f.max_value == 63 / 8 and f.min_value == -8.0
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            FixedPointFormat(0, 3)
+        with pytest.raises(ValueError):
+            FixedPointFormat(1, -1)
+
+    def test_parse_roundtrip(self):
+        f = FixedPointFormat.parse("Q3.5")
+        assert (f.int_bits, f.frac_bits) == (3, 5)
+        assert FixedPointFormat.parse(f.short()) == f
+
+    def test_container(self):
+        assert FixedPointFormat(4, 4).container_dtype() == jnp.int8
+        assert FixedPointFormat(8, 8).container_dtype() == jnp.int16
+        assert FixedPointFormat(12, 10).container_dtype() == jnp.int32
+
+
+class TestFakeQuant:
+    def test_exact_grid_values_preserved(self):
+        f = FixedPointFormat(4, 3)
+        xs = jnp.array([0.0, 0.125, -0.125, 1.0, -8.0, 7.875])
+        np.testing.assert_allclose(fake_quant(xs, 4, 3), xs)
+
+    def test_rounding_to_grid(self):
+        y = fake_quant(jnp.array([0.06]), 4, 3)  # grid 0.125; 0.06*8=0.48 -> 0
+        np.testing.assert_allclose(y, [0.0])
+        y = fake_quant(jnp.array([0.07]), 4, 3)  # 0.56 -> 1 -> 0.125
+        np.testing.assert_allclose(y, [0.125])
+
+    def test_saturation(self):
+        f = FixedPointFormat(3, 2)  # range [-4, 3.75]
+        y = fake_quant(jnp.array([100.0, -100.0]), 3, 2)
+        np.testing.assert_allclose(y, [f.max_value, f.min_value])
+
+    def test_vectorized_formats(self):
+        # per-layer formats as arrays (the lax.scan path)
+        x = jnp.full((3,), 0.3)
+        i = jnp.array([2.0, 2.0, 2.0])
+        fbits = jnp.array([1.0, 3.0, 8.0])
+        y = fake_quant(x, i, fbits)
+        np.testing.assert_allclose(y, [0.5, 0.25, 0.30078125])
+
+    def test_stochastic_rounding_unbiased(self):
+        key = jax.random.PRNGKey(0)
+        x = jnp.full((20000,), 0.3)
+        y = fake_quant(x, 4, 2, rounding="stochastic", key=key)
+        # grid is .25; E[y] should be ~0.3
+        assert abs(float(y.mean()) - 0.3) < 5e-3
+
+    def test_ste_gradient(self):
+        g = jax.grad(lambda x: fake_quant_ste(x, 4, 3).sum())(jnp.array([0.3, 100.0]))
+        np.testing.assert_allclose(g, [1.0, 0.0])  # clipped region has 0 grad
+
+    @given(st.integers(1, 8), st.integers(0, 8),
+           st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                    min_size=1, max_size=32))
+    @settings(max_examples=60, deadline=None)
+    def test_prop_idempotent_and_bounded(self, i, f, xs):
+        fmt = FixedPointFormat(i, f)
+        x = jnp.asarray(xs, jnp.float32)
+        y = fake_quant(x, i, f)
+        # idempotent
+        np.testing.assert_allclose(fake_quant(y, i, f), y, rtol=0, atol=0)
+        # bounded by format range
+        assert float(y.max()) <= fmt.max_value + 1e-6
+        assert float(y.min()) >= fmt.min_value - 1e-6
+        # error bounded by half resolution inside the range
+        inside = (x <= fmt.max_value) & (x >= fmt.min_value)
+        err = jnp.abs(jnp.where(inside, x - y, 0.0))
+        assert float(err.max()) <= fmt.resolution / 2 + 1e-6
+
+    @given(st.integers(1, 12))
+    @settings(max_examples=12, deadline=None)
+    def test_prop_monotone(self, i):
+        xs = jnp.linspace(-10, 10, 201)
+        y = fake_quant(xs, i, 3)
+        assert bool(jnp.all(jnp.diff(y) >= 0))
+
+
+class TestRequiredIntBits:
+    def test_values(self):
+        assert int(required_int_bits(0.9)) == 1
+        assert int(required_int_bits(1.5)) == 2
+        assert int(required_int_bits(2.0)) == 2
+        assert int(required_int_bits(2.1)) == 3
+        assert int(required_int_bits(100.0)) == 8
+
+    def test_covers(self):
+        for m in [0.3, 1.0, 3.7, 64.2, 1000.0]:
+            i = int(required_int_bits(m))
+            assert 2 ** (i - 1) >= m
+
+
+class TestPacking:
+    @given(st.sampled_from([2, 3, 4, 5, 8, 16]),
+           st.integers(1, 50), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_prop_pack_roundtrip(self, bits, n, seed):
+        rng = np.random.default_rng(seed)
+        lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+        q = rng.integers(lo, hi + 1, size=(3, n))
+        packed, nn = pack_bits(jnp.asarray(q), bits)
+        out = unpack_bits(packed, bits, nn)
+        np.testing.assert_array_equal(np.asarray(out), q)
+
+    def test_packed_sizes(self):
+        q = jnp.zeros((4, 128))
+        packed, _ = pack_bits(q, 4)  # 8 vals/word
+        assert packed.shape == (4, 16)
+        packed, _ = pack_bits(q, 3)  # 10 vals/word, padded to 130
+        assert packed.shape == (4, 13)
+
+
+class TestQuantizedTensor:
+    def test_roundtrip_unpacked(self):
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 16)), jnp.float32)
+        qt = QuantizedTensor.from_float(x, 2, 6)
+        assert qt.data.dtype == jnp.int8
+        y = qt.dequantize()
+        np.testing.assert_allclose(y, fake_quant(x, 2, 6), atol=1e-7)
+
+    def test_roundtrip_packed(self):
+        x = jnp.asarray(np.random.default_rng(1).normal(size=(4, 40)), jnp.float32)
+        qt = QuantizedTensor.from_float(x, 1, 3, pack=True)
+        y = qt.dequantize()
+        np.testing.assert_allclose(y, fake_quant(x, 1, 3), atol=1e-7)
+
+    def test_footprint(self):
+        x = jnp.zeros((128, 128))
+        qt4 = QuantizedTensor.from_float(x, 1, 3, pack=True)   # 4 bits
+        qt8 = QuantizedTensor.from_float(x, 2, 6)              # int8
+        assert abs(qt4.footprint_ratio - 4 / 32) < 1e-6
+        assert abs(qt8.footprint_ratio - 8 / 32) < 1e-6
+
+    def test_pytree(self):
+        x = jnp.ones((4, 8))
+        qt = QuantizedTensor.from_float(x, 2, 5)
+        leaves, treedef = jax.tree_util.tree_flatten(qt)
+        qt2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        np.testing.assert_allclose(qt2.dequantize(), qt.dequantize())
+        # jit through it
+        f = jax.jit(lambda t: t.dequantize().sum())
+        assert float(f(qt)) == float(qt.dequantize().sum())

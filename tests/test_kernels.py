@@ -1,0 +1,126 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret
+mode on CPU). Hypothesis drives the shape space; tolerances are exact for
+grid ops (quantization is deterministic) and ~1e-4 for float accumulation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+_SETTINGS = dict(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# quant_cast
+# ---------------------------------------------------------------------------
+@settings(**_SETTINGS)
+@given(m=st.integers(1, 300), n=st.integers(1, 700),
+       i=st.integers(1, 8), f=st.integers(0, 8),
+       dtype=st.sampled_from(["float32", "bfloat16"]))
+def test_quant_cast_matches_ref(m, n, i, f, dtype):
+    key = jax.random.PRNGKey(m * 1000 + n)
+    x = (jax.random.normal(key, (m, n), jnp.float32) * 5).astype(dtype)
+    y = ops.quant_cast(x, i, f)
+    yr = ref.quant_cast_ref(x, i, f)
+    np.testing.assert_array_equal(np.asarray(y, np.float32),
+                                  np.asarray(yr, np.float32))
+    assert y.dtype == x.dtype
+
+
+def test_quant_cast_3d_and_idempotent():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 37, 129)) * 3
+    y = ops.quant_cast(x, 3, 5)
+    y2 = ops.quant_cast(y, 3, 5)
+    np.testing.assert_array_equal(y, y2)  # grid projection is idempotent
+    # values are on the grid
+    scaled = np.asarray(y) * 2**5
+    np.testing.assert_allclose(scaled, np.round(scaled), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack
+# ---------------------------------------------------------------------------
+@settings(**_SETTINGS)
+@given(m=st.integers(1, 64), words=st.integers(1, 16),
+       bits=st.sampled_from([2, 4, 8, 16]))
+def test_pack_unpack_roundtrip(m, words, bits):
+    vpw = 32 // bits
+    n = words * vpw
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    q = jax.random.randint(jax.random.PRNGKey(m * 31 + words), (m, n),
+                           lo, hi + 1, jnp.int32)
+    w = ops.pack(q, bits)
+    assert w.shape == (m, words)
+    np.testing.assert_array_equal(w, ref.pack_ref(q, bits))
+    q2 = ops.unpack(w, bits)
+    np.testing.assert_array_equal(q2, q)
+    np.testing.assert_array_equal(ref.unpack_ref(w, bits), q)
+
+
+def test_pack_footprint():
+    q = jnp.zeros((8, 128), jnp.int32)
+    for bits in (2, 4, 8, 16):
+        w = ops.pack(q, bits)
+        assert w.size * 32 == q.size * bits  # true N-bit footprint
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul
+# ---------------------------------------------------------------------------
+@settings(**_SETTINGS)
+@given(m=st.integers(1, 130), k=st.integers(1, 300), n=st.integers(1, 130),
+       adt=st.sampled_from(["float32", "bfloat16"]))
+def test_quant_matmul_matches_ref(m, k, n, adt):
+    key = jax.random.PRNGKey(m + k * 7 + n * 11)
+    a = (jax.random.normal(key, (m, k), jnp.float32)).astype(adt)
+    wq = jax.random.randint(jax.random.fold_in(key, 1), (k, n), -128, 128,
+                            jnp.int32).astype(jnp.int8)
+    s = jax.random.uniform(jax.random.fold_in(key, 2), (n,),
+                           minval=0.001, maxval=0.05)
+    out = ops.qmatmul(a, wq, s)
+    expect = ref.quant_matmul_ref(a, wq, s)
+    tol = 2e-2 if adt == "bfloat16" else 1e-4
+    np.testing.assert_allclose(out, expect, rtol=tol, atol=tol * 10)
+
+
+# ---------------------------------------------------------------------------
+# kv_attention
+# ---------------------------------------------------------------------------
+@settings(**_SETTINGS)
+@given(b=st.integers(1, 3), kv=st.sampled_from([1, 2, 4]),
+       g=st.sampled_from([1, 2, 4]), hd=st.sampled_from([16, 32, 64]),
+       t=st.integers(8, 200), frac=st.integers(4, 7))
+def test_kv_attention_matches_ref(b, kv, g, hd, t, frac):
+    key = jax.random.PRNGKey(b * 97 + t)
+    h = kv * g
+    q = jax.random.normal(key, (b, h, hd), jnp.float32)
+    k_q = jax.random.randint(jax.random.fold_in(key, 1), (b, t, kv, hd),
+                             -128, 128, jnp.int32).astype(jnp.int8)
+    v_q = jax.random.randint(jax.random.fold_in(key, 2), (b, t, kv, hd),
+                             -128, 128, jnp.int32).astype(jnp.int8)
+    kv_len = max(1, t - 3)
+    out = ops.kv_attention(q, k_q, v_q, kv_len, int_bits=2, frac_bits=frac,
+                           block_t=64)
+    expect = ref.kv_attention_ref(q, k_q, v_q, 2, frac, kv_len)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_kv_attention_masks_tail():
+    """Entries beyond kv_len must not affect the output."""
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 4, 32))
+    k_q = jax.random.randint(key, (1, 64, 2, 32), -128, 128,
+                             jnp.int32).astype(jnp.int8)
+    v_q = jax.random.randint(jax.random.fold_in(key, 1), (1, 64, 2, 32),
+                             -128, 128, jnp.int32).astype(jnp.int8)
+    out1 = ops.kv_attention(q, k_q, v_q, 10, int_bits=2, frac_bits=5,
+                            block_t=16)
+    k_q2 = k_q.at[:, 10:].set(127)
+    v_q2 = v_q.at[:, 10:].set(-128)
+    out2 = ops.kv_attention(q, k_q2, v_q2, 10, int_bits=2, frac_bits=5,
+                            block_t=16)
+    np.testing.assert_allclose(out1, out2, rtol=1e-6)

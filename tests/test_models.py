@@ -1,0 +1,193 @@
+"""Per-arch smoke tests (assignment requirement) + model-level invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.shapes import SHAPES, applicable
+from repro.models.attention import attend_chunked, attend_full
+from repro.models.moe import init_moe, moe_apply
+from repro.models.transformer import (decode_step, forward, init_model,
+                                      prefill, train_loss)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _batch(cfg, B=2, S=64):
+    if cfg.frontend:
+        b = {"embeds": jax.random.normal(jax.random.PRNGKey(9),
+                                         (B, S, cfg.d_model), jnp.float32),
+             "labels": jnp.zeros((B, S), jnp.int32)}
+    else:
+        b = {"tokens": jax.random.randint(jax.random.PRNGKey(9), (B, S), 0,
+                                          cfg.vocab_size, jnp.int32),
+             "labels": jnp.zeros((B, S), jnp.int32)}
+    if cfg.mrope:
+        b["mrope_positions"] = jnp.zeros((B, S, 3), jnp.int32)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """REDUCED same-family config: one forward + one grad step on CPU,
+    asserting output shapes and no NaNs (assignment smoke contract)."""
+    cfg = get_smoke_config(arch)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    B, S = 2, 64
+    _, logits, _, _ = forward(params, batch, cfg)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    loss, metrics = jax.jit(lambda p, b: train_loss(p, b, cfg))(params, batch)
+    assert jnp.isfinite(loss)
+    grads = jax.jit(jax.grad(lambda p, b: train_loss(p, b, cfg)[0]))(
+        params, batch)
+    for leaf in jax.tree_util.tree_leaves(grads):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned dimensions."""
+    cfg = get_config(arch)
+    expected = {
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+        "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+        "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 16384, 202048),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 18432, 129280),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected
+    # MoE extras
+    if arch == "deepseek-v3-671b":
+        assert (cfg.num_experts, cfg.experts_per_token,
+                cfg.moe_d_ff, cfg.num_shared_experts) == (256, 8, 2048, 1)
+        assert cfg.attention_type == "mla" and cfg.mtp_depth == 1
+    if arch == "llama4-maverick-400b-a17b":
+        assert (cfg.num_experts, cfg.experts_per_token) == (128, 1)
+    if arch == "jamba-v0.1-52b":
+        assert (cfg.num_experts, cfg.experts_per_token) == (16, 2)
+        kinds = cfg.layer_kinds
+        assert kinds.count("attn") == 4 and kinds.count("mamba") == 28
+    if arch == "xlstm-350m":
+        kinds = cfg.layer_kinds
+        assert kinds.count("slstm") == 3 and kinds.count("mlstm") == 21
+
+
+@pytest.mark.parametrize("arch",
+                         [a for a in ARCH_IDS
+                          if get_smoke_config(a).family != "encoder"])
+def test_arch_decode_consistency(arch):
+    """Prefill+decode must agree with teacher-forced full forward."""
+    cfg = get_smoke_config(arch)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    B, P = 2, 16
+    if cfg.frontend:
+        pytest.skip("frontend archs decode from embeds; covered in serve")
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, P), 0,
+                              cfg.vocab_size, jnp.int32)
+    # full forward logits at last position
+    _, full_logits, _, _ = forward(params, {"tokens": toks}, cfg)
+    logits_last, caches, pos = prefill(params, {"tokens": toks}, cfg,
+                                       max_len=32)
+    np.testing.assert_allclose(
+        np.asarray(logits_last, np.float32),
+        np.asarray(full_logits[:, -1], np.float32), rtol=0.08, atol=0.05)
+    # one decode step continues consistently (shape + finite)
+    nxt = jnp.argmax(logits_last, -1).astype(jnp.int32)
+    step_logits, caches = decode_step(params, nxt, pos, caches, cfg)
+    assert step_logits.shape == (B, cfg.vocab_size)
+    # teacher-forced check: decode at pos P for token nxt == forward on
+    # the extended sequence
+    toks2 = jnp.concatenate([toks, nxt[:, None]], axis=1)
+    _, full2, _, _ = forward(params, {"tokens": toks2}, cfg)
+    np.testing.assert_allclose(np.asarray(step_logits, np.float32),
+                               np.asarray(full2[:, -1], np.float32),
+                               rtol=0.12, atol=0.08)
+
+
+def test_attention_chunked_matches_full():
+    key = jax.random.PRNGKey(0)
+    B, S, H, KV, hd = 2, 96, 8, 2, 32
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    o_full = attend_full(q, k, v, pos, jnp.arange(S), causal=True)
+    o_chunk = attend_chunked(q, k, v, pos, 0, causal=True, chunk=32)
+    np.testing.assert_allclose(np.asarray(o_full), np.asarray(o_chunk),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mla_absorbed_matches_expanded():
+    cfg = get_smoke_config("deepseek-v3-671b")
+    from repro.models.attention import init_mla, mla_apply
+    params = init_mla(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 24
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    y0, _ = mla_apply(params, x, pos, cfg=cfg, absorbed=False)
+    y1, _ = mla_apply(params, x, pos, cfg=cfg, absorbed=True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_scatter_matches_eval_all_without_drops():
+    cfg = dataclasses.replace(get_smoke_config("jamba-v0.1-52b"),
+                              moe_capacity_factor=8.0)
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    y_ref, _ = moe_apply(p, x, cfg=cfg, mode="eval_all")
+    y_sc, _ = moe_apply(p, x, cfg=cfg, mode="scatter")
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_sc),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_quantized_kv_cache_close_to_fp():
+    """int8 Q(2,6) KV cache decode stays close to the fp cache path."""
+    from repro.quant.apply import build_model_quant, transformer_layer_names
+    from repro.core.policy import PrecisionPolicy
+    from repro.core.fixedpoint import FixedPointFormat
+
+    cfg = get_smoke_config("yi-34b")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0,
+                              cfg.vocab_size, jnp.int32)
+    logits_fp, caches_fp, pos = prefill(params, {"tokens": toks}, cfg,
+                                        max_len=16)
+    pol = PrecisionPolicy.uniform(transformer_layer_names(cfg), None,
+                                  FixedPointFormat(2, 6))
+    quant = build_model_quant(pol, cfg, quantize_kv=True,
+                              quantize_activations=False)
+    logits_q, caches_q, _ = prefill(params, {"tokens": toks}, cfg,
+                                    max_len=16, quant=quant)
+    # int8 cache container really is int8
+    leaf = jax.tree_util.tree_leaves(caches_q)[0]
+    assert leaf.dtype == jnp.int8
+    # logits of a random-init model are near-uniform, so argmax is not a
+    # stable metric; assert the LOGIT perturbation is small instead
+    d = np.abs(np.asarray(logits_fp, np.float32)
+               - np.asarray(logits_q, np.float32))
+    spread = float(np.std(np.asarray(logits_fp, np.float32)))
+    assert d.max() <= 0.5 * spread, (d.max(), spread)
+
+
+def test_shape_applicability_matrix():
+    """31 applicable cells out of the nominal 40 (DESIGN.md skip rules)."""
+    cells = [(a, s) for a in ARCH_IDS for s in SHAPES
+             if applicable(get_config(a), SHAPES[s])]
+    assert len(cells) == 31
+    assert ("hubert-xlarge", "decode_32k") not in cells
+    assert ("xlstm-350m", "long_500k") in cells
+    assert ("jamba-v0.1-52b", "long_500k") in cells
+    assert ("qwen2-72b", "long_500k") not in cells

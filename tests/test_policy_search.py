@@ -1,0 +1,197 @@
+"""Tests for PrecisionPolicy, TrafficModel and the two search algorithms.
+
+The search tests use a synthetic differentiable 'network' whose accuracy
+response to per-layer precision is known analytically, so we can assert the
+paper's qualitative claims (mixed beats uniform at equal accuracy) exactly.
+"""
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FIELDS, FixedPointFormat, LayerPolicy, LayerTraffic,
+                        PrecisionPolicy, TrafficModel, greedy_pareto_search,
+                        sensitivity_search)
+
+
+def mk_policy(names=("l1", "l2", "l3")):
+    return PrecisionPolicy.uniform(names, FixedPointFormat(2, 8),
+                                   FixedPointFormat(8, 2))
+
+
+def mk_traffic(names=("l1", "l2", "l3")):
+    layers = tuple(
+        LayerTraffic(n, weight_elems=1000 * (i + 1), data_in_elems=500,
+                     data_out_elems=500) for i, n in enumerate(names))
+    return TrafficModel(layers)
+
+
+class TestPolicy:
+    def test_uniform_and_access(self):
+        p = mk_policy()
+        assert len(p) == 3
+        assert p["l2"].weight.total_bits == 10
+
+    def test_decrement_and_floor(self):
+        p = mk_policy()
+        p2 = p.decrement(0, "weight_frac")
+        assert p2["l1"].weight.frac_bits == 7
+        assert p["l1"].weight.frac_bits == 8  # immutability
+        # drive to the floor
+        cur = p
+        for _ in range(8):
+            cur = cur.decrement(0, "weight_frac")
+        assert cur["l1"].weight.frac_bits == 0
+        assert cur.decrement(0, "weight_frac") is None
+        # int floor is 1 (sign bit)
+        cur = p
+        for _ in range(1):
+            cur = cur.decrement(0, "weight_int")
+        assert cur.decrement(0, "weight_int") is None
+
+    def test_candidate_moves_count(self):
+        p = mk_policy()
+        # 3 layers x 4 fields, all above floor
+        assert len(p.candidate_moves()) == 12
+        base = PrecisionPolicy.fp32_baseline(("a",))
+        assert base.candidate_moves() == []
+
+    def test_json_roundtrip(self):
+        p = mk_policy().with_field(1, "data_int", 3)
+        q = PrecisionPolicy.from_json(p.to_json())
+        assert q == p
+
+    def test_stacked_arrays(self):
+        p = PrecisionPolicy(
+            ("a", "b"),
+            (LayerPolicy(FixedPointFormat(2, 6), FixedPointFormat(9, 1)),
+             LayerPolicy(None, FixedPointFormat(4, 4))))
+        ib, fb, en = p.stacked_arrays("weight")
+        assert list(en) == [True, False]
+        assert list(ib) == [2.0, 16.0]
+        ib, fb, en = p.stacked_arrays("data")
+        assert list(fb) == [1.0, 4.0]
+
+
+class TestTraffic:
+    def test_baseline_and_ratio(self):
+        t = mk_traffic()
+        p = PrecisionPolicy.fp32_baseline(t.names)
+        assert t.traffic_ratio(p) == pytest.approx(1.0)
+        # uniform 16-bit everywhere => TR 0.5
+        p16 = PrecisionPolicy.uniform(t.names, FixedPointFormat(8, 8),
+                                      FixedPointFormat(8, 8))
+        assert t.traffic_ratio(p16) == pytest.approx(0.5)
+
+    def test_batch_vs_single(self):
+        t = mk_traffic()
+        w1, d1 = t.accesses(batch_size=10, mode="single")
+        w2, d2 = t.accesses(batch_size=10, mode="batch")
+        assert d1 == d2 and w1 == 10 * w2  # weights amortized by batching
+
+    def test_mixed_prices_correctly(self):
+        names = ("a", "b")
+        t = TrafficModel((LayerTraffic("a", 100, 0, 0),
+                          LayerTraffic("b", 0, 50, 50)))
+        p = PrecisionPolicy(
+            names,
+            (LayerPolicy(FixedPointFormat(1, 7), None),       # W 8 bits
+             LayerPolicy(None, FixedPointFormat(2, 2))))      # D 4 bits
+        bits = t.traffic_bits(p)
+        assert bits == 100 * 8 + 0 * 32 + 100 * 4
+
+
+# ---------------------------------------------------------------------------
+# Synthetic search target: accuracy = 1 - sum_l sens_l * err_l(policy), where
+# err grows as bits shrink. Layer sensitivities differ by 16x so the optimal
+# mixed config is very non-uniform — exactly the paper's Fig. 3 situation.
+# ---------------------------------------------------------------------------
+def synthetic_eval(sens):
+    def eval_fn(policy: PrecisionPolicy) -> float:
+        loss = 0.0
+        for s, lp in zip(sens, policy.layers):
+            for fmt, need_i in ((lp.weight, 2), (lp.data, 6)):
+                if fmt is None:
+                    continue
+                # range error if I too small; resolution error from F
+                loss += s * (4.0 * max(0, need_i - fmt.int_bits)
+                             + 2.0 ** (-fmt.frac_bits))
+        return max(0.0, 1.0 - 0.05 * loss)
+    return eval_fn
+
+
+class TestGreedySearch:
+    def test_reduces_traffic_within_tolerance(self):
+        names = ("l1", "l2", "l3", "l4")
+        sens = [2.0, 0.125, 0.5, 0.125]
+        ev = synthetic_eval(sens)
+        t = TrafficModel(tuple(LayerTraffic(n, 4000, 1000, 1000) for n in names))
+        init = PrecisionPolicy.uniform(names, FixedPointFormat(2, 10),
+                                       FixedPointFormat(6, 6))
+        res = greedy_pareto_search(ev, t, init, max_steps=60)
+        sel = res.select(0.01)
+        assert sel is not None
+        assert sel.traffic_ratio < 0.45  # big reduction at 1% tolerance
+        assert sel.accuracy >= res.baseline_accuracy * 0.99
+
+    def test_mixed_beats_uniform(self):
+        """The paper's headline: per-layer beats one-size-fits-all."""
+        names = ("a", "b", "c")
+        sens = [4.0, 0.1, 0.1]
+        ev = synthetic_eval(sens)
+        t = TrafficModel(tuple(LayerTraffic(n, 10000, 2000, 2000) for n in names))
+        init = PrecisionPolicy.uniform(names, FixedPointFormat(2, 12),
+                                       FixedPointFormat(6, 6))
+        res = greedy_pareto_search(ev, t, init, max_steps=80)
+        sel = res.select(0.02)
+        # find best *uniform* config meeting the same tolerance
+        best_uniform = None
+        for wb in range(1, 13):
+            for db in range(0, 7):
+                p = PrecisionPolicy.uniform(names, FixedPointFormat(2, wb),
+                                            FixedPointFormat(6, db))
+                if ev(p) >= res.baseline_accuracy * 0.98:
+                    tr = t.traffic_ratio(p)
+                    if best_uniform is None or tr < best_uniform:
+                        best_uniform = tr
+        assert sel.traffic_ratio < best_uniform  # mixed strictly better
+
+    def test_pareto_is_nondominated(self):
+        names = ("a", "b")
+        ev = synthetic_eval([1.0, 0.2])
+        t = mk_traffic(names[:2]) if False else TrafficModel(
+            (LayerTraffic("a", 100, 10, 10), LayerTraffic("b", 100, 10, 10)))
+        init = PrecisionPolicy.uniform(names, FixedPointFormat(2, 8),
+                                       FixedPointFormat(6, 4))
+        res = greedy_pareto_search(ev, t, init, max_steps=40)
+        front = res.pareto()
+        for i in range(1, len(front)):
+            assert front[i].accuracy > front[i - 1].accuracy
+            assert front[i].traffic_ratio > front[i - 1].traffic_ratio
+
+
+class TestSensitivitySearch:
+    def test_matches_greedy_quality_fewer_evals(self):
+        names = tuple(f"l{i}" for i in range(6))
+        sens = [2.0, 1.0, 0.5, 0.25, 0.125, 0.125]
+        ev = synthetic_eval(sens)
+        t = TrafficModel(tuple(LayerTraffic(n, 5000, 1000, 1000) for n in names))
+        init = PrecisionPolicy.uniform(names, FixedPointFormat(2, 10),
+                                       FixedPointFormat(6, 6))
+        g = greedy_pareto_search(ev, t, init, max_steps=100)
+        s = sensitivity_search(ev, t, init, tolerance=0.01, max_steps=200)
+        gs, ss = g.select(0.01), s.select(0.01)
+        assert ss is not None and gs is not None
+        assert ss.traffic_ratio <= gs.traffic_ratio * 1.15  # within 15%
+        assert s.evaluations < g.evaluations  # and much cheaper
+
+    def test_respects_tolerance(self):
+        names = ("a", "b", "c")
+        ev = synthetic_eval([1.0, 0.3, 0.1])
+        t = TrafficModel(tuple(LayerTraffic(n, 1000, 100, 100) for n in names))
+        init = PrecisionPolicy.uniform(names, FixedPointFormat(2, 10),
+                                       FixedPointFormat(6, 6))
+        res = sensitivity_search(ev, t, init, tolerance=0.05)
+        final = res.trajectory[-1]
+        assert final.accuracy >= res.baseline_accuracy * 0.95

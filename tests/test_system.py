@@ -1,0 +1,111 @@
+"""End-to-end system tests: real training runs, resume-exactness, serving,
+and the paper pipeline (train -> calibrate -> search) in miniature."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import serve as serve_mod
+from repro.launch import train as train_mod
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_train_loss_decreases(tmp_path):
+    log = train_mod.main([
+        "--arch", "xlstm-350m", "--smoke", "--steps", "30",
+        "--batch-size", "4", "--seq-len", "64", "--log-every", "10",
+        "--lr", "3e-3",
+        "--metrics-out", str(tmp_path / "m.json")])
+    assert len(log) == 3
+    assert log[-1]["loss"] < log[0]["loss"]
+    assert np.isfinite(log[-1]["loss"])
+
+
+def test_train_resume_is_exact(tmp_path):
+    """20 straight steps == 10 steps + checkpoint + restore + 10 steps."""
+    args = ["--arch", "deepseek-7b", "--smoke", "--batch-size", "4",
+            "--seq-len", "64", "--log-every", "5", "--lr", "1e-3"]
+    log_a = train_mod.main(args + ["--steps", "20"])
+    ck = str(tmp_path / "ck")
+    train_mod.main(args + ["--steps", "10", "--ckpt-dir", ck,
+                           "--ckpt-interval", "10"])
+    log_b = train_mod.main(args + ["--steps", "20", "--ckpt-dir", ck,
+                                   "--ckpt-interval", "100", "--resume"])
+    la = [r for r in log_a if r["step"] == 20][0]["loss"]
+    lb = [r for r in log_b if r["step"] == 20][0]["loss"]
+    np.testing.assert_allclose(la, lb, rtol=1e-4)
+
+
+def test_train_with_perlayer_quant_and_compression(tmp_path):
+    log = train_mod.main([
+        "--arch", "yi-34b", "--smoke", "--steps", "12", "--batch-size", "4",
+        "--seq-len", "64", "--log-every", "6", "--lr", "1e-3",
+        "--weight-bits", "10", "--data-bits", "12", "--kv-bits", "8",
+        "--int8-moments", "--grad-compress"])
+    assert np.isfinite(log[-1]["loss"])
+    assert log[-1]["loss"] < log[0]["loss"] * 1.5
+
+
+def test_serve_batched_requests():
+    reqs = serve_mod.main([
+        "--arch", "qwen2-72b", "--smoke", "--requests", "6",
+        "--batch-size", "3", "--prompt-len", "6", "--max-new", "5",
+        "--max-len", "64"])
+    assert all(len(r.out) == 5 for r in reqs)
+
+
+def test_serve_quantized_kv_matches_fp_mostly():
+    reqs_fp = serve_mod.main([
+        "--arch", "deepseek-7b", "--smoke", "--requests", "4",
+        "--batch-size", "2", "--prompt-len", "8", "--max-new", "6",
+        "--max-len", "64"])
+    reqs_q8 = serve_mod.main([
+        "--arch", "deepseek-7b", "--smoke", "--requests", "4",
+        "--batch-size", "2", "--prompt-len", "8", "--max-new", "6",
+        "--max-len", "64", "--kv-bits", "8"])
+    # both runs complete with valid token streams; random-init logits are
+    # near-uniform so argmax agreement is a weak signal — require it only
+    # to be non-trivial
+    assert all(len(r.out) == 6 for r in reqs_fp + reqs_q8)
+    agree = np.mean([np.mean(np.asarray(a.out) == np.asarray(b.out))
+                     for a, b in zip(reqs_fp, reqs_q8)])
+    assert agree >= 0.15, agree
+
+
+def test_paper_pipeline_miniature():
+    """The full paper method end-to-end on LeNet at reduced budget:
+    train -> uniform baseline -> greedy search -> TR@10% < 0.5."""
+    from repro.core.fixedpoint import FixedPointFormat
+    from repro.core.policy import PrecisionPolicy
+    from repro.core.search import greedy_pareto_search
+    from repro.data.synthetic import digits_dataset
+    from repro.models.cnn import (LENET, cnn_accuracy, cnn_loss,
+                                  cnn_traffic_model, init_cnn)
+
+    spec = LENET
+    params = init_cnn(jax.random.PRNGKey(0), spec)
+    xs, ys = digits_dataset(1536, seed=0)
+    xv, yv = digits_dataset(384, seed=1)
+    grad = jax.jit(jax.grad(lambda p, b: cnn_loss(p, b, spec)))
+    for i in range(170):
+        sl = slice((i * 64) % 1472, (i * 64) % 1472 + 64)
+        g = grad(params, {"image": jnp.asarray(xs[sl]),
+                          "label": jnp.asarray(ys[sl])})
+        params = jax.tree_util.tree_map(lambda p, g: p - 0.05 * g, params, g)
+    base = cnn_accuracy(params, jnp.asarray(xv), jnp.asarray(yv), spec)
+    assert base > 0.8
+
+    tm = cnn_traffic_model(spec)
+    init = PrecisionPolicy.uniform(spec.layer_names, FixedPointFormat(1, 8),
+                                   FixedPointFormat(8, 2))
+    res = greedy_pareto_search(
+        lambda pol: cnn_accuracy(params, jnp.asarray(xv), jnp.asarray(yv),
+                                 spec, pol),
+        tm, init, baseline_accuracy=base, batch_size=50, max_steps=25)
+    pick = res.select(0.10)
+    assert pick is not None
+    assert pick.traffic_ratio < 0.5  # >2x traffic cut at 10% tolerance
