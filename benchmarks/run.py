@@ -6,6 +6,7 @@
   pareto_search   — paper Fig. 5 / Table 2 (greedy search, TR@1/2/5/10%)
   lm_precision    — beyond-paper: same machinery on a transformer LM
   kernel_bench    — Pallas kernels vs oracles + footprint ratios
+  paged_serve     — paged vs dense KV-cache serving (tok/s, HBM B/token)
   roofline        — EXPERIMENTS.md §Roofline terms from the dry-run JSONs
 
 ``python -m benchmarks.run [--only a,b] [--fast]``
@@ -26,8 +27,8 @@ def main(argv=None):
     import json
     import os
 
-    from . import (kernel_bench, lm_precision, pareto_search, perlayer_sweep,
-                   report, roofline, traffic, uniform_sweep)
+    from . import (kernel_bench, lm_precision, paged_serve, pareto_search,
+                   perlayer_sweep, report, roofline, traffic, uniform_sweep)
 
     nets = ["lenet", "convnet"] if args.fast else None
     stages = {
@@ -38,6 +39,7 @@ def main(argv=None):
         "lm_precision": lambda: lm_precision.run(
             steps=120 if args.fast else 300),
         "kernel_bench": kernel_bench.run,
+        "paged_serve": paged_serve.run,
         "roofline": roofline.run,
     }
     # expensive searches reuse their saved results unless --force

@@ -1,9 +1,14 @@
-"""Serving example: batched continuous-batching decode with an int8
-Q(2,6)-quantized KV cache vs the bf16 baseline.
+"""Serving example: continuous-batching decode with quantized + paged KV.
 
 The KV cache is the dominant decode traffic (paper §2.4's "data" at batch
-scale); per-layer data bits applied to it halve-to-quarter the cache bytes.
-Prints agreement between the two runs and the cache footprint ratio.
+scale). Two levers stack here:
+
+* per-layer data bits (int8 Q(2,6) / int4 Q(2,2)) shrink every stored token,
+* the paged layout (--page-size in launch.serve) allocates cache by pages
+  actually used instead of batch * max_len slabs, and frees them per
+  request.
+
+Prints token agreement between the runs and the cache footprint ratios.
 
 Run:  PYTHONPATH=src python examples/serve_quantized_kv.py
 """
@@ -20,28 +25,45 @@ def cache_bytes(caches):
                for x in jax.tree_util.tree_leaves(caches))
 
 
+def agreement(a_reqs, b_reqs):
+    return np.mean([np.mean(np.asarray(a.out) == np.asarray(b.out))
+                    for a, b in zip(a_reqs, b_reqs)])
+
+
 def main():
     cfg = get_smoke_config("qwen2-72b")
     params = init_model(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(0)
-    mk = lambda: [Request(i, rng.integers(0, cfg.vocab_size, 10)
-                          .astype(np.int32), 12) for i in range(8)]
 
-    print("=== bf16 KV cache ===")
+    def mk():
+        rng = np.random.default_rng(0)
+        return [Request(i, rng.integers(0, cfg.vocab_size, 10)
+                        .astype(np.int32), 12) for i in range(8)]
+
+    print("=== fp32 dense KV cache ===")
     srv_fp = BatchedServer(cfg, params, batch_size=4, max_len=96)
     reqs_fp = srv_fp.run(mk(), verbose=True)
 
-    print("=== int8 Q(2,6) KV cache ===")
-    rng = np.random.default_rng(0)
+    print("=== int8 Q(2,6) dense KV cache ===")
     srv_q8 = BatchedServer(cfg, params, batch_size=4, max_len=96, kv_bits=8)
     reqs_q8 = srv_q8.run(mk(), verbose=True)
 
+    print("=== int4 Q(2,2) paged KV cache (page_size=16) ===")
+    srv_p4 = BatchedServer(cfg, params, batch_size=4, max_len=96, kv_bits=4,
+                           page_size=16, num_pages=1 + 4 * 2)
+    reqs_p4 = srv_p4.run(mk(), verbose=True)
+
     fp_b, q8_b = cache_bytes(srv_fp.caches), cache_bytes(srv_q8.caches)
-    print(f"\ncache footprint: bf16={fp_b / 2**20:.2f} MiB  "
-          f"int8={q8_b / 2**20:.2f} MiB  ratio={q8_b / fp_b:.2f}")
-    agree = np.mean([np.mean(np.asarray(a.out) == np.asarray(b.out))
-                     for a, b in zip(reqs_fp, reqs_q8)])
-    print(f"token agreement fp vs int8-KV: {agree:.1%}")
+    p4_b = cache_bytes(srv_p4.caches)
+    print(f"\ncache footprint: fp32={fp_b / 2**20:.2f} MiB  "
+          f"int8={q8_b / 2**20:.2f} MiB ({q8_b / fp_b:.2f}x)  "
+          f"paged-int4={p4_b / 2**20:.2f} MiB ({p4_b / fp_b:.2f}x; "
+          f"pool sized to live pages, not max_len)")
+    print(f"token agreement fp vs int8-KV:       "
+          f"{agreement(reqs_fp, reqs_q8):.1%}")
+    print(f"token agreement fp vs paged-int4-KV: "
+          f"{agreement(reqs_fp, reqs_p4):.1%}")
+    print(f"pages free after run: {srv_p4.allocator.num_free}/"
+          f"{srv_p4.allocator.num_pages - 1} (all requests released)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,259 @@
+"""Paged quantized KV-cache subsystem (vLLM-style block tables, paper bits).
+
+The dense serving cache allocates ``batch x max_len`` up front, so HBM scales
+with the worst-case request. Here the cache is a **pool of fixed-size pages**
+shared by all sequences; a per-sequence **page table** maps logical token
+positions to pool pages, and pages are allocated/freed per request by a
+host-side free-list allocator. Combined with the paper's reduced-precision
+storage, a page holds its tokens in the quantized container:
+
+* ``container="int8"``  — int8 integer grid (Q(I,F) with I+F <= 8),
+* ``container="int4"``  — 4-bit grid lane-packed into int32 words along the
+  head dim via :func:`repro.core.qtensor.pack_bits` (true N/32 footprint),
+* ``container="fp"``    — unquantized pages in the compute dtype (kv_bits=0).
+
+Each page additionally carries a **per-page dequant scale** (value = grid *
+scale). With a per-layer Q(I,F) policy the scale is uniform across pages of a
+layer (2^-F), but the storage/kernels are per-page so calibrated or dynamic
+per-page scaling drops in without a layout change.
+
+Page 0 is **reserved as a scratch page**: idle batch slots keep writing their
+stale token somewhere, and pointing their page-table rows at page 0 keeps
+those writes off live data. The allocator therefore never hands out page 0.
+
+Device-side ops here are pure jnp (scatter/gather) and serve as the oracle
+for the Pallas kernel in ``repro.kernels.paged_kv_attention``, which gathers
+pages via scalar-prefetch DMA and dequantizes in VMEM. The serving
+integration (``models.attention.gqa_apply``) currently attends through the
+jnp gather path — that keeps paged decoding bitwise-identical to the dense
+layout (same online-softmax chunk order), which the equivalence tests rely
+on; routing TPU decode through the kernel (different, per-page accumulation
+order) is a ROADMAP item.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fixedpoint import format_params
+from .qtensor import pack_bits, unpack_bits, values_per_word
+
+SCRATCH_PAGE = 0
+
+_CONTAINERS = ("int8", "int4", "fp")
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheSpec:
+    """What a model needs to know to build paged caches: pool geometry.
+
+    ``num_pages`` includes the reserved scratch page 0. Every attention layer
+    gets its own pool of this geometry (layers see the same page table, so
+    one host-side allocator serves the whole model).
+    """
+
+    page_size: int
+    num_pages: int
+
+    def __post_init__(self):
+        if self.page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        if self.num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is scratch)")
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVLayout:
+    """Static shape/dtype description of one layer's paged KV pool."""
+
+    num_pages: int          # pool pages, including the reserved scratch page
+    page_size: int          # tokens per page
+    num_kv_heads: int
+    head_dim: int
+    container: str = "int8"
+    dtype: object = jnp.float32  # compute/storage dtype for container="fp"
+
+    def __post_init__(self):
+        if self.container not in _CONTAINERS:
+            raise ValueError(f"container must be one of {_CONTAINERS}, "
+                             f"got {self.container!r}")
+        if self.container == "int4" and self.head_dim % values_per_word(4):
+            raise ValueError("int4 packing needs head_dim % 8 == 0, got "
+                             f"{self.head_dim}")
+        if self.num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is scratch)")
+
+    @property
+    def bits(self) -> int:
+        return {"int8": 8, "int4": 4}.get(self.container, 0)
+
+    @property
+    def store_head_dim(self) -> int:
+        """Last-dim extent of the stored page (packed for int4)."""
+        if self.container == "int4":
+            return self.head_dim // values_per_word(4)
+        return self.head_dim
+
+    @property
+    def store_dtype(self):
+        return {"int8": jnp.int8, "int4": jnp.int32,
+                "fp": self.dtype}[self.container]
+
+    @property
+    def page_bytes(self) -> int:
+        """Stored bytes of ONE page of ONE of k/v (scales excluded)."""
+        itemsize = jnp.dtype(self.store_dtype).itemsize
+        return (self.page_size * self.num_kv_heads * self.store_head_dim
+                * itemsize)
+
+    def tokens_to_pages(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)
+
+
+def max_pages_per_seq(max_len: int, page_size: int) -> int:
+    return -(-max_len // page_size)
+
+
+# ---------------------------------------------------------------------------
+# Host-side page allocator
+# ---------------------------------------------------------------------------
+class PageAllocator:
+    """Free-list allocator over pool pages 1..num_pages-1 (0 is scratch).
+
+    Pure host-side bookkeeping: the device pool is preallocated; "allocating"
+    a page just hands out an index. Fragmentation is free — any page serves
+    any (sequence, logical-block) slot via the page table.
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is scratch)")
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError(
+                "KV page pool exhausted; raise --num-pages or lower load")
+        return self._free.pop()
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if not (0 < p < self.num_pages):
+                raise ValueError(f"freeing invalid page id {p}")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
+            self._free.append(p)
+
+
+# ---------------------------------------------------------------------------
+# Device-side pool ops (pure jnp; oracle for the Pallas kernel)
+# ---------------------------------------------------------------------------
+def init_paged_pool(layout: PagedKVLayout) -> Dict[str, jnp.ndarray]:
+    """One layer's paged pool: k/v pages + per-page dequant scales."""
+    shape = (layout.num_pages, layout.page_size, layout.num_kv_heads,
+             layout.store_head_dim)
+    return {
+        "k_pages": jnp.zeros(shape, layout.store_dtype),
+        "v_pages": jnp.zeros(shape, layout.store_dtype),
+        "k_scale": jnp.ones((layout.num_pages,), jnp.float32),
+        "v_scale": jnp.ones((layout.num_pages,), jnp.float32),
+    }
+
+
+def _quant_grid(x, int_bits, frac_bits):
+    """float (..., hd) -> (integer grid float array, reciprocal scale)."""
+    scale, qmin, qmax = format_params(int_bits, frac_bits)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) * scale), qmin, qmax)
+    return q, 1.0 / scale
+
+
+def _pack_grid(q, bits):
+    packed, _ = pack_bits(q.astype(jnp.int32), bits)
+    return packed
+
+
+def paged_update(pool, k_new, v_new, page_table, pos, *, page_size: int,
+                 container: str = "int8", int_bits=None, frac_bits=None):
+    """Append S new tokens per sequence to the paged pool.
+
+    k_new/v_new: (B, S, KV, hd) float; page_table: (B, NP) int32;
+    pos: scalar or (B,) int32 — the logical position of the FIRST new token
+    per sequence. Returns the updated pool dict.
+
+    Distinct sequences must map to distinct pages (the allocator guarantees
+    it), so the scatter is collision-free except on the shared scratch page,
+    where any write order is acceptable.
+    """
+    B, S = k_new.shape[0], k_new.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    blocks = positions // page_size                       # (B, S)
+    offsets = positions % page_size                       # (B, S)
+    pids = jnp.take_along_axis(page_table, blocks, axis=1)  # (B, S)
+
+    if container == "fp":
+        k_q, v_q = k_new, v_new
+        new = {
+            "k_pages": pool["k_pages"].at[pids, offsets].set(
+                k_q.astype(pool["k_pages"].dtype)),
+            "v_pages": pool["v_pages"].at[pids, offsets].set(
+                v_q.astype(pool["v_pages"].dtype)),
+            "k_scale": pool["k_scale"],
+            "v_scale": pool["v_scale"],
+        }
+        return new
+
+    k_q, rscale = _quant_grid(k_new, int_bits, frac_bits)
+    v_q, _ = _quant_grid(v_new, int_bits, frac_bits)
+    if container == "int4":
+        k_q, v_q = _pack_grid(k_q, 4), _pack_grid(v_q, 4)
+    sc = jnp.broadcast_to(jnp.asarray(rscale, jnp.float32), pids.shape)
+    return {
+        "k_pages": pool["k_pages"].at[pids, offsets].set(
+            k_q.astype(pool["k_pages"].dtype)),
+        "v_pages": pool["v_pages"].at[pids, offsets].set(
+            v_q.astype(pool["v_pages"].dtype)),
+        "k_scale": pool["k_scale"].at[pids].set(sc),
+        "v_scale": pool["v_scale"].at[pids].set(sc),
+    }
+
+
+def paged_gather(pool, page_table, *, container: str = "int8",
+                 head_dim: Optional[int] = None, dtype=jnp.float32):
+    """Materialize the logical dense cache view (B, NP*ps, KV, hd) in float.
+
+    Gathers each sequence's pages and dequantizes with the per-page scales.
+    This is the oracle/integration path — the Pallas kernel does the same
+    gather page-by-page in VMEM without ever materializing the dense view.
+    """
+    kg = pool["k_pages"][page_table]      # (B, NP, ps, KV, hdw)
+    vg = pool["v_pages"][page_table]
+    ks = pool["k_scale"][page_table]      # (B, NP)
+    vs = pool["v_scale"][page_table]
+    B, NP, ps, KV = kg.shape[:4]
+
+    if container == "int4":
+        assert head_dim is not None
+        kg = unpack_bits(kg, 4, head_dim)
+        vg = unpack_bits(vg, 4, head_dim)
+    # per-page scales apply to every container; float-page writers keep
+    # their scales at 1.0
+    k = (kg.astype(jnp.float32) * ks[:, :, None, None, None]).astype(dtype)
+    v = (vg.astype(jnp.float32) * vs[:, :, None, None, None]).astype(dtype)
+    hd = k.shape[-1]
+    return (k.reshape(B, NP * ps, KV, hd), v.reshape(B, NP * ps, KV, hd))
+
+
+def pool_bytes(pool) -> int:
+    """True stored bytes of one layer's pool (pages + scales)."""
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+               for a in jax.tree_util.tree_leaves(pool))

@@ -1,16 +1,12 @@
-"""Pallas kernel: GQA decode attention over an int8-quantized KV cache.
+"""Dense int8 KV-cache decode attention — thin wrapper over the paged kernel.
 
-The dominant decode traffic is the KV-history read (paper §2.4's "data
-dominates batch processing", 2026 edition). This kernel reads the cache in
-its Q(I,F) int8 container, dequantizes chunk-by-chunk in VMEM, and runs
-online softmax — the cache never exists dequantized in HBM, so HBM bytes are
-truly ~4x smaller than an fp32 cache (2x vs bf16).
-
-Layout: q (B, KV, G, hd) fp32, cache (B, T, KV, hd) int8.
-Grid (B, KV, T/bt), T innermost sequential; the (m, l, acc) online-softmax
-state lives in VMEM scratch and carries across T steps. Tile sizes:
-k/v (bt=512, hd=128) int8 = 64 KB each; hd=128 lanes MXU/VPU aligned.
-kv_len rides in SMEM, masking the tail tile.
+The original standalone Pallas kernel was absorbed into
+``paged_kv_attention.py``: a contiguous (B, T, KV, hd) cache is just the
+special case of a paged pool whose page table is the identity mapping
+(sequence b's page p is pool page b * NP + p) and whose per-page scales are
+all the layer's Q(I,F) scale 2^-F. Tile size ``block_t`` becomes the page
+size, so the VMEM working set and the online-softmax loop structure are
+unchanged from the old kernel.
 """
 from __future__ import annotations
 
@@ -18,44 +14,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
-
-
-def _kv_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
-                    m_ref, l_ref, acc_ref, *, nt, bt, kv_scale, sm_scale):
-    t = pl.program_id(2)
-
-    @pl.when(t == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    q = q_ref[0, 0].astype(jnp.float32) * sm_scale          # (G, hd)
-    k = k_ref[0, :, 0].astype(jnp.float32) * kv_scale       # (bt, hd)
-    v = v_ref[0, :, 0].astype(jnp.float32) * kv_scale       # (bt, hd)
-
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (G, bt)
-    pos = t * bt + jax.lax.broadcasted_iota(jnp.int32, (1, bt), 1)
-    s = jnp.where(pos < len_ref[0], s, NEG_INF)
-
-    m_prev = m_ref[...]                                      # (G, 1)
-    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
-    p = jnp.exp(s - m_new)                                   # (G, bt)
-    corr = jnp.exp(m_prev - m_new)                           # (G, 1)
-    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * corr + \
-        jnp.dot(p, v, preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
-
-    @pl.when(t == nt - 1)
-    def _fin():
-        o_ref[0, 0] = (acc_ref[...] /
-                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+from .paged_kv_attention import paged_kv_attention_decode
 
 
 @functools.partial(jax.jit, static_argnames=("int_bits", "frac_bits",
@@ -65,38 +25,20 @@ def kv_attention_decode(q, k_q, v_q, kv_len, *, int_bits: int,
                         interpret: bool = False):
     """q: (B, H, hd) float; k_q/v_q: (B, T, KV, hd) int8 Q(I,F) grid;
     kv_len: scalar int32. Returns (B, H, hd) float32."""
+    del int_bits  # range already encoded in the stored grid
     B, H, hd = q.shape
     T, KV = k_q.shape[1], k_q.shape[2]
-    G = H // KV
-    bt = min(block_t, T)
-    pt = (-T) % bt
+    ps = min(block_t, T)
+    pt = (-T) % ps
     if pt:
         k_q = jnp.pad(k_q, ((0, 0), (0, pt), (0, 0), (0, 0)))
         v_q = jnp.pad(v_q, ((0, 0), (0, pt), (0, 0), (0, 0)))
-    Tp = k_q.shape[1]
-    nt = Tp // bt
-    qg = q.reshape(B, KV, G, hd)
-    kv_scale = float(2.0 ** -frac_bits)
-    sm_scale = float(1.0 / np.sqrt(hd))
-    len_arr = jnp.asarray(kv_len, jnp.int32).reshape(1)
-
-    out = pl.pallas_call(
-        functools.partial(_kv_attn_kernel, nt=nt, bt=bt, kv_scale=kv_scale,
-                          sm_scale=sm_scale),
-        grid=(B, KV, nt),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),   # kv_len scalar
-            pl.BlockSpec((1, 1, G, hd), lambda b, k, t: (b, k, 0, 0)),
-            pl.BlockSpec((1, bt, 1, hd), lambda b, k, t: (b, t, k, 0)),
-            pl.BlockSpec((1, bt, 1, hd), lambda b, k, t: (b, t, k, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, k, t: (b, k, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
-        scratch_shapes=[
-            pltpu.VMEM((G, 1), jnp.float32),    # m
-            pltpu.VMEM((G, 1), jnp.float32),    # l
-            pltpu.VMEM((G, hd), jnp.float32),   # acc
-        ],
-        interpret=interpret,
-    )(len_arr, qg, k_q, v_q)
-    return out.reshape(B, H, hd)
+    NP = k_q.shape[1] // ps
+    k_pages = k_q.reshape(B * NP, ps, KV, hd)
+    v_pages = v_q.reshape(B * NP, ps, KV, hd)
+    page_table = jnp.arange(B * NP, dtype=jnp.int32).reshape(B, NP)
+    scale = jnp.full((B * NP,), 2.0 ** -frac_bits, jnp.float32)
+    lens = jnp.full((B,), jnp.asarray(kv_len, jnp.int32))
+    return paged_kv_attention_decode(
+        q, k_pages, v_pages, scale, scale, page_table, lens, bits=8,
+        interpret=interpret)

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .kv_attention import kv_attention_decode
+from .paged_kv_attention import paged_kv_attention_decode
 from .pack import pack_2d, unpack_2d, values_per_word
 from .quant_cast import quant_cast_2d
 from .quant_matmul import quant_matmul
@@ -62,4 +63,16 @@ def kv_attention(q, k_q, v_q, kv_len, *, int_bits: int, frac_bits: int,
                                interpret=interpret)
 
 
-__all__ = ["quant_cast", "pack", "unpack", "qmatmul", "kv_attention", "ref"]
+def paged_kv_attention(q, k_pages, v_pages, k_scale, v_scale, page_table,
+                       kv_len, *, bits: int = 8, interpret=None):
+    """Decode attention over a paged quantized KV pool (see
+    kernels.paged_kv_attention for shapes). bits: 8 (int8 pages), 4
+    (int32 lane-packed pages) or 0 (float pages)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return paged_kv_attention_decode(q, k_pages, v_pages, k_scale, v_scale,
+                                     page_table, kv_len, bits=bits,
+                                     interpret=interpret)
+
+
+__all__ = ["quant_cast", "pack", "unpack", "qmatmul", "kv_attention",
+           "paged_kv_attention", "ref"]

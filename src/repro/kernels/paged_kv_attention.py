@@ -1,0 +1,142 @@
+"""Pallas kernel: GQA decode attention over a paged, quantized KV cache.
+
+Generalizes ``kv_attention.py``'s dense int8 kernel to the paged pool of
+``repro.core.paged_kv``: KV history lives in fixed-size pages scattered
+through a shared pool, each page stored in its quantized container (int8
+grid, or a 4-bit grid lane-packed into int32 words along the head dim) with a
+per-page dequant scale. The dense kernel is now a thin wrapper that builds an
+identity page table (see ``kv_attention.py``).
+
+Reachable via ``ops.paged_kv_attention`` (oracle-verified in
+tests/test_kernels.py); the serving forward currently uses the equivalent
+jnp gather path in ``core.paged_kv`` to stay bitwise-identical to the dense
+cache — see the ROADMAP item on routing TPU decode through this kernel.
+
+The page table and per-sequence lengths ride as **scalar-prefetch** operands
+(`pltpu.PrefetchScalarGridSpec`): the BlockSpec index maps read
+``page_table[b, p]`` to pick which pool page the next DMA fetches, so the
+gather happens in the pipeline, not the kernel body — the standard TPU paged
+attention pattern. In VMEM each page is unpacked (for sub-byte containers),
+dequantized by its page scale, and folded into the online-softmax state.
+
+Grid (B, KV, NP), NP innermost sequential; (m, l, acc) scratch carries
+across pages. Unused page-table entries must point at a valid pool page
+(page 0 / scratch) — their positions are masked by ``kv_len``. ``kv_len``
+must be >= 1 per row, else the masked softmax degenerates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.qtensor import unpack_bits
+
+NEG_INF = -1e30
+
+
+def _dequant(x, scale, *, bits, head_dim):
+    """(ps, hdw) stored page -> (ps, head_dim) f32 values.
+
+    Shares the lane-unpack convention with core.qtensor (pure jnp right
+    shifts, safe on TPU) so kernel == container == oracle. The per-page
+    scale applies to every container, float pages included (writers keep
+    their scales at 1.0)."""
+    if 0 < bits < 8:
+        x = unpack_bits(x, bits, head_dim)
+    return x.astype(jnp.float32) * scale
+
+
+def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                  o_ref, m_ref, l_ref, acc_ref, *, np_, ps, bits, head_dim,
+                  sm_scale):
+    b, p = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale               # (G, hd)
+    k = _dequant(k_ref[0, :, 0], ks_ref[0, 0], bits=bits,
+                 head_dim=head_dim)                              # (ps, hd)
+    v = _dequant(v_ref[0, :, 0], vs_ref[0, 0], bits=bits,
+                 head_dim=head_dim)                              # (ps, hd)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)      # (G, ps)
+    pos = p * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+    s = jnp.where(pos < len_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]                                          # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    pexp = jnp.exp(s - m_new)                                    # (G, ps)
+    corr = jnp.exp(m_prev - m_new)                               # (G, 1)
+    l_ref[...] = l_ref[...] * corr + pexp.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + \
+        jnp.dot(pexp, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(p == np_ - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def paged_kv_attention_decode(q, k_pages, v_pages, k_scale, v_scale,
+                              page_table, kv_len, *, bits: int = 8,
+                              interpret: bool = False):
+    """Decode attention over a paged quantized KV pool.
+
+    q: (B, H, hd) float — one new token per sequence.
+    k_pages/v_pages: (P, ps, KV, hdw) — int8 grid (bits=8), int32 lane-packed
+        words with hdw = hd * bits / 32 (bits < 8), or float (bits=0).
+    k_scale/v_scale: (P,) f32 per-page dequant scales (value = grid * scale).
+    page_table: (B, NP) int32 pool-page ids; unused entries must reference a
+        valid page (use the scratch page 0).
+    kv_len: (B,) int32 valid history length per sequence (>= 1).
+    Returns (B, H, hd) float32.
+    """
+    B, H, hd = q.shape
+    P, ps, KV, hdw = k_pages.shape
+    NP = page_table.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    sm_scale = float(1.0 / np.sqrt(hd))
+    pt = jnp.asarray(page_table, jnp.int32)
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (B,))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,            # page_table, kv_len
+        grid=(B, KV, NP),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, k, p, pt, ln: (b, k, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hdw),
+                         lambda b, k, p, pt, ln: (pt[b, p], 0, k, 0)),
+            pl.BlockSpec((1, ps, 1, hdw),
+                         lambda b, k, p, pt, ln: (pt[b, p], 0, k, 0)),
+            pl.BlockSpec((1, 1), lambda b, k, p, pt, ln: (pt[b, p], 0)),
+            pl.BlockSpec((1, 1), lambda b, k, p, pt, ln: (pt[b, p], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, k, p, pt, ln: (b, k, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),    # m
+            pltpu.VMEM((G, 1), jnp.float32),    # l
+            pltpu.VMEM((G, hd), jnp.float32),   # acc
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, np_=NP, ps=ps, bits=bits,
+                          head_dim=hd, sm_scale=sm_scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+        interpret=interpret,
+    )(pt, lens, qg, k_pages, v_pages,
+      k_scale.reshape(P, 1), v_scale.reshape(P, 1))
+    return out.reshape(B, H, hd)

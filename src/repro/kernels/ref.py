@@ -72,20 +72,45 @@ def quant_matmul_ref(a, wq, scales):
 # ---------------------------------------------------------------------------
 # Decode attention over an int8-quantized KV cache (per-layer Q(I,F)).
 # ---------------------------------------------------------------------------
+def masked_decode_attention_ref(q, k, v, kv_len):
+    """Full-materialization decode attention. q: (B, H, hd); k/v:
+    (B, T, KV, hd) float; kv_len: (B,) or scalar. Returns (B, H, hd) f32."""
+    B, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32) / np.sqrt(hd)
+    s = jnp.einsum("bkgh,btkh->bkgt", qg, k.astype(jnp.float32))
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (B,))
+    mask = jnp.arange(T)[None, None, None, :] < lens[:, None, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkh->bkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, H, hd)
+
+
+def paged_kv_attention_ref(q, k_pages, v_pages, k_scale, v_scale, page_table,
+                           kv_len, *, bits: int = 8, head_dim=None):
+    """Oracle for the paged kernel: gather pages into the logical dense view,
+    dequantize with the per-page scales, run masked softmax attention.
+
+    Shapes as in ``paged_kv_attention_decode``; supports fragmented page
+    tables and per-row kv_len (partial last pages are masked).
+    """
+    from ..core.paged_kv import paged_gather
+    container = {0: "fp", 8: "int8", 4: "int4"}[bits]
+    pool = {"k_pages": k_pages, "v_pages": v_pages,
+            "k_scale": k_scale, "v_scale": v_scale}
+    hd = head_dim if head_dim is not None else q.shape[-1]
+    k, v = paged_gather(pool, jnp.asarray(page_table, jnp.int32),
+                        container=container, head_dim=hd)
+    return masked_decode_attention_ref(q, k, v, kv_len)
+
+
 def kv_attention_ref(q, k_q, v_q, int_bits, frac_bits, kv_len):
     """q: (B, H, hd) float; k_q/v_q: (B, T, KV, hd) int8 grid; kv_len: int.
     GQA decode: one new token attends to the first kv_len cache entries.
     Returns (B, H, hd) float32."""
-    B, H, hd = q.shape
-    T, KV = k_q.shape[1], k_q.shape[2]
-    G = H // KV
     scale, _, _ = format_params(int_bits, frac_bits)
     k = k_q.astype(jnp.float32) / scale
     v = v_q.astype(jnp.float32) / scale
-    qg = q.reshape(B, KV, G, hd).astype(jnp.float32) / np.sqrt(hd)
-    s = jnp.einsum("bkgh,btkh->bkgt", qg, k)
-    mask = jnp.arange(T)[None, None, None, :] < kv_len
-    s = jnp.where(mask, s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgt,btkh->bkgh", p, v)
-    return o.reshape(B, H, hd)
+    return masked_decode_attention_ref(q, k, v, kv_len)

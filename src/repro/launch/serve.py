@@ -1,15 +1,31 @@
 """Batched serving launcher: continuous-batching prefill + decode with an
-optionally quantized KV cache (the paper's per-layer data bits where they
-matter most — decode reads the whole cache every token).
+optionally quantized, optionally **paged** KV cache.
 
 A REQUEST = (prompt token ids, max_new_tokens). The server packs up to
---batch-size requests into one cache, prefills the longest-prompt-padded
-batch, then decodes step-by-step; finished rows are refilled from the queue
-(continuous batching at step granularity).
+--batch-size requests into fixed slots and decodes step-by-step with
+**per-slot positions**: each slot tracks its own length, finished slots are
+refilled from the queue (continuous batching at step granularity), and idle
+slots harmlessly rewrite a scratch location.
 
-CPU demo:
+Two cache layouts:
+
+* dense (default): one (batch, max_len, ...) slab per layer — HBM scales
+  with the worst-case request even for short traffic.
+* paged (--page-size N): per-layer page pools + a per-slot page table
+  (core.paged_kv). Pages are allocated as a request grows and freed when it
+  completes, so cache HBM scales with live tokens, not max_len. KV bits
+  apply inside the page container: --kv-bits 8 stores int8 pages, --kv-bits
+  4 lane-packs a 4-bit grid into int32 words (~8x smaller at rest than
+  fp32). --num-pages sizes the shared pool (default: full capacity).
+
+CPU demos:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
       --requests 12 --batch-size 4 --max-new 24 --kv-bits 8
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
+      --requests 12 --batch-size 4 --max-new 24 --kv-bits 4 --page-size 16
+
+Bench (tokens/sec + HBM bytes/token, dense vs paged int8 vs paged int4):
+  PYTHONPATH=src python -m benchmarks.run paged_serve
 """
 from __future__ import annotations
 
@@ -24,6 +40,8 @@ import numpy as np
 
 from ..configs.registry import get_config, get_smoke_config
 from ..core.fixedpoint import FixedPointFormat
+from ..core.paged_kv import (SCRATCH_PAGE, PageAllocator, PagedCacheSpec,
+                             max_pages_per_seq)
 from ..core.policy import PrecisionPolicy
 from ..models.transformer import init_cache, init_model
 from ..quant.apply import build_model_quant, transformer_layer_names
@@ -40,75 +58,141 @@ class Request:
 
 
 class BatchedServer:
-    """Fixed-slot continuous batching over a single shared cache buffer."""
+    """Fixed-slot continuous batching with per-slot positions.
+
+    Invariant per occupied slot i: cache positions [0, pos[i]) hold the KV
+    of the request's consumed tokens and ``tokens[i]`` is the next token to
+    consume (last prompt token after prefill, last generated token after).
+    Free slots sit at pos 0 with their page-table row parked on the scratch
+    page, so the shared decode step can run them without corrupting live
+    data.
+    """
 
     def __init__(self, cfg, params, *, batch_size: int, max_len: int,
-                 kv_bits: int = 0, seed: int = 0):
+                 kv_bits: int = 0, page_size: int = 0,
+                 num_pages: Optional[int] = None, seed: int = 0):
         self.cfg = cfg
         self.params = params
         self.B = batch_size
         self.max_len = max_len
+        self.paged = page_size > 0
+        if self.paged and cfg.attention_type == "mla":
+            raise NotImplementedError("paged KV serving supports GQA archs")
         self.quant = None
         if kv_bits:
+            container = "int4" if (self.paged and kv_bits <= 4) else "int8"
             names = transformer_layer_names(cfg)
             pol = PrecisionPolicy.uniform(
                 names, None, FixedPointFormat(2, kv_bits - 2))
             self.quant = build_model_quant(pol, cfg, quantize_kv=True,
-                                           quantize_activations=False)
+                                           quantize_activations=False,
+                                           kv_container=container)
         self.decode = jax.jit(make_decode_step(cfg, quant=self.quant))
-        # one shared cache; per-slot write positions ride in `pos` per step.
-        # Slots are synchronized to a common step clock (pos = max fill);
-        # per-slot masks keep shorter prompts correct via left-padding.
-        self.caches = init_cache(cfg, batch_size, max_len, self.quant)
+
+        paged_spec = None
+        if self.paged:
+            self.np_max = max_pages_per_seq(max_len, page_size)
+            if num_pages is None:
+                num_pages = 1 + batch_size * self.np_max  # full capacity
+            paged_spec = PagedCacheSpec(page_size=page_size,
+                                        num_pages=num_pages)
+            self.allocator = PageAllocator(num_pages)
+            self.page_size = page_size
+            self.page_table = np.full((batch_size, self.np_max),
+                                      SCRATCH_PAGE, np.int32)
+            self.slot_pages: List[List[int]] = [[] for _ in range(batch_size)]
+        self.caches = init_cache(cfg, batch_size, max_len, self.quant,
+                                 paged=paged_spec)
         self.slots: List[Optional[Request]] = [None] * batch_size
-        self.pos = 0
+        self.pos = np.zeros((batch_size,), np.int32)
         self.tokens = jnp.zeros((batch_size,), jnp.int32)
 
+    # -- page bookkeeping ---------------------------------------------------
+    def _ensure_page(self, slot: int, position: int):
+        """Allocate pages so logical ``position`` of ``slot`` is backed."""
+        blk = position // self.page_size
+        while len(self.slot_pages[slot]) <= blk:
+            page = self.allocator.alloc()
+            self.page_table[slot, len(self.slot_pages[slot])] = page
+            self.slot_pages[slot].append(page)
+
+    def _release_slot(self, slot: int):
+        if self.paged and self.slot_pages[slot]:
+            self.allocator.free(self.slot_pages[slot])
+            self.slot_pages[slot] = []
+            self.page_table[slot, :] = SCRATCH_PAGE
+        self.pos[slot] = 0
+
+    # -- decode -------------------------------------------------------------
+    def _step(self):
+        pt = jnp.asarray(self.page_table) if self.paged else None
+        nxt, logits, self.caches = self.decode(
+            self.params, self.tokens, jnp.asarray(self.pos), self.caches, pt)
+        return nxt
+
     def _prefill_slot(self, slot: int, req: Request):
-        """Feed the prompt through decode steps (slot-granular prefill keeps
-        one compiled program; a production server would use a bucketed
-        prefill jit — see launch.steps.make_prefill_step)."""
-        for t in req.prompt:
-            tok = self.tokens.at[slot].set(int(t))
-            nxt, _, self.caches = self.decode(
-                self.params, tok, jnp.int32(self.pos), self.caches)
-            self.tokens = tok
-            self.pos += 1
+        """Feed prompt[:-1] through shared decode steps, leaving the last
+        prompt token in ``tokens`` for the run loop to consume (slot-granular
+        prefill keeps one compiled program; a production server would use a
+        bucketed prefill jit — see launch.steps.make_prefill_step). Other
+        slots do not advance: they rewrite their current position with
+        identical values."""
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.rid} has an empty prompt")
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(f"request {req.rid} prompt length "
+                             f"{len(req.prompt)} >= max_len {self.max_len}")
+        self.pos[slot] = 0
+        for t in req.prompt[:-1]:
+            if self.paged:
+                self._ensure_page(slot, int(self.pos[slot]))
+            self.tokens = self.tokens.at[slot].set(int(t))
+            self._step()
+            self.pos[slot] += 1
+        self.tokens = self.tokens.at[slot].set(int(req.prompt[-1]))
 
     def run(self, requests: List[Request], *, verbose: bool = False):
         queue = list(requests)
-        active: List[Request] = []
         t0 = time.time()
         steps = 0
-        while queue or any(not r.done for r in active):
-            # fill free slots
+        gen_tokens = 0
+        while queue or any(s is not None for s in self.slots):
             for i in range(self.B):
                 if self.slots[i] is None and queue:
                     req = queue.pop(0)
                     self._prefill_slot(i, req)
                     self.slots[i] = req
-                    active.append(req)
-            # one decode step for all slots
-            nxt, _, self.caches = self.decode(
-                self.params, self.tokens, jnp.int32(self.pos), self.caches)
-            self.pos += 1
+            if self.paged:
+                for i in range(self.B):
+                    if self.slots[i] is not None:
+                        self._ensure_page(i, int(self.pos[i]))
+            nxt = self._step()
             steps += 1
-            nxt_np = np.asarray(nxt)
-            self.tokens = nxt
+            nxt_np = np.array(nxt)
+            keep = np.asarray(self.tokens)
             for i in range(self.B):
                 req = self.slots[i]
                 if req is None:
+                    nxt_np[i] = keep[i]     # idle slots hold their token
                     continue
                 req.out.append(int(nxt_np[i]))
-                if len(req.out) >= req.max_new or self.pos >= self.max_len - 1:
+                gen_tokens += 1
+                self.pos[i] += 1
+                if (len(req.out) >= req.max_new
+                        or self.pos[i] >= self.max_len - 1):
                     req.done = True
                     self.slots[i] = None
-            if self.pos >= self.max_len - 1:
-                break
+                    self._release_slot(i)
+            self.tokens = jnp.asarray(nxt_np)
         dt = time.time() - t0
         if verbose:
+            layout = (f"paged ps={self.page_size} "
+                      f"free={self.allocator.num_free}"
+                      if self.paged else "dense")
             print(f"[serve] {steps} decode steps, {len(requests)} requests, "
-                  f"{steps * self.B / max(dt, 1e-9):,.1f} tok-slots/s")
+                  f"{gen_tokens / max(dt, 1e-9):,.1f} tok/s "
+                  f"({steps * self.B / max(dt, 1e-9):,.1f} tok-slots/s, "
+                  f"{layout})")
         return requests
 
 
@@ -121,7 +205,13 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--kv-bits", type=int, default=0)
+    ap.add_argument("--kv-bits", type=int, default=0,
+                    help="0=fp cache, 8=int8 pages/grid, 4=int4 "
+                         "(lane-packed when --page-size > 0)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="tokens per KV page; 0 = dense max_len cache")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="shared pool pages (0 = full capacity)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -135,7 +225,9 @@ def main(argv=None):
                     args.max_new)
             for i in range(args.requests)]
     srv = BatchedServer(cfg, params, batch_size=args.batch_size,
-                        max_len=args.max_len, kv_bits=args.kv_bits)
+                        max_len=args.max_len, kv_bits=args.kv_bits,
+                        page_size=args.page_size,
+                        num_pages=args.num_pages or None)
     srv.run(reqs, verbose=True)
     for r in reqs[:4]:
         print(f"  req {r.rid}: {len(r.out)} tokens -> {r.out[:8]}...")

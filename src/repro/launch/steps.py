@@ -77,15 +77,19 @@ def make_prefill_step(cfg, *, max_len: int, quant=None):
 
 
 def make_decode_step(cfg, *, quant=None, greedy: bool = True):
-    """fn(params, tokens (B,), pos, caches) -> (next_tokens, logits, caches).
+    """fn(params, tokens (B,), pos, caches, page_table=None) ->
+    (next_tokens, logits, caches).
 
     One new token per sequence against a preallocated cache — the function
-    the decode_32k / long_500k cells lower."""
+    the decode_32k / long_500k cells lower. ``pos`` is a scalar (shared
+    clock) or (B,) per-sequence lengths; ``page_table`` (B, NP) drives a
+    paged cache (see core.paged_kv)."""
 
-    def step(params, tokens, pos, caches):
+    def step(params, tokens, pos, caches, page_table=None):
         batch = {"tokens": tokens[:, None]}
         _, logits, caches, _ = forward(params, batch, cfg, quant=quant,
-                                       caches=caches, cache_pos=pos)
+                                       caches=caches, cache_pos=pos,
+                                       page_table=page_table)
         logits = logits[:, 0]
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return nxt, logits, caches

@@ -24,10 +24,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.fixedpoint import format_params
+from ..core.paged_kv import (PagedKVLayout, init_paged_pool, paged_gather,
+                             paged_update)
 from ..parallel.hints import constrain
 from .common import apply_mrope, apply_rope, dense_init, init_rmsnorm, rmsnorm
 
 NEG_INF = -1e30
+
+
+def _len_col(kv_len, ndim):
+    """kv_len (scalar or (B,)) -> broadcastable (B|1, 1, ..) column for
+    masking a trailing KV-position axis."""
+    return jnp.asarray(kv_len).reshape((-1,) + (1,) * (ndim - 1))
 
 
 # ---------------------------------------------------------------------------
@@ -43,6 +51,10 @@ class KVQuantSpec:
 
     @property
     def dtype(self):
+        if self.container == "int4":
+            raise ValueError("int4 KV container requires a paged cache "
+                             "(lane-packed pages); dense caches support "
+                             "int8/int16")
         return {"int8": jnp.int8, "int16": jnp.int16}[self.container]
 
 
@@ -51,6 +63,16 @@ def init_kv_cache(batch, max_len, n_kv, head_dim, dtype,
     store = quant.dtype if quant is not None else dtype
     shape = (batch, max_len, n_kv, head_dim)
     return {"k": jnp.zeros(shape, store), "v": jnp.zeros(shape, store)}
+
+
+def init_paged_kv_cache(num_pages, page_size, n_kv, head_dim, dtype,
+                        quant: Optional[KVQuantSpec] = None):
+    """Paged pool for one GQA layer (no batch dim — pages are shared)."""
+    layout = PagedKVLayout(
+        num_pages=num_pages, page_size=page_size, num_kv_heads=n_kv,
+        head_dim=head_dim,
+        container="fp" if quant is None else quant.container, dtype=dtype)
+    return init_paged_pool(layout)
 
 
 def _q_store(x, quant: Optional[KVQuantSpec]):
@@ -68,13 +90,50 @@ def _q_load(x, quant: Optional[KVQuantSpec], dtype):
     return (x.astype(jnp.float32) / scale).astype(dtype)
 
 
+def seq_update(buf, new, pos):
+    """Write ``new`` (B, S, ...) into ``buf`` (B, T, ...) at token offset
+    ``pos`` — scalar (shared clock) or (B,) per-row offsets."""
+    if jnp.ndim(pos) == 0:
+        return jax.lax.dynamic_update_slice_in_dim(buf, new, pos, 1)
+    return jax.vmap(
+        lambda b, n, p: jax.lax.dynamic_update_slice_in_dim(b, n, p, 0)
+    )(buf, new, jnp.asarray(pos, jnp.int32))
+
+
 def cache_update(cache, k_new, v_new, pos, quant=None):
-    """Write S_new tokens at offset ``pos`` (scalar int32)."""
+    """Write S_new tokens at offset ``pos`` (scalar or (B,) int32)."""
     k_q = _q_store(k_new, quant)
     v_q = _q_store(v_new, quant)
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_q.astype(cache["k"].dtype), pos, 1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_q.astype(cache["v"].dtype), pos, 1)
+    k = seq_update(cache["k"], k_q.astype(cache["k"].dtype), pos)
+    v = seq_update(cache["v"], v_q.astype(cache["v"].dtype), pos)
     return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (page-table indirection; core.paged_kv holds the pool ops)
+# ---------------------------------------------------------------------------
+def _paged_container(cache) -> str:
+    dt = cache["k_pages"].dtype
+    if jnp.issubdtype(dt, jnp.floating):
+        return "fp"
+    return "int8" if dt == jnp.int8 else "int4"
+
+
+def paged_cache_update(cache, k_new, v_new, page_table, pos,
+                       quant: Optional[KVQuantSpec] = None):
+    """Append S new tokens through the page table (pos scalar or (B,))."""
+    container = _paged_container(cache)
+    return paged_update(
+        cache, k_new, v_new, page_table, pos,
+        page_size=cache["k_pages"].shape[1], container=container,
+        int_bits=None if quant is None else quant.int_bits,
+        frac_bits=None if quant is None else quant.frac_bits)
+
+
+def paged_cache_view(cache, page_table, *, head_dim, dtype):
+    """Logical dense (B, NP*ps, KV, hd) float view of a paged cache."""
+    return paged_gather(cache, page_table, container=_paged_container(cache),
+                        head_dim=head_dim, dtype=dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -102,7 +161,7 @@ def attend_full(q, k, v, q_pos, kv_pos, *, causal=True, kv_len=None,
     if causal:
         mask &= kv_pos[None, None, :] <= q_pos[:, :, None]
     if kv_len is not None:
-        mask &= kv_pos[None, None, :] < kv_len
+        mask &= kv_pos[None, None, :] < _len_col(kv_len, 3)
     s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgst,btkh->bskgh", p.astype(v.dtype), v,
@@ -174,7 +233,7 @@ def attend_chunked(q, k, v, q_pos, kv_start, *, causal=True, kv_len=None,
         if causal:
             valid &= pos[None, None, :] <= q_pos[:, :, None]
         if kv_len is not None:
-            valid &= pos[None, None, :] < kv_len
+            valid &= pos[None, None, :] < _len_col(kv_len, 3)
         s = jnp.where(valid[:, None, :, :], s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
@@ -225,7 +284,7 @@ def _attend_chunked_grouped(q, k, v, q_pos, kv_start, *, causal, kv_len,
         pos = kv_start + idx * chunk + jnp.arange(chunk)
         valid = pos[None, :] <= q_pos[:, -1:]  # causal vs the new token
         if kv_len is not None:
-            valid = valid & (pos[None, :] < kv_len)
+            valid = valid & (pos[None, :] < _len_col(kv_len, 2))
         s = jnp.where(valid[:, None, None, :], s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
@@ -264,12 +323,14 @@ def init_gqa(key, cfg):
 
 def gqa_apply(params, x, positions, *, cfg, cache=None, cache_pos=None,
               kv_quant: Optional[KVQuantSpec] = None, mrope_positions=None,
-              chunked: Optional[bool] = None):
+              chunked: Optional[bool] = None, page_table=None):
     """Returns (y, new_cache). ``positions``: (B, S) absolute positions.
 
     Train/prefill: cache=None -> attends within the sequence (causal per cfg),
     optionally returning a fresh cache when ``cache`` is a preallocated dict.
-    Decode: cache given and S is the new-token count (usually 1).
+    Decode: cache given and S is the new-token count (usually 1);
+    ``cache_pos`` is a scalar (shared clock) or (B,) per-row offsets. A paged
+    cache (dict with "k_pages") additionally needs ``page_table`` (B, NP).
     """
     B, S, D = x.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -296,15 +357,29 @@ def gqa_apply(params, x, positions, *, cfg, cache=None, cache_pos=None,
     use_chunked = (chunked if chunked is not None
                    else (S * max(S, 1) > cfg.attn_chunk ** 2 or cache is not None))
 
-    if cache is not None:
+    odt = jnp.bfloat16 if cfg.attn_bf16 else jnp.float32
+    if cache is not None and "k_pages" in cache:
+        # jnp gather path, not kernels.paged_kv_attention: identical chunk
+        # accumulation order keeps paged decode bitwise-equal to the dense
+        # cache (the serving equivalence contract); the Pallas kernel's
+        # per-page online softmax would differ in the last float bits
+        if page_table is None:
+            raise ValueError("paged KV cache needs a page_table")
+        new_cache = paged_cache_update(cache, k, v, page_table, cache_pos,
+                                       kv_quant)
+        kd, vd = paged_cache_view(new_cache, page_table, head_dim=hd,
+                                  dtype=odt)
+        o = attend_chunked(q, kd, vd, positions, 0, causal=cfg.causal,
+                           kv_len=cache_pos + S, chunk=cfg.attn_chunk,
+                           operand_dtype=odt)
+    elif cache is not None:
         pos = cache_pos
         new_cache = cache_update(cache, k, v, pos, kv_quant)
         kv_len = pos + S
         o = attend_chunked(q, new_cache["k"], new_cache["v"], positions, 0,
                            causal=cfg.causal, kv_len=kv_len,
                            chunk=cfg.attn_chunk, kv_quant=kv_quant,
-                           operand_dtype=jnp.bfloat16 if cfg.attn_bf16
-                           else jnp.float32)
+                           operand_dtype=odt)
     else:
         new_cache = None
         if use_chunked:
@@ -379,8 +454,8 @@ def mla_apply(params, x, positions, *, cfg, cache=None, cache_pos=None,
 
     if cache is not None:
         lat_q = _q_store(latent, kv_quant)
-        new_cache = {"latent": jax.lax.dynamic_update_slice_in_dim(
-            cache["latent"], lat_q.astype(cache["latent"].dtype), cache_pos, 1)}
+        new_cache = {"latent": seq_update(
+            cache["latent"], lat_q.astype(cache["latent"].dtype), cache_pos)}
         lat_all = _q_load(new_cache["latent"], kv_quant, cd)
         kv_len = cache_pos + S
         T = lat_all.shape[1]
@@ -406,7 +481,7 @@ def mla_apply(params, x, positions, *, cfg, cache=None, cache_pos=None,
         if cfg.causal:
             mask &= jnp.arange(T)[None, None, :] <= positions[:, :, None]
         if kv_len is not None:
-            mask &= jnp.arange(T)[None, None, :] < kv_len
+            mask &= jnp.arange(T)[None, None, :] < _len_col(kv_len, 3)
         s = jnp.where(mask[:, None, :, :], s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
         o_lat = jnp.einsum("bhst,btk->bshk", p, c_all.astype(jnp.float32))

@@ -24,9 +24,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.fixedpoint import fake_quant
+from ..core.paged_kv import PagedCacheSpec
 from ..parallel.hints import constrain
 from .attention import (KVQuantSpec, gqa_apply, init_gqa, init_kv_cache,
-                        init_mla, init_mla_cache, mla_apply)
+                        init_mla, init_mla_cache, init_paged_kv_cache,
+                        mla_apply)
 from .common import (chunked_ce_loss, cross_entropy, dense_init, embed_tokens,
                      init_embedding, init_lm_head, init_rmsnorm, lm_head,
                      rmsnorm)
@@ -161,7 +163,8 @@ def init_block(key, cfg, sig):
 
 
 def block_apply(params, x, positions, *, cfg, sig, cache=None, cache_pos=None,
-                quant: Optional[ModelQuant] = None, mrope_positions=None):
+                quant: Optional[ModelQuant] = None, mrope_positions=None,
+                page_table=None):
     """Returns (x, new_cache, aux). ``quant`` holds per-THIS-layer scalars."""
     kind, ffn = sig
     aux = {}
@@ -185,7 +188,8 @@ def block_apply(params, x, positions, *, cfg, sig, cache=None, cache_pos=None,
             y, new_cache = gqa_apply(params["mixer"], h, positions, cfg=cfg,
                                      cache=cache, cache_pos=cache_pos,
                                      kv_quant=kv_quant,
-                                     mrope_positions=mrope_positions)
+                                     mrope_positions=mrope_positions,
+                                     page_table=page_table)
     elif kind == "mamba":
         y, new_cache = mamba_apply(params["mixer"], h, cfg=cfg, state=cache,
                                    state_quant=state_quant)
@@ -221,11 +225,20 @@ def block_apply(params, x, positions, *, cfg, sig, cache=None, cache_pos=None,
 # ---------------------------------------------------------------------------
 # Cache construction (stacked per segment/position)
 # ---------------------------------------------------------------------------
-def init_block_cache(cfg, sig, batch, max_len, dtype, kv_quant=None):
+def init_block_cache(cfg, sig, batch, max_len, dtype, kv_quant=None,
+                     paged: Optional[PagedCacheSpec] = None):
     kind, _ = sig
     if kind == "attn":
         if cfg.attention_type == "mla":
+            if paged is not None:
+                raise NotImplementedError(
+                    "paged KV cache supports GQA attention; MLA latent "
+                    "paging is future work")
             return init_mla_cache(batch, max_len, cfg, dtype, kv_quant)
+        if paged is not None:
+            return init_paged_kv_cache(paged.num_pages, paged.page_size,
+                                       cfg.num_kv_heads, cfg.head_dim,
+                                       dtype, kv_quant)
         return init_kv_cache(batch, max_len, cfg.num_kv_heads, cfg.head_dim,
                              dtype, kv_quant)
     if kind == "mamba":
@@ -237,9 +250,16 @@ def init_block_cache(cfg, sig, batch, max_len, dtype, kv_quant=None):
     raise ValueError(kind)
 
 
-def init_cache(cfg, batch, max_len, quant: Optional[ModelQuant] = None):
+def init_cache(cfg, batch, max_len, quant: Optional[ModelQuant] = None,
+               paged: Optional[PagedCacheSpec] = None):
     """Full-model cache: list per segment of tuple per pattern position of
-    stacked (periods, ...) block caches."""
+    stacked (periods, ...) block caches.
+
+    ``paged`` switches attention layers to page-table pools (see
+    core.paged_kv): each attention layer gets a (num_pages, page_size, KV,
+    hd) pool instead of a (batch, max_len, KV, hd) slab, so HBM scales with
+    allocated pages, not worst-case request length. SSM states are O(batch)
+    and stay dense."""
     kv_quant = None
     if quant is not None and quant.kv_int is not None:
         kv_quant = KVQuantSpec(8, 0, quant.kv_container)  # container only
@@ -248,7 +268,7 @@ def init_cache(cfg, batch, max_len, quant: Optional[ModelQuant] = None):
         seg = []
         for sig in pattern:
             one = init_block_cache(cfg, sig, batch, max_len,
-                                   cfg.compute_jnp_dtype, kv_quant)
+                                   cfg.compute_jnp_dtype, kv_quant, paged)
             seg.append(jax.tree_util.tree_map(
                 lambda a: jnp.broadcast_to(a[None], (periods,) + a.shape), one))
         caches.append(tuple(seg))
@@ -290,7 +310,7 @@ def init_model(key, cfg):
 
 def _segment_scan(seg_params, x, positions, *, cfg, pattern, start, periods,
                   caches=None, cache_pos=None, quant=None,
-                  mrope_positions=None):
+                  mrope_positions=None, page_table=None):
     """Scan one segment. Returns (x, new_caches, aux_sums)."""
     npos = len(pattern)
     layer_idx = start + jnp.arange(periods * npos).reshape(periods, npos)
@@ -306,7 +326,7 @@ def _segment_scan(seg_params, x, positions, *, cfg, pattern, start, periods,
             x, nc, aux = block_apply(
                 seg_p[pi], x, positions, cfg=cfg, sig=sig, cache=c_i,
                 cache_pos=cache_pos, quant=q_i,
-                mrope_positions=mrope_positions)
+                mrope_positions=mrope_positions, page_table=page_table)
             new_caches.append(nc)
             auxes.append(aux.get("moe_lb_loss", jnp.zeros((), jnp.float32)))
         return x, (tuple(new_caches), jnp.stack(auxes).sum())
@@ -323,12 +343,14 @@ def _segment_scan(seg_params, x, positions, *, cfg, pattern, start, periods,
 
 
 def forward_hidden(params, batch, cfg, *, quant: Optional[ModelQuant] = None,
-                   caches=None, cache_pos=None):
+                   caches=None, cache_pos=None, page_table=None):
     """Backbone only: returns (hidden_after_final_norm, aux); aux carries
     "caches" when caches were threaded.
 
     batch: {"tokens": (B,S)} or {"embeds": (B,S,D)} (stub frontends), plus
     optional "positions" (B,S), "mrope_positions" (B,S,3).
+    ``cache_pos`` is a scalar (shared decode clock) or (B,) per-sequence
+    offsets; ``page_table`` (B, NP) activates paged KV caches.
     """
     cd = cfg.compute_jnp_dtype
     if "embeds" in batch:
@@ -341,6 +363,7 @@ def forward_hidden(params, batch, cfg, *, quant: Optional[ModelQuant] = None,
         positions = batch["positions"]
     else:
         base = cache_pos if cache_pos is not None else 0
+        base = jnp.asarray(base, jnp.int32).reshape(-1, 1)  # scalar or (B,)
         positions = jnp.broadcast_to(base + jnp.arange(S)[None, :], (B, S))
     mrope_positions = batch.get("mrope_positions")
 
@@ -354,7 +377,8 @@ def forward_hidden(params, batch, cfg, *, quant: Optional[ModelQuant] = None,
         x, nc, aux = _segment_scan(
             params["segments"][si], x, positions, cfg=cfg, pattern=pattern,
             start=start, periods=periods, caches=seg_cache,
-            cache_pos=cache_pos, quant=quant, mrope_positions=mrope_positions)
+            cache_pos=cache_pos, quant=quant, mrope_positions=mrope_positions,
+            page_table=page_table)
         new_caches.append(nc)
         moe_aux = moe_aux + aux
 
@@ -364,10 +388,10 @@ def forward_hidden(params, batch, cfg, *, quant: Optional[ModelQuant] = None,
 
 
 def forward(params, batch, cfg, *, quant: Optional[ModelQuant] = None,
-            caches=None, cache_pos=None):
+            caches=None, cache_pos=None, page_table=None):
     """Returns (hidden, logits, new_caches, aux)."""
     x, aux = forward_hidden(params, batch, cfg, quant=quant, caches=caches,
-                            cache_pos=cache_pos)
+                            cache_pos=cache_pos, page_table=page_table)
     tied = params["embed"]["table"] if cfg.tie_embeddings else None
     logits = lm_head(params.get("head"), x, tied_table=tied)
     return x, logits, aux.pop("caches"), aux
@@ -430,10 +454,12 @@ def prefill(params, batch, cfg, *, quant=None, max_len):
     return logits[:, -1], caches, S
 
 
-def decode_step(params, tokens, pos, caches, cfg, *, quant=None):
-    """One decode step. tokens: (B,) int32; pos: scalar int32 current length.
-    Returns (logits (B,V), new_caches)."""
+def decode_step(params, tokens, pos, caches, cfg, *, quant=None,
+                page_table=None):
+    """One decode step. tokens: (B,) int32; pos: scalar or (B,) int32
+    current lengths. Returns (logits (B,V), new_caches)."""
     batch = {"tokens": tokens[:, None]}
     _, logits, caches, _ = forward(params, batch, cfg, quant=quant,
-                                   caches=caches, cache_pos=pos)
+                                   caches=caches, cache_pos=pos,
+                                   page_table=page_table)
     return logits[:, 0], caches

@@ -54,7 +54,9 @@ def quantized_allreduce(x, axis_name: str, *, bits: int = 8,
     x: identically-shaped per-device fp32 array (leading dim divisible by the
     axis size). Returns the (approximately) all-reduced array.
     """
-    n = jax.lax.axis_size(axis_name)
+    # psum of a python scalar folds to the static axis size on every jax we
+    # support (lax.axis_size only exists in newer releases)
+    n = jax.lax.psum(1, axis_name)
     idx = jax.lax.axis_index(axis_name)
     if n == 1:
         return x

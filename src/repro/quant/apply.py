@@ -47,7 +47,7 @@ def build_model_quant(policy: Optional[PrecisionPolicy], cfg,
     a_i, a_f, a_en = policy.stacked_arrays("data")
     kv_i = kv_f = None
     if quantize_kv:
-        cap = 8 if kv_container == "int8" else 16
+        cap = {"int4": 4, "int8": 8, "int16": 16}[kv_container]
         tot = jnp.clip(a_i + a_f, 2, cap)
         kv_i = jnp.minimum(a_i, tot - 1)
         kv_f = tot - kv_i

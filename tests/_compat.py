@@ -1,0 +1,122 @@
+"""Hypothesis compatibility shim for the tier-1 environment.
+
+The property tests are written against the real ``hypothesis`` API. When the
+package is installed we simply re-export it. When it is absent (the minimal
+CPU container), a small seeded example-sampling fallback provides the subset
+the tests use — ``@given`` draws ``max_examples`` pseudo-random examples per
+strategy and runs the test body once per example, so the properties still
+execute instead of dying at import.
+
+The fallback is deliberately deterministic (fixed seed per test name) so
+failures reproduce; it does lose shrinking and the database, which is fine
+for CI smoke coverage.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect as _inspect
+    import zlib
+
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A draw(rng) callable; mirrors the tiny slice of the API we use."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+        def map(self, f):
+            return _Strategy(lambda rng: f(self._draw(rng)))
+
+        def filter(self, pred, _tries=100):
+            def draw(rng):
+                for _ in range(_tries):
+                    x = self._draw(rng)
+                    if pred(x):
+                        return x
+                raise ValueError("filter predicate too strict in shim")
+            return _Strategy(draw)
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(
+                lambda rng: options[int(rng.integers(len(options)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: float(
+                rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=8):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elem.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    strategies = _StrategiesModule()
+
+    def settings(**kwargs):
+        """Accepts hypothesis settings kwargs; only max_examples matters."""
+        max_examples = kwargs.get("max_examples", 20)
+
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*pos_strats, **kw_strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                # @settings may sit above @given (attr lands on wrapper) or
+                # below it (attr lands on fn)
+                n = getattr(wrapper, "_shim_max_examples",
+                            getattr(fn, "_shim_max_examples", 20))
+                rng = _np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for i in range(n):
+                    pos = tuple(s.draw(rng) for s in pos_strats)
+                    drawn = {k: s.draw(rng) for k, s in kw_strats.items()}
+                    try:
+                        fn(*args, *pos, **drawn, **kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"shim-property failure on example {i}: "
+                            f"args={pos!r} kwargs={drawn!r}") from e
+
+            # hide the drawn parameters from pytest's fixture resolution:
+            # strategies fill all keyword-named params and the rightmost
+            # positional params, exactly like real hypothesis
+            sig = _inspect.signature(fn)
+            params = [p for p in sig.parameters.values()
+                      if p.name not in kw_strats]
+            if pos_strats:
+                params = params[:len(params) - len(pos_strats)]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            return wrapper
+        return deco

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _compat import given, settings, strategies as st
 
 from repro.core import (FixedPointFormat, QuantizedTensor, fake_quant,
                         fake_quant_ste, format_params, pack_bits, quantize,
@@ -112,16 +112,36 @@ class TestRequiredIntBits:
 
 
 class TestPacking:
-    @given(st.sampled_from([2, 3, 4, 5, 8, 16]),
-           st.integers(1, 50), st.integers(0, 2 ** 31 - 1))
-    @settings(max_examples=40, deadline=None)
+    @given(st.integers(1, 16), st.integers(1, 50), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=60, deadline=None)
     def test_prop_pack_roundtrip(self, bits, n, seed):
+        """Round-trip across ALL widths 1..16 (odd widths included) and
+        last dims that are not multiples of values_per_word."""
         rng = np.random.default_rng(seed)
         lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
         q = rng.integers(lo, hi + 1, size=(3, n))
         packed, nn = pack_bits(jnp.asarray(q), bits)
+        assert packed.dtype == jnp.int32
+        vpw = 32 // bits
+        assert packed.shape == (3, -(-n // vpw))
         out = unpack_bits(packed, bits, nn)
+        assert out.shape == q.shape
         np.testing.assert_array_equal(np.asarray(out), q)
+
+    @pytest.mark.parametrize("bits", list(range(1, 17)))
+    def test_sign_extension_at_extremes(self, bits):
+        """Both range extremes (and their neighbours) survive the two's-
+        complement field round-trip with correct sign extension, on a last
+        dim deliberately not a multiple of values_per_word."""
+        lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+        vals = sorted({lo, lo + 1, -1, 0, hi - 1, hi})
+        vpw = 32 // bits
+        n = len(vals) * 3 + (1 if (len(vals) * 3) % vpw == 0 else 0)
+        q = np.resize(np.asarray(vals, np.int32), (2, n))
+        packed, nn = pack_bits(jnp.asarray(q), bits)
+        out = np.asarray(unpack_bits(packed, bits, nn))
+        np.testing.assert_array_equal(out, q)
+        assert out.min() >= lo and out.max() <= hi
 
     def test_packed_sizes(self):
         q = jnp.zeros((4, 128))
@@ -129,6 +149,9 @@ class TestPacking:
         assert packed.shape == (4, 16)
         packed, _ = pack_bits(q, 3)  # 10 vals/word, padded to 130
         assert packed.shape == (4, 13)
+        for bits in (1, 5, 7, 9, 11, 13, 15):
+            packed, _ = pack_bits(q, bits)
+            assert packed.shape == (4, -(-128 // (32 // bits)))
 
 
 class TestQuantizedTensor:

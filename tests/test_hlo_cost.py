@@ -23,8 +23,11 @@ def test_scan_flops_multiplied_by_trip_count():
     c = _compile(f, jax.ShapeDtypeStruct((8, 8), jnp.float32))
     r = analyze(c.as_text())
     assert r["flops"] == 12 * 2 * 8 * 8 * 8
-    # XLA's own analysis counts the body once (the bug we work around)
-    assert c.cost_analysis()["flops"] < r["flops"]
+    # XLA's own analysis counts the body once (the bug we work around);
+    # Compiled.cost_analysis returns a per-module list on some jax versions
+    ca = c.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    assert ca["flops"] < r["flops"]
 
 
 def test_nested_scan_trips_multiply():

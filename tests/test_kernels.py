@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _compat import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 
@@ -107,6 +107,106 @@ def test_kv_attention_matches_ref(b, kv, g, hd, t, frac):
                            block_t=64)
     expect = ref.kv_attention_ref(q, k_q, v_q, 2, frac, kv_len)
     np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# paged_kv_attention
+# ---------------------------------------------------------------------------
+def _mk_fragmented_pool(rng, B, NP, ps, kv, hd, bits, extra_pages=3):
+    """Random pool + an out-of-order page table; unused entries -> page 0."""
+    from repro.core.qtensor import pack_bits
+    P = 1 + B * NP + extra_pages
+    if bits == 8:
+        kq = jnp.asarray(rng.integers(-128, 128, (P, ps, kv, hd)), jnp.int8)
+        vq = jnp.asarray(rng.integers(-128, 128, (P, ps, kv, hd)), jnp.int8)
+    elif bits == 4:
+        kq, _ = pack_bits(jnp.asarray(rng.integers(-8, 8, (P, ps, kv, hd)),
+                                      jnp.int32), 4)
+        vq, _ = pack_bits(jnp.asarray(rng.integers(-8, 8, (P, ps, kv, hd)),
+                                      jnp.int32), 4)
+    else:
+        kq = jnp.asarray(rng.normal(size=(P, ps, kv, hd)), jnp.float32)
+        vq = jnp.asarray(rng.normal(size=(P, ps, kv, hd)), jnp.float32)
+    ks = jnp.asarray(rng.uniform(0.005, 0.08, P), jnp.float32)
+    vs = jnp.asarray(rng.uniform(0.005, 0.08, P), jnp.float32)
+    # pages allocated out of order: shuffle the non-scratch page ids
+    ids = np.arange(1, P)
+    rng.shuffle(ids)
+    pt = ids[:B * NP].reshape(B, NP).astype(np.int32)
+    return kq, vq, ks, vs, pt
+
+
+@settings(max_examples=12, deadline=None)
+@given(b=st.integers(1, 3), kv=st.sampled_from([1, 2]),
+       g=st.sampled_from([1, 2, 4]), hd=st.sampled_from([16, 32]),
+       np_pages=st.integers(1, 5), ps=st.sampled_from([8, 16]),
+       bits=st.sampled_from([0, 4, 8]), tail=st.integers(0, 7))
+def test_paged_kv_attention_matches_ref(b, kv, g, hd, np_pages, ps, bits,
+                                        tail):
+    """Paged kernel vs dense-gather oracle on randomized fragmented page
+    layouts, including a partially filled last page (``tail``)."""
+    rng = np.random.default_rng(b * 1000 + np_pages * 17 + ps + bits + tail)
+    h = kv * g
+    q = jnp.asarray(rng.normal(size=(b, h, hd)), jnp.float32)
+    kq, vq, ks, vs, pt = _mk_fragmented_pool(rng, b, np_pages, ps, kv, hd,
+                                             bits)
+    # per-row lengths; at least 1, last page partially filled by `tail`
+    full = np_pages * ps
+    lens = np.maximum(1, full - tail - rng.integers(0, ps, b)).astype(np.int32)
+    out = ops.paged_kv_attention(q, kq, vq, ks, vs, jnp.asarray(pt),
+                                 jnp.asarray(lens), bits=bits)
+    expect = ref.paged_kv_attention_ref(q, kq, vq, ks, vs, pt, lens,
+                                        bits=bits)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_paged_kv_attention_fragmented_vs_contiguous():
+    """The same logical cache must give the same output regardless of WHICH
+    pool pages back it (fragmentation invariance)."""
+    rng = np.random.default_rng(0)
+    B, KV, G, hd, ps, NP = 2, 2, 2, 32, 8, 3
+    q = jnp.asarray(rng.normal(size=(B, KV * G, hd)), jnp.float32)
+    logical_k = rng.integers(-128, 128, (B, NP, ps, KV, hd))
+    logical_v = rng.integers(-128, 128, (B, NP, ps, KV, hd))
+    lens = jnp.asarray([20, 17], jnp.int32)
+    outs = []
+    for perm_seed in (1, 2):
+        prng = np.random.default_rng(perm_seed)
+        ids = np.arange(1, 1 + B * NP)
+        prng.shuffle(ids)
+        pt = ids.reshape(B, NP).astype(np.int32)
+        P = 1 + B * NP
+        kq = np.zeros((P, ps, KV, hd), np.int8)
+        vq = np.zeros((P, ps, KV, hd), np.int8)
+        kq[pt] = logical_k
+        vq[pt] = logical_v
+        sc = np.full(P, 2.0 ** -5, np.float32)
+        outs.append(ops.paged_kv_attention(
+            q, jnp.asarray(kq), jnp.asarray(vq), jnp.asarray(sc),
+            jnp.asarray(sc), jnp.asarray(pt), lens, bits=8))
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(outs[1]))
+
+
+def test_paged_int4_matches_int8_on_same_grid():
+    """A 4-bit grid stored packed (bits=4) and widened to int8 (bits=8) must
+    produce identical attention outputs — packing is lossless."""
+    from repro.core.qtensor import pack_bits
+    rng = np.random.default_rng(3)
+    B, KV, G, hd, ps, NP = 1, 2, 2, 16, 8, 2
+    P = 1 + B * NP
+    q = jnp.asarray(rng.normal(size=(B, KV * G, hd)), jnp.float32)
+    grid_k = rng.integers(-8, 8, (P, ps, KV, hd))
+    grid_v = rng.integers(-8, 8, (P, ps, KV, hd))
+    sc = jnp.full((P,), 0.25, jnp.float32)
+    pt = jnp.asarray([[2, 1]], jnp.int32)
+    lens = jnp.asarray([13], jnp.int32)
+    o8 = ops.paged_kv_attention(q, jnp.asarray(grid_k, jnp.int8),
+                                jnp.asarray(grid_v, jnp.int8), sc, sc, pt,
+                                lens, bits=8)
+    k4, _ = pack_bits(jnp.asarray(grid_k, jnp.int32), 4)
+    v4, _ = pack_bits(jnp.asarray(grid_v, jnp.int32), 4)
+    o4 = ops.paged_kv_attention(q, k4, v4, sc, sc, pt, lens, bits=4)
+    np.testing.assert_array_equal(np.asarray(o8), np.asarray(o4))
 
 
 def test_kv_attention_masks_tail():

@@ -8,7 +8,7 @@ import json
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _compat import given, settings, strategies as st
 
 from repro.core import (FIELDS, FixedPointFormat, LayerPolicy, LayerTraffic,
                         PrecisionPolicy, TrafficModel, greedy_pareto_search,
