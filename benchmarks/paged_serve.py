@@ -1,29 +1,41 @@
-"""Paged vs dense KV-cache serving bench: tokens/sec + HBM bytes per token.
+"""Paged vs dense KV-cache serving bench: tokens/sec, prefill latency, and
+HBM bytes per token — the serving hot-path trajectory.
 
-Runs the same mixed-length request trace through three BatchedServer
+Runs the same mixed-length request trace through several BatchedServer
 configurations on a smoke-scale GQA arch:
 
-  dense-fp32   — the seed layout: one (B, max_len) fp32-dtype slab per layer
-  paged-int8   — page pool, int8 Q(2,6) pages, per-page scales
-  paged-int4   — page pool, 4-bit Q(2,2) grid lane-packed into int32 words
+  dense-fp32        — the seed layout: one (B, max_len) fp32 slab per layer
+  paged-int8-step   — page pool, int8 pages, SLOT-GRANULAR prefill (the PR 1
+                      hot path: O(prompt_len) whole-batch forwards/request)
+  paged-int8        — same pool, BUCKETED chunked prefill (O(prompt/bucket)
+                      forwards) — the before/after pair for the prefill work
+  paged-int4        — bucketed prefill, 4-bit lane-packed pages
+  paged-int8-pallas — bucketed prefill + decode routed through the Pallas
+                      paged-attention kernel (interpret-mode on CPU, so CPU
+                      tok/s is NOT indicative; the row tracks routing +
+                      numerics, the kernel is bench'd on TPU)
 
 and reports, per configuration:
 
   * decode throughput (generated tokens / wall second),
+  * prefill latency (wall seconds of prefill per admitted request) and the
+    number of prefill forward-program executions,
   * KV **at-rest bytes per token-slot** — stored cache bytes divided by the
-    token capacity they back. This is the paper's footprint ratio made
-    concrete at serving time: ~4x smaller for int8, ~8x for int4 vs fp32
-    (per-page scales cost <1% at page_size >= 16).
-  * total cache HBM actually allocated (paged pools size to --num-pages, so
-    memory follows expected live tokens, not batch * max_len).
+    token capacity they back (~4x smaller for int8, ~8x for int4 vs fp32),
+  * total cache HBM actually allocated.
+
+Results land in results/paged_serve.json AND append a trajectory point to
+the repo-root BENCH_serve.json so the perf trend is tracked across PRs.
 
 Run:  PYTHONPATH=src python -m benchmarks.paged_serve [--arch qwen2-72b]
-      [--page-size 16] [--requests 12] [--max-new 24]
-Results land in results/paged_serve.json (benchmarks.common.save_json).
+      [--page-size 16] [--requests 12] [--fast]
+(--fast = CI smoke: tiny trace, one bench iteration per config.)
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -34,6 +46,10 @@ from repro.launch.serve import BatchedServer, Request
 from repro.models.transformer import init_model
 
 from .common import save_json
+
+BENCH_TRAJECTORY = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_serve.json")
 
 
 def _kv_cache_leaves(caches):
@@ -74,12 +90,25 @@ def mk_requests(vocab, n, max_new, seed=0):
 
 
 def bench_one(cfg, params, *, name, requests, batch, max_len, kv_bits,
-              page_size, num_pages):
+              page_size, num_pages, attn_impl="gather", prefill="auto",
+              prefill_bucket=16, warmup=True):
     srv = BatchedServer(cfg, params, batch_size=batch, max_len=max_len,
                         kv_bits=kv_bits, page_size=page_size,
-                        num_pages=num_pages)
-    reqs = mk_requests(cfg.vocab_size, 2, 2, seed=99)   # warmup/compile
-    srv.run(reqs)
+                        num_pages=num_pages, attn_impl=attn_impl,
+                        prefill=prefill, prefill_bucket=prefill_bucket)
+    if warmup:
+        # compile the decode step AND every power-of-two bucket program the
+        # trace can hit (prompt lens 3..MAX_PROMPT -> buckets 2..16), so the
+        # measured run is execution only
+        rng = np.random.default_rng(99)
+        reqs = [Request(1000 + i,
+                        rng.integers(0, cfg.vocab_size, L).astype(np.int32),
+                        2)
+                for i, L in enumerate([2, 3, 5, 9, min(13, max_len // 2)])]
+        srv.run(reqs)
+        srv.prefill_forwards = srv.prefill_tokens = 0
+        srv.prefill_s = 0.0
+        srv.decode_steps = 0
     reqs = mk_requests(cfg.vocab_size, requests,
                        max_new=srv.max_len // 2, seed=0)
     t0 = time.time()
@@ -91,7 +120,12 @@ def bench_one(cfg, params, *, name, requests, batch, max_len, kv_bits,
         "name": name,
         "kv_bits": kv_bits,
         "page_size": page_size,
+        "attn_impl": srv.attn_impl,
+        "prefill": srv.prefill_mode,
         "tokens_per_s": gen / max(dt, 1e-9),
+        "prefill_forwards": srv.prefill_forwards,
+        "prefill_latency_ms": 1e3 * srv.prefill_s / max(len(reqs), 1),
+        "prefill_s": srv.prefill_s,
         "kv_bytes_per_token_slot": usable / capacity,
         "kv_cache_mib": stored / 2 ** 20,
         "token_capacity": capacity,
@@ -100,40 +134,85 @@ def bench_one(cfg, params, *, name, requests, batch, max_len, kv_bits,
     return res
 
 
+def _append_trajectory(point):
+    """BENCH_serve.json accumulates one point per bench run, so the serving
+    perf trend is visible across PRs (the driver diffs it)."""
+    traj = {"bench": "paged_serve", "trajectory": []}
+    if os.path.exists(BENCH_TRAJECTORY):
+        try:
+            with open(BENCH_TRAJECTORY) as f:
+                traj = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            pass
+    traj.setdefault("trajectory", []).append(point)
+    with open(BENCH_TRAJECTORY, "w") as f:
+        json.dump(traj, f, indent=1)
+    return BENCH_TRAJECTORY
+
+
 def run(*, arch="qwen2-72b", requests=10, batch=4, max_len=64, page_size=16,
-        verbose=True):
+        verbose=True, fast=False):
     cfg = get_smoke_config(arch)
     params = init_model(jax.random.PRNGKey(0), cfg)
+    if fast:   # CI smoke: one tiny iteration per config, no warmup pass
+        requests, batch, max_len, page_size = 2, 2, 32, 8
     # pool sized to the traffic's worst concurrent demand, not batch*max_len:
     # this is the allocation the dense layout cannot shrink
     per_slot = -(-(MAX_PROMPT + max_len // 2) // page_size)
     num_pages = 1 + batch * per_slot
+    common = dict(requests=requests, batch=batch, max_len=max_len,
+                  warmup=not fast)
     rows = [
-        bench_one(cfg, params, name="dense-fp32", requests=requests,
-                  batch=batch, max_len=max_len, kv_bits=0, page_size=0,
-                  num_pages=None),
-        bench_one(cfg, params, name="paged-int8", requests=requests,
-                  batch=batch, max_len=max_len, kv_bits=8,
-                  page_size=page_size, num_pages=num_pages),
-        bench_one(cfg, params, name="paged-int4", requests=requests,
-                  batch=batch, max_len=max_len, kv_bits=4,
-                  page_size=page_size, num_pages=num_pages),
+        bench_one(cfg, params, name="dense-fp32", kv_bits=0, page_size=0,
+                  num_pages=None, **common),
+        bench_one(cfg, params, name="paged-int8-step", kv_bits=8,
+                  page_size=page_size, num_pages=num_pages,
+                  prefill="stepwise", **common),
+        bench_one(cfg, params, name="paged-int8", kv_bits=8,
+                  page_size=page_size, num_pages=num_pages, **common),
+        bench_one(cfg, params, name="paged-int4", kv_bits=4,
+                  page_size=page_size, num_pages=num_pages, **common),
+        bench_one(cfg, params, name="paged-int8-pallas", kv_bits=8,
+                  page_size=page_size, num_pages=num_pages,
+                  attn_impl="pallas", **common),
     ]
     base = rows[0]["kv_bytes_per_token_slot"]
     for r in rows:
         r["footprint_reduction_vs_fp32"] = base / r["kv_bytes_per_token_slot"]
+    step, bucketed = rows[1], rows[2]
+    summary = {
+        "prefill_forwards_stepwise": step["prefill_forwards"],
+        "prefill_forwards_bucketed": bucketed["prefill_forwards"],
+        "prefill_forwards_reduction": (
+            step["prefill_forwards"] / max(bucketed["prefill_forwards"], 1)),
+        "prefill_latency_ms_stepwise": step["prefill_latency_ms"],
+        "prefill_latency_ms_bucketed": bucketed["prefill_latency_ms"],
+        "tokens_per_s": {r["name"]: r["tokens_per_s"] for r in rows},
+        "kv_bytes_per_token_slot": {r["name"]: r["kv_bytes_per_token_slot"]
+                                    for r in rows},
+    }
     if verbose:
         print(f"[paged_serve] arch={arch} batch={batch} max_len={max_len} "
               f"page_size={page_size}")
         for r in rows:
-            print(f"  {r['name']:11s} {r['tokens_per_s']:8.1f} tok/s  "
-                  f"{r['kv_bytes_per_token_slot']:8.1f} B/token-slot "
+            print(f"  {r['name']:17s} {r['tokens_per_s']:8.1f} tok/s  "
+                  f"prefill {r['prefill_forwards']:3d} fwd "
+                  f"{r['prefill_latency_ms']:7.1f} ms/req  "
+                  f"{r['kv_bytes_per_token_slot']:7.1f} B/token-slot "
                   f"({r['footprint_reduction_vs_fp32']:4.1f}x vs fp32)  "
-                  f"cache {r['kv_cache_mib']:6.2f} MiB "
-                  f"for {r['token_capacity']} token-slots")
+                  f"cache {r['kv_cache_mib']:6.2f} MiB")
+        print(f"  prefill forwards: {summary['prefill_forwards_stepwise']} "
+              f"(stepwise) -> {summary['prefill_forwards_bucketed']} "
+              f"(bucketed), "
+              f"{summary['prefill_forwards_reduction']:.1f}x fewer")
     out = {"arch": arch, "batch": batch, "max_len": max_len,
-           "page_size": page_size, "rows": rows}
+           "page_size": page_size, "rows": rows, "summary": summary}
     save_json("paged_serve.json", out)
+    point = {"when": time.strftime("%Y-%m-%d %H:%M:%S"), "arch": arch,
+             "fast": fast, "summary": summary}
+    path = _append_trajectory(point)
+    if verbose:
+        print(f"  trajectory point appended to {os.path.basename(path)}")
     return out
 
 
@@ -144,9 +223,11 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke: tiny trace, single iteration per config")
     args = ap.parse_args(argv)
     run(arch=args.arch, requests=args.requests, batch=args.batch,
-        max_len=args.max_len, page_size=args.page_size)
+        max_len=args.max_len, page_size=args.page_size, fast=args.fast)
 
 
 if __name__ == "__main__":

@@ -6,7 +6,9 @@
   pareto_search   — paper Fig. 5 / Table 2 (greedy search, TR@1/2/5/10%)
   lm_precision    — beyond-paper: same machinery on a transformer LM
   kernel_bench    — Pallas kernels vs oracles + footprint ratios
-  paged_serve     — paged vs dense KV-cache serving (tok/s, HBM B/token)
+  paged_serve     — paged vs dense KV-cache serving (tok/s, prefill latency,
+                    HBM B/token; also appends a BENCH_serve.json trajectory
+                    point at the repo root — the cross-PR perf trend)
   roofline        — EXPERIMENTS.md §Roofline terms from the dry-run JSONs
 
 ``python -m benchmarks.run [--only a,b] [--fast]``
@@ -39,7 +41,7 @@ def main(argv=None):
         "lm_precision": lambda: lm_precision.run(
             steps=120 if args.fast else 300),
         "kernel_bench": kernel_bench.run,
-        "paged_serve": paged_serve.run,
+        "paged_serve": lambda: paged_serve.run(fast=args.fast),
         "roofline": roofline.run,
     }
     # expensive searches reuse their saved results unless --force

@@ -1,12 +1,25 @@
 """Serving example: continuous-batching decode with quantized + paged KV.
 
 The KV cache is the dominant decode traffic (paper §2.4's "data" at batch
-scale). Two levers stack here:
+scale). Three levers stack here:
 
 * per-layer data bits (int8 Q(2,6) / int4 Q(2,2)) shrink every stored token,
 * the paged layout (--page-size in launch.serve) allocates cache by pages
   actually used instead of batch * max_len slabs, and frees them per
-  request.
+  request,
+* the serving hot path: **bucketed prefill** admits prompts in power-of-two
+  chunks written straight into the paged pool (O(prompt/bucket) forwards
+  instead of O(prompt) whole-batch steps; `prefill_bucket` caps the chunk,
+  so at most log2(bucket)+1 prefill programs ever compile), and
+  `attn_impl="pallas"` routes decode attention through the scalar-prefetch
+  Pallas kernel (`kernels.paged_kv_attention`) — interpret-mode on CPU,
+  compiled on TPU. `attn_impl="gather"` stays the bitwise-reference mode.
+
+Error semantics: paged admission preflights a request's WORST-CASE page
+demand (prompt + max_new). A request that can never fit the pool raises
+``core.paged_kv.OutOfPagesError`` with the counts (needed/free/usable); one
+that only has to wait for live requests to release pages is deferred in the
+queue. The free list can therefore never empty mid-prefill.
 
 Prints token agreement between the runs and the cache footprint ratios.
 
@@ -16,6 +29,7 @@ import jax
 import numpy as np
 
 from repro.configs.registry import get_smoke_config
+from repro.core.paged_kv import OutOfPagesError
 from repro.launch.serve import BatchedServer, Request
 from repro.models.transformer import init_model
 
@@ -47,10 +61,21 @@ def main():
     srv_q8 = BatchedServer(cfg, params, batch_size=4, max_len=96, kv_bits=8)
     reqs_q8 = srv_q8.run(mk(), verbose=True)
 
-    print("=== int4 Q(2,2) paged KV cache (page_size=16) ===")
+    print("=== int4 Q(2,2) paged KV cache (page_size=16, bucketed "
+          "prefill) ===")
     srv_p4 = BatchedServer(cfg, params, batch_size=4, max_len=96, kv_bits=4,
-                           page_size=16, num_pages=1 + 4 * 2)
+                           page_size=16, num_pages=1 + 4 * 2,
+                           prefill_bucket=16)
     reqs_p4 = srv_p4.run(mk(), verbose=True)
+    print(f"  bucketed prefill: {srv_p4.prefill_forwards} chunk forwards for "
+          f"{srv_p4.prefill_tokens} prompt tokens "
+          f"(stepwise would take {srv_p4.prefill_tokens - 8} whole-batch "
+          f"steps)")
+
+    print("=== int8 paged + Pallas decode kernel (interpret on CPU) ===")
+    srv_pl = BatchedServer(cfg, params, batch_size=4, max_len=96, kv_bits=8,
+                           page_size=16, attn_impl="pallas")
+    reqs_pl = srv_pl.run(mk(), verbose=True)
 
     fp_b, q8_b = cache_bytes(srv_fp.caches), cache_bytes(srv_q8.caches)
     p4_b = cache_bytes(srv_p4.caches)
@@ -58,12 +83,23 @@ def main():
           f"int8={q8_b / 2**20:.2f} MiB ({q8_b / fp_b:.2f}x)  "
           f"paged-int4={p4_b / 2**20:.2f} MiB ({p4_b / fp_b:.2f}x; "
           f"pool sized to live pages, not max_len)")
-    print(f"token agreement fp vs int8-KV:       "
+    print(f"token agreement fp vs int8-KV:        "
           f"{agreement(reqs_fp, reqs_q8):.1%}")
-    print(f"token agreement fp vs paged-int4-KV: "
+    print(f"token agreement fp vs paged-int4-KV:  "
           f"{agreement(reqs_fp, reqs_p4):.1%}")
+    print(f"token agreement fp vs pallas-decode:  "
+          f"{agreement(reqs_fp, reqs_pl):.1%}")
     print(f"pages free after run: {srv_p4.allocator.num_free}/"
           f"{srv_p4.allocator.num_pages - 1} (all requests released)")
+
+    # admission preflight: a request whose prompt + max_new can never be
+    # backed by the pool is rejected up front with counts
+    tiny = BatchedServer(cfg, params, batch_size=2, max_len=96, kv_bits=8,
+                         page_size=16, num_pages=4)   # 3 usable pages
+    try:
+        tiny.run([Request(99, np.arange(40, dtype=np.int32), 50)])
+    except OutOfPagesError as e:
+        print(f"\nOutOfPagesError (expected): {e}")
 
 
 if __name__ == "__main__":

@@ -24,11 +24,12 @@ those writes off live data. The allocator therefore never hands out page 0.
 Device-side ops here are pure jnp (scatter/gather) and serve as the oracle
 for the Pallas kernel in ``repro.kernels.paged_kv_attention``, which gathers
 pages via scalar-prefetch DMA and dequantizes in VMEM. The serving
-integration (``models.attention.gqa_apply``) currently attends through the
-jnp gather path — that keeps paged decoding bitwise-identical to the dense
-layout (same online-softmax chunk order), which the equivalence tests rely
-on; routing TPU decode through the kernel (different, per-page accumulation
-order) is a ROADMAP item.
+integration (``models.attention.gqa_apply``) routes per ``attn_impl``:
+``"gather"`` (default) attends through the jnp path — bitwise-identical to
+the dense layout (same online-softmax chunk order), the reference mode the
+equivalence tests rely on — while ``"pallas"`` sends S=1 decode through the
+kernel (interpret-mode on CPU, compiled on TPU; per-page accumulation order,
+so equal only to float tolerance).
 """
 from __future__ import annotations
 
@@ -45,6 +46,24 @@ from .qtensor import pack_bits, unpack_bits, values_per_word
 SCRATCH_PAGE = 0
 
 _CONTAINERS = ("int8", "int4", "fp")
+
+
+class OutOfPagesError(RuntimeError):
+    """A request's page demand cannot be backed by the pool.
+
+    Raised *before* any page is handed out (admission preflight) or when the
+    free list empties mid-run, always with the counts needed to size
+    ``--num-pages`` correctly.
+    """
+
+    def __init__(self, *, needed: int, free: int, total: int,
+                 rid: Optional[int] = None):
+        self.needed, self.free, self.total, self.rid = needed, free, total, rid
+        who = f"request {rid}" if rid is not None else "allocation"
+        super().__init__(
+            f"KV page pool cannot back {who}: needs {needed} page(s), "
+            f"{free} free of {total} usable (page 0 is scratch); raise "
+            f"--num-pages, shrink --max-new, or lower concurrency")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,10 +158,24 @@ class PageAllocator:
     def num_free(self) -> int:
         return len(self._free)
 
+    @property
+    def num_usable(self) -> int:
+        return self.num_pages - 1
+
+    def check(self, needed: int, *, rid: Optional[int] = None) -> None:
+        """Preflight: raise OutOfPagesError unless ``needed`` pages are free.
+
+        Callers admit a request only after checking its whole worst-case
+        demand (prompt + max_new), so the free list can never empty
+        mid-prefill with an opaque error.
+        """
+        if needed > self.num_free:
+            raise OutOfPagesError(needed=needed, free=self.num_free,
+                                  total=self.num_usable, rid=rid)
+
     def alloc(self) -> int:
         if not self._free:
-            raise RuntimeError(
-                "KV page pool exhausted; raise --num-pages or lower load")
+            raise OutOfPagesError(needed=1, free=0, total=self.num_usable)
         return self._free.pop()
 
     def free(self, pages: Sequence[int]) -> None:
@@ -182,12 +215,19 @@ def _pack_grid(q, bits):
 
 
 def paged_update(pool, k_new, v_new, page_table, pos, *, page_size: int,
-                 container: str = "int8", int_bits=None, frac_bits=None):
+                 container: str = "int8", int_bits=None, frac_bits=None,
+                 valid_len=None):
     """Append S new tokens per sequence to the paged pool.
 
     k_new/v_new: (B, S, KV, hd) float; page_table: (B, NP) int32;
     pos: scalar or (B,) int32 — the logical position of the FIRST new token
-    per sequence. Returns the updated pool dict.
+    per sequence. ``valid_len`` (scalar or (B,) int32, optional) marks only
+    the first ``valid_len`` of the S tokens as real: the rest are padding
+    (bucketed prefill pads chunks up to a power-of-two) and their writes are
+    redirected to the scratch page, so a padded chunk can never clobber live
+    pages (a padded tail position can even alias back into the sequence's
+    last page once ``pos + S`` exceeds the page-table span, because the
+    block gather clamps). Returns the updated pool dict.
 
     Distinct sequences must map to distinct pages (the allocator guarantees
     it), so the scatter is collision-free except on the shared scratch page,
@@ -197,8 +237,14 @@ def paged_update(pool, k_new, v_new, page_table, pos, *, page_size: int,
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
     positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
     blocks = positions // page_size                       # (B, S)
+    blocks = jnp.minimum(blocks, page_table.shape[1] - 1)
     offsets = positions % page_size                       # (B, S)
     pids = jnp.take_along_axis(page_table, blocks, axis=1)  # (B, S)
+    if valid_len is not None:
+        vl = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32).reshape(-1),
+                              (B,))
+        valid = jnp.arange(S, dtype=jnp.int32)[None, :] < vl[:, None]
+        pids = jnp.where(valid, pids, SCRATCH_PAGE)
 
     if container == "fp":
         k_q, v_q = k_new, v_new

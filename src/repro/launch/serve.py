@@ -17,14 +17,37 @@ Two cache layouts:
   apply inside the page container: --kv-bits 8 stores int8 pages, --kv-bits
   4 lane-packs a 4-bit grid into int32 words (~8x smaller at rest than
   fp32). --num-pages sizes the shared pool (default: full capacity).
+  Admission preflights the pool: a request whose worst-case page demand can
+  never fit raises ``OutOfPagesError`` (with counts) up front; one that
+  merely has to wait for live requests to finish is deferred in the queue.
+
+The serving **hot path** is built around three ideas:
+
+* **Bucketed chunked prefill** (paged, attention-only archs): prompts are
+  admitted through ``launch.steps.make_chunk_prefill_step`` — one forward
+  per power-of-two prompt chunk (--prefill-bucket caps the bucket), padded
+  and masked, writing straight into the paged pool — instead of O(prompt)
+  whole-batch decode steps. ``--prefill stepwise`` keeps the slot-granular
+  reference path (bitwise-identical results; see tests/test_serve_fast.py).
+* **Kernel-routed decode** (--attn-impl pallas): decode attention runs in
+  ``kernels.paged_kv_attention`` (scalar-prefetch DMA over the page table,
+  dequant in VMEM; interpret-mode on CPU, compiled on TPU). The default
+  ``gather`` impl stays the bitwise-reference mode.
+* **Batched host<->device traffic**: decode advances in "runs" between slot
+  events (admission/completion, both predictable from token counts), feeding
+  next-token ids device-to-device and fetching generated tokens
+  asynchronously at run boundaries — no per-token ``.at[slot].set`` and no
+  blocking per-step ``np.array`` round-trips.
 
 CPU demos:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
       --requests 12 --batch-size 4 --max-new 24 --kv-bits 8
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
-      --requests 12 --batch-size 4 --max-new 24 --kv-bits 4 --page-size 16
+      --requests 12 --batch-size 4 --max-new 24 --kv-bits 4 --page-size 16 \
+      --attn-impl pallas
 
-Bench (tokens/sec + HBM bytes/token, dense vs paged int8 vs paged int4):
+Bench (tok/s, prefill latency, HBM bytes/token; dense vs paged, gather vs
+pallas, stepwise vs bucketed):
   PYTHONPATH=src python -m benchmarks.run paged_serve
 """
 from __future__ import annotations
@@ -40,12 +63,12 @@ import numpy as np
 
 from ..configs.registry import get_config, get_smoke_config
 from ..core.fixedpoint import FixedPointFormat
-from ..core.paged_kv import (SCRATCH_PAGE, PageAllocator, PagedCacheSpec,
-                             max_pages_per_seq)
+from ..core.paged_kv import (SCRATCH_PAGE, OutOfPagesError, PageAllocator,
+                             PagedCacheSpec, max_pages_per_seq)
 from ..core.policy import PrecisionPolicy
 from ..models.transformer import init_cache, init_model
 from ..quant.apply import build_model_quant, transformer_layer_names
-from .steps import make_decode_step
+from .steps import make_chunk_prefill_step, make_decode_step
 
 
 @dataclasses.dataclass
@@ -57,6 +80,21 @@ class Request:
     done: bool = False
 
 
+def _pow2_bucket(n: int, cap: int) -> int:
+    """Smallest power-of-two >= n, clipped to cap (the max bucket)."""
+    return min(cap, 1 << max(0, n - 1).bit_length())
+
+
+def _upload(x):
+    """Device-put a host-MUTABLE numpy buffer via a host-side snapshot.
+
+    jax may zero-copy alias numpy memory on CPU, and even copying uploads
+    can complete asynchronously — so handing jax a buffer the serving loop
+    later mutates in place (pos, tokens, page_table) is a data race. The
+    snapshot is synchronous host work and nobody ever mutates it."""
+    return jnp.asarray(np.array(x))
+
+
 class BatchedServer:
     """Fixed-slot continuous batching with per-slot positions.
 
@@ -66,11 +104,18 @@ class BatchedServer:
     Free slots sit at pos 0 with their page-table row parked on the scratch
     page, so the shared decode step can run them without corrupting live
     data.
+
+    ``prefill``: "auto" picks the bucketed chunked prefill whenever the
+    layout supports it (paged + attention-only arch), "bucketed" demands it,
+    "stepwise" forces the slot-granular reference path. ``attn_impl``:
+    "gather" (jnp reference) or "pallas" (paged decode kernel; paged only).
     """
 
     def __init__(self, cfg, params, *, batch_size: int, max_len: int,
                  kv_bits: int = 0, page_size: int = 0,
-                 num_pages: Optional[int] = None, seed: int = 0):
+                 num_pages: Optional[int] = None, seed: int = 0,
+                 attn_impl: str = "gather", prefill: str = "auto",
+                 prefill_bucket: int = 32):
         self.cfg = cfg
         self.params = params
         self.B = batch_size
@@ -78,6 +123,35 @@ class BatchedServer:
         self.paged = page_size > 0
         if self.paged and cfg.attention_type == "mla":
             raise NotImplementedError("paged KV serving supports GQA archs")
+        if attn_impl not in ("gather", "pallas"):
+            raise ValueError(f"attn_impl must be 'gather' or 'pallas', "
+                             f"got {attn_impl!r}")
+        if attn_impl == "pallas" and not self.paged:
+            raise ValueError("--attn-impl pallas routes the paged decode "
+                             "kernel; it needs --page-size > 0")
+        self.attn_impl = attn_impl
+        if prefill not in ("auto", "bucketed", "stepwise"):
+            raise ValueError(f"prefill must be auto|bucketed|stepwise, "
+                             f"got {prefill!r}")
+        # bucketed prefill is only offered where it is output-equivalent to
+        # the stepwise reference: SSM states are per-slot dense, and
+        # capacity-bounded scatter MoE routes differently at chunk batch
+        # shapes (capacity scales with tokens-per-forward)
+        bucketed_ok = (self.paged
+                       and all(k == "attn" for k in cfg.layer_kinds)
+                       and (cfg.num_experts == 0
+                            or cfg.moe_mode == "eval_all"))
+        if prefill == "bucketed" and not bucketed_ok:
+            raise ValueError("bucketed prefill needs a paged cache, an "
+                             "attention-only arch (SSM states are per-slot "
+                             "dense), and exact MoE routing (scatter-mode "
+                             "expert capacity depends on the forward's "
+                             "token count); use prefill='stepwise'")
+        self.prefill_mode = ("bucketed" if prefill in ("auto", "bucketed")
+                             and bucketed_ok else "stepwise")
+        if prefill_bucket < 1:
+            raise ValueError("prefill_bucket must be >= 1")
+        self.prefill_bucket = prefill_bucket
         self.quant = None
         if kv_bits:
             container = "int4" if (self.paged and kv_bits <= 4) else "int8"
@@ -87,7 +161,11 @@ class BatchedServer:
             self.quant = build_model_quant(pol, cfg, quantize_kv=True,
                                            quantize_activations=False,
                                            kv_container=container)
-        self.decode = jax.jit(make_decode_step(cfg, quant=self.quant))
+        self.decode = jax.jit(make_decode_step(cfg, quant=self.quant,
+                                               attn_impl=attn_impl))
+        self._chunk_prefill = (
+            jax.jit(make_chunk_prefill_step(cfg, quant=self.quant))
+            if self.prefill_mode == "bucketed" else None)
 
         paged_spec = None
         if self.paged:
@@ -101,11 +179,20 @@ class BatchedServer:
             self.page_table = np.full((batch_size, self.np_max),
                                       SCRATCH_PAGE, np.int32)
             self.slot_pages: List[List[int]] = [[] for _ in range(batch_size)]
+            self.slot_reserved = [0] * batch_size  # worst-case page demand
+            self._pt_dev = _upload(self.page_table)
+            self._pt_dirty = False
         self.caches = init_cache(cfg, batch_size, max_len, self.quant,
                                  paged=paged_spec)
         self.slots: List[Optional[Request]] = [None] * batch_size
-        self.pos = np.zeros((batch_size,), np.int32)
-        self.tokens = jnp.zeros((batch_size,), jnp.int32)
+        self.pos = np.zeros((batch_size,), np.int32)    # host-side lengths
+        self.tokens = np.zeros((batch_size,), np.int32)  # host-side tokens
+        self.slot_gen = [0] * batch_size                 # generated counts
+        # hot-path instrumentation (benchmarks/paged_serve.py reads these)
+        self.prefill_forwards = 0   # forward-program executions in prefill
+        self.prefill_tokens = 0     # prompt tokens consumed by prefill
+        self.prefill_s = 0.0
+        self.decode_steps = 0
 
     # -- page bookkeeping ---------------------------------------------------
     def _ensure_page(self, slot: int, position: int):
@@ -115,84 +202,218 @@ class BatchedServer:
             page = self.allocator.alloc()
             self.page_table[slot, len(self.slot_pages[slot])] = page
             self.slot_pages[slot].append(page)
+            self._pt_dirty = True
 
     def _release_slot(self, slot: int):
-        if self.paged and self.slot_pages[slot]:
-            self.allocator.free(self.slot_pages[slot])
-            self.slot_pages[slot] = []
-            self.page_table[slot, :] = SCRATCH_PAGE
+        if self.paged:
+            if self.slot_pages[slot]:
+                self.allocator.free(self.slot_pages[slot])
+                self.slot_pages[slot] = []
+                self.page_table[slot, :] = SCRATCH_PAGE
+                self._pt_dirty = True
+            self.slot_reserved[slot] = 0
         self.pos[slot] = 0
+        self.slot_gen[slot] = 0
 
-    # -- decode -------------------------------------------------------------
-    def _step(self):
-        pt = jnp.asarray(self.page_table) if self.paged else None
-        nxt, logits, self.caches = self.decode(
-            self.params, self.tokens, jnp.asarray(self.pos), self.caches, pt)
-        return nxt
+    def _page_table_dev(self):
+        if self._pt_dirty:
+            self._pt_dev = _upload(self.page_table)
+            self._pt_dirty = False
+        return self._pt_dev
+
+    def _pages_needed(self, req: Request) -> int:
+        """Worst-case pages ``req`` can ever occupy: prompt + generation,
+        clipped by the max_len-1 position ceiling of the decode loop. The
+        loop always generates at least one token (``_run_span`` >= 1), so
+        max_new counts as >= 1 here or the preflight would under-reserve."""
+        tokens = min(len(req.prompt) - 1 + max(req.max_new, 1),
+                     self.max_len - 1)
+        return -(-max(tokens, 1) // self.page_size)
+
+    def _outstanding_reservation(self) -> int:
+        """Pages promised to live requests but not yet allocated."""
+        return sum(max(0, self.slot_reserved[i] - len(self.slot_pages[i]))
+                   for i in range(self.B) if self.slots[i] is not None)
+
+    # -- prefill ------------------------------------------------------------
+    def _sync_step(self):
+        """One whole-batch decode step driven from the host-side state
+        (the slot-granular prefill path; output tokens are discarded)."""
+        pt = self._page_table_dev() if self.paged else None
+        _, _, self.caches = self.decode(
+            self.params, _upload(self.tokens), _upload(self.pos),
+            self.caches, pt)
+        self.prefill_forwards += 1
+
+    def _prefill_stepwise(self, slot: int, req: Request):
+        """Feed prompt[:-1] through shared decode steps, leaving the last
+        prompt token in ``tokens`` for the run loop to consume. Other slots
+        do not advance: they rewrite their current position with identical
+        values. This is the bitwise-reference prefill (one compiled program,
+        O(prompt_len) whole-batch forwards)."""
+        self.pos[slot] = 0
+        for t in req.prompt[:-1]:
+            if self.paged:
+                self._ensure_page(slot, int(self.pos[slot]))
+            self.tokens[slot] = int(t)
+            self._sync_step()
+            self.pos[slot] += 1
+        self.tokens[slot] = int(req.prompt[-1])
+
+    def _prefill_bucketed(self, slot: int, req: Request):
+        """Write prompt[:-1] into the paged pool in O(P / bucket) chunked
+        forwards: each chunk is padded to a power-of-two bucket (so at most
+        log2(prefill_bucket)+1 programs ever compile), masked via
+        ``valid_len`` (padded tails scatter to the scratch page), and runs
+        as a single-sequence forward against the shared pools — other slots
+        are untouched."""
+        toks = np.asarray(req.prompt[:-1], np.int32)
+        self.pos[slot] = 0
+        done = 0
+        while done < len(toks):
+            n = len(toks) - done
+            bucket = _pow2_bucket(n, self.prefill_bucket)
+            valid = min(bucket, n)
+            self._ensure_page(slot, done + valid - 1)
+            chunk = np.zeros((1, bucket), np.int32)
+            chunk[0, :valid] = toks[done:done + valid]
+            self.caches = self._chunk_prefill(
+                self.params, jnp.asarray(chunk),
+                jnp.asarray([done], jnp.int32),
+                jnp.asarray([valid], jnp.int32),
+                self.caches, _upload(self.page_table[slot:slot + 1]))
+            self.prefill_forwards += 1
+            done += valid
+        self.pos[slot] = len(toks)
+        self.tokens[slot] = int(req.prompt[-1])
 
     def _prefill_slot(self, slot: int, req: Request):
-        """Feed prompt[:-1] through shared decode steps, leaving the last
-        prompt token in ``tokens`` for the run loop to consume (slot-granular
-        prefill keeps one compiled program; a production server would use a
-        bucketed prefill jit — see launch.steps.make_prefill_step). Other
-        slots do not advance: they rewrite their current position with
-        identical values."""
         if len(req.prompt) == 0:
             raise ValueError(f"request {req.rid} has an empty prompt")
         if len(req.prompt) >= self.max_len:
             raise ValueError(f"request {req.rid} prompt length "
                              f"{len(req.prompt)} >= max_len {self.max_len}")
-        self.pos[slot] = 0
-        for t in req.prompt[:-1]:
+        t0 = time.perf_counter()
+        if self.prefill_mode == "bucketed":
+            self._prefill_bucketed(slot, req)
+        else:
+            self._prefill_stepwise(slot, req)
+        self.prefill_s += time.perf_counter() - t0
+        self.prefill_tokens += len(req.prompt)
+        self.slot_gen[slot] = 0
+
+    # -- admission ----------------------------------------------------------
+    def _admit(self, queue: List[Request]):
+        """Fill free slots from the queue. Paged admission preflights the
+        pool against the request's WORST-CASE page demand minus what live
+        requests still have reserved — so ``_ensure_page`` can never hit an
+        empty free list mid-run. A request that can never fit raises
+        ``OutOfPagesError``; one that must wait for live requests is
+        deferred (the queue stalls until a completion frees pages)."""
+        for i in range(self.B):
+            if self.slots[i] is not None or not queue:
+                continue
+            req = queue[0]
             if self.paged:
-                self._ensure_page(slot, int(self.pos[slot]))
-            self.tokens = self.tokens.at[slot].set(int(t))
-            self._step()
-            self.pos[slot] += 1
-        self.tokens = self.tokens.at[slot].set(int(req.prompt[-1]))
+                need = self._pages_needed(req)
+                avail = self.allocator.num_free - \
+                    self._outstanding_reservation()
+                if need > avail:
+                    if (need > self.allocator.num_usable
+                            or not any(s is not None for s in self.slots)):
+                        raise OutOfPagesError(
+                            needed=need, free=avail,
+                            total=self.allocator.num_usable, rid=req.rid)
+                    break  # defer until live requests free pages
+                self.slot_reserved[i] = need
+            queue.pop(0)
+            self._prefill_slot(i, req)
+            self.slots[i] = req
+
+    # -- decode -------------------------------------------------------------
+    def _run_span(self) -> int:
+        """Decode steps until the next slot event (a completion), computable
+        purely from counts — the span the hot loop can run without any
+        host<->device synchronization."""
+        spans = []
+        for i in range(self.B):
+            req = self.slots[i]
+            if req is None:
+                continue
+            spans.append(min(req.max_new - self.slot_gen[i],
+                             (self.max_len - 1) - int(self.pos[i])))
+        return max(1, min(spans))
 
     def run(self, requests: List[Request], *, verbose: bool = False):
         queue = list(requests)
         t0 = time.time()
-        steps = 0
         gen_tokens = 0
+        # instance counters are cumulative across run() calls (benchmarks
+        # zero them between warmup and measurement); the verbose print
+        # reports THIS run's deltas
+        steps0, pf0 = self.decode_steps, self.prefill_forwards
         while queue or any(s is not None for s in self.slots):
-            for i in range(self.B):
-                if self.slots[i] is None and queue:
-                    req = queue.pop(0)
-                    self._prefill_slot(i, req)
-                    self.slots[i] = req
-            if self.paged:
-                for i in range(self.B):
-                    if self.slots[i] is not None:
+            self._admit(queue)
+            live = [i for i in range(self.B) if self.slots[i] is not None]
+            span = self._run_span()
+            # device-resident state for the span: tokens advance
+            # device-to-device; generated ids are fetched asynchronously and
+            # materialized only at the span boundary
+            tokens_dev = _upload(self.tokens)
+            pos_dev = _upload(self.pos)
+            live_mask = np.zeros((self.B,), bool)
+            live_mask[live] = True
+            all_live = bool(live_mask.all())
+            live_mask_dev = jnp.asarray(live_mask)
+            live_inc = jnp.asarray(live_mask.astype(np.int32))
+            pending = []                       # (nxt_dev, owner snapshot)
+            for _ in range(span):
+                if self.paged:
+                    for i in live:
                         self._ensure_page(i, int(self.pos[i]))
-            nxt = self._step()
-            steps += 1
-            nxt_np = np.array(nxt)
-            keep = np.asarray(self.tokens)
-            for i in range(self.B):
+                pt = self._page_table_dev() if self.paged else None
+                nxt, _, self.caches = self.decode(
+                    self.params, tokens_dev, pos_dev, self.caches, pt)
+                nxt.copy_to_host_async()
+                pending.append((nxt, tuple(self.slots)))
+                # idle slots hold their token (keeps runs reproducible
+                # across layouts even when idle rows share MoE capacity)
+                tokens_dev = (nxt if all_live
+                              else jnp.where(live_mask_dev, nxt, tokens_dev))
+                pos_dev = pos_dev + live_inc
+                for i in live:
+                    self.pos[i] += 1
+                    self.slot_gen[i] += 1
+                self.decode_steps += 1
+                gen_tokens += len(live)
+            # span boundary: materialize generated tokens, retire finishers
+            last_np = None
+            for nxt_dev, owners in pending:
+                arr = np.asarray(nxt_dev)
+                last_np = arr
+                for i, req in enumerate(owners):
+                    if req is not None:
+                        req.out.append(int(arr[i]))
+            for i in live:
+                self.tokens[i] = int(last_np[i])
                 req = self.slots[i]
-                if req is None:
-                    nxt_np[i] = keep[i]     # idle slots hold their token
-                    continue
-                req.out.append(int(nxt_np[i]))
-                gen_tokens += 1
-                self.pos[i] += 1
-                if (len(req.out) >= req.max_new
+                if (self.slot_gen[i] >= req.max_new
                         or self.pos[i] >= self.max_len - 1):
                     req.done = True
                     self.slots[i] = None
                     self._release_slot(i)
-            self.tokens = jnp.asarray(nxt_np)
         dt = time.time() - t0
         if verbose:
             layout = (f"paged ps={self.page_size} "
                       f"free={self.allocator.num_free}"
                       if self.paged else "dense")
-            print(f"[serve] {steps} decode steps, {len(requests)} requests, "
+            steps = self.decode_steps - steps0
+            print(f"[serve] {steps} decode steps, "
+                  f"{self.prefill_forwards - pf0} prefill forwards "
+                  f"({self.prefill_mode}), {len(requests)} requests, "
                   f"{gen_tokens / max(dt, 1e-9):,.1f} tok/s "
-                  f"({steps * self.B / max(dt, 1e-9):,.1f} tok-slots/s, "
-                  f"{layout})")
+                  f"({steps * self.B / max(dt, 1e-9):,.1f} "
+                  f"tok-slots/s, {layout}, attn={self.attn_impl})")
         return requests
 
 
@@ -212,6 +433,17 @@ def main(argv=None):
                     help="tokens per KV page; 0 = dense max_len cache")
     ap.add_argument("--num-pages", type=int, default=0,
                     help="shared pool pages (0 = full capacity)")
+    ap.add_argument("--attn-impl", choices=["gather", "pallas"],
+                    default="gather",
+                    help="paged decode backend: jnp gather (bitwise "
+                         "reference) or the Pallas paged-attention kernel "
+                         "(interpret-mode on CPU)")
+    ap.add_argument("--prefill", choices=["auto", "bucketed", "stepwise"],
+                    default="auto",
+                    help="bucketed = chunked prefill jit straight into the "
+                         "paged pool; stepwise = slot-granular reference")
+    ap.add_argument("--prefill-bucket", type=int, default=32,
+                    help="max power-of-two prompt chunk for bucketed prefill")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -227,7 +459,9 @@ def main(argv=None):
     srv = BatchedServer(cfg, params, batch_size=args.batch_size,
                         max_len=args.max_len, kv_bits=args.kv_bits,
                         page_size=args.page_size,
-                        num_pages=args.num_pages or None)
+                        num_pages=args.num_pages or None,
+                        attn_impl=args.attn_impl, prefill=args.prefill,
+                        prefill_bucket=args.prefill_bucket)
     srv.run(reqs, verbose=True)
     for r in reqs[:4]:
         print(f"  req {r.rid}: {len(r.out)} tokens -> {r.out[:8]}...")

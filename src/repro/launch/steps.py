@@ -11,7 +11,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ..models.transformer import (forward, init_cache, init_model, train_loss)
+from ..models.transformer import (forward, forward_hidden, init_cache,
+                                  init_model, train_loss)
 from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
 from ..optim.compress import CompressionConfig, compress_gradients, \
     error_feedback_init
@@ -60,7 +61,11 @@ def make_train_step(cfg, hp: TrainHParams, *, quant=None):
 
 def make_prefill_step(cfg, *, max_len: int, quant=None):
     """fn(params, batch) -> (last_logits, caches). Encoder archs return
-    (logits, None) — a plain forward."""
+    (logits, None) — a plain forward.
+
+    This is the dryrun/whole-prompt prefill against a fresh DENSE cache; the
+    serving path prefills incrementally into a shared paged pool via
+    ``make_chunk_prefill_step`` below."""
 
     def step(params, batch):
         if cfg.family == "encoder":
@@ -76,20 +81,49 @@ def make_prefill_step(cfg, *, max_len: int, quant=None):
     return step
 
 
-def make_decode_step(cfg, *, quant=None, greedy: bool = True):
+def make_chunk_prefill_step(cfg, *, quant=None):
+    """fn(params, tokens (Bp, S), start_pos (Bp,), valid_len (Bp,), caches,
+    page_table (Bp, NP)) -> caches.
+
+    One **bucketed prefill** program: runs a whole prompt chunk through the
+    backbone in a single forward, quantizing K/V per layer and scattering the
+    chunk into the paged pool via the page table. ``S`` is the bucket size
+    (callers pad prompts up to a power-of-two bucket and jit retraces per
+    bucket, so a max bucket of 2^k costs at most k+1 compilations); only the
+    first ``valid_len`` tokens are real — padded tails are masked out of the
+    pool write (scratch-page redirect) and their hidden states are garbage
+    that nobody reads. Skips the LM head entirely (prefill logits are never
+    sampled; the decode step consumes the last prompt token), which is why
+    this wraps ``forward_hidden`` and not ``forward``.
+    """
+    def step(params, tokens, start_pos, valid_len, caches, page_table):
+        batch = {"tokens": tokens}
+        _, aux = forward_hidden(params, batch, cfg, quant=quant,
+                                caches=caches, cache_pos=start_pos,
+                                page_table=page_table,
+                                kv_valid_len=valid_len)
+        return aux["caches"]
+
+    return step
+
+
+def make_decode_step(cfg, *, quant=None, greedy: bool = True,
+                     attn_impl: str = "gather"):
     """fn(params, tokens (B,), pos, caches, page_table=None) ->
     (next_tokens, logits, caches).
 
     One new token per sequence against a preallocated cache — the function
     the decode_32k / long_500k cells lower. ``pos`` is a scalar (shared
     clock) or (B,) per-sequence lengths; ``page_table`` (B, NP) drives a
-    paged cache (see core.paged_kv)."""
+    paged cache (see core.paged_kv); ``attn_impl`` ("gather" | "pallas")
+    picks the paged attention backend (models.attention.gqa_apply)."""
 
     def step(params, tokens, pos, caches, page_table=None):
         batch = {"tokens": tokens[:, None]}
         _, logits, caches, _ = forward(params, batch, cfg, quant=quant,
                                        caches=caches, cache_pos=pos,
-                                       page_table=page_table)
+                                       page_table=page_table,
+                                       attn_impl=attn_impl)
         logits = logits[:, 0]
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return nxt, logits, caches

@@ -120,14 +120,19 @@ def _paged_container(cache) -> str:
 
 
 def paged_cache_update(cache, k_new, v_new, page_table, pos,
-                       quant: Optional[KVQuantSpec] = None):
-    """Append S new tokens through the page table (pos scalar or (B,))."""
+                       quant: Optional[KVQuantSpec] = None, valid_len=None):
+    """Append S new tokens through the page table (pos scalar or (B,)).
+
+    ``valid_len`` marks trailing chunk tokens as padding (their writes go to
+    the scratch page) — the bucketed-prefill contract (core.paged_kv).
+    """
     container = _paged_container(cache)
     return paged_update(
         cache, k_new, v_new, page_table, pos,
         page_size=cache["k_pages"].shape[1], container=container,
         int_bits=None if quant is None else quant.int_bits,
-        frac_bits=None if quant is None else quant.frac_bits)
+        frac_bits=None if quant is None else quant.frac_bits,
+        valid_len=valid_len)
 
 
 def paged_cache_view(cache, page_table, *, head_dim, dtype):
@@ -323,7 +328,8 @@ def init_gqa(key, cfg):
 
 def gqa_apply(params, x, positions, *, cfg, cache=None, cache_pos=None,
               kv_quant: Optional[KVQuantSpec] = None, mrope_positions=None,
-              chunked: Optional[bool] = None, page_table=None):
+              chunked: Optional[bool] = None, page_table=None,
+              attn_impl: str = "gather", kv_valid_len=None):
     """Returns (y, new_cache). ``positions``: (B, S) absolute positions.
 
     Train/prefill: cache=None -> attends within the sequence (causal per cfg),
@@ -331,6 +337,15 @@ def gqa_apply(params, x, positions, *, cfg, cache=None, cache_pos=None,
     Decode: cache given and S is the new-token count (usually 1);
     ``cache_pos`` is a scalar (shared clock) or (B,) per-row offsets. A paged
     cache (dict with "k_pages") additionally needs ``page_table`` (B, NP).
+
+    ``attn_impl`` selects the paged S=1 decode backend: "gather" reads the
+    pool through the jnp path (bitwise-reference mode, identical chunk order
+    to the dense cache), "pallas" routes through
+    ``kernels.paged_kv_attention`` (scalar-prefetch DMA; per-page online
+    softmax, so equal to gather only within float tolerance). Chunked prefill
+    (S > 1) always uses the gather path — the kernel is decode-shaped.
+    ``kv_valid_len`` (scalar or (B,)) marks only the first tokens of a padded
+    prefill chunk as real; padded tails scatter to the scratch page.
     """
     B, S, D = x.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -359,19 +374,36 @@ def gqa_apply(params, x, positions, *, cfg, cache=None, cache_pos=None,
 
     odt = jnp.bfloat16 if cfg.attn_bf16 else jnp.float32
     if cache is not None and "k_pages" in cache:
-        # jnp gather path, not kernels.paged_kv_attention: identical chunk
-        # accumulation order keeps paged decode bitwise-equal to the dense
-        # cache (the serving equivalence contract); the Pallas kernel's
-        # per-page online softmax would differ in the last float bits
         if page_table is None:
             raise ValueError("paged KV cache needs a page_table")
+        if attn_impl not in ("gather", "pallas"):
+            raise ValueError(f"attn_impl must be 'gather' or 'pallas', "
+                             f"got {attn_impl!r}")
         new_cache = paged_cache_update(cache, k, v, page_table, cache_pos,
-                                       kv_quant)
-        kd, vd = paged_cache_view(new_cache, page_table, head_dim=hd,
-                                  dtype=odt)
-        o = attend_chunked(q, kd, vd, positions, 0, causal=cfg.causal,
-                           kv_len=cache_pos + S, chunk=cfg.attn_chunk,
-                           operand_dtype=odt)
+                                       kv_quant, valid_len=kv_valid_len)
+        if attn_impl == "pallas" and S == 1:
+            # scalar-prefetch Pallas kernel: gathers pages via DMA and
+            # dequantizes in VMEM; per-page online softmax, so equal to the
+            # gather path within float tolerance (not bitwise)
+            from ..kernels.ops import paged_kv_attention
+            container = _paged_container(new_cache)
+            bits = {"int8": 8, "int4": 4, "fp": 0}[container]
+            kvl = jnp.broadcast_to(
+                jnp.asarray(cache_pos, jnp.int32).reshape(-1), (B,)) + 1
+            out = paged_kv_attention(
+                q[:, 0], new_cache["k_pages"], new_cache["v_pages"],
+                new_cache["k_scale"], new_cache["v_scale"], page_table, kvl,
+                bits=bits)
+            o = out.reshape(B, 1, H, hd).astype(q.dtype)
+        else:
+            # jnp gather path: identical chunk accumulation order keeps
+            # paged decode bitwise-equal to the dense cache (the serving
+            # equivalence contract / bitwise-reference mode)
+            kd, vd = paged_cache_view(new_cache, page_table, head_dim=hd,
+                                      dtype=odt)
+            o = attend_chunked(q, kd, vd, positions, 0, causal=cfg.causal,
+                               kv_len=cache_pos + S, chunk=cfg.attn_chunk,
+                               operand_dtype=odt)
     elif cache is not None:
         pos = cache_pos
         new_cache = cache_update(cache, k, v, pos, kv_quant)

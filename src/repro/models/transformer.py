@@ -164,8 +164,14 @@ def init_block(key, cfg, sig):
 
 def block_apply(params, x, positions, *, cfg, sig, cache=None, cache_pos=None,
                 quant: Optional[ModelQuant] = None, mrope_positions=None,
-                page_table=None):
-    """Returns (x, new_cache, aux). ``quant`` holds per-THIS-layer scalars."""
+                page_table=None, attn_impl: str = "gather",
+                kv_valid_len=None):
+    """Returns (x, new_cache, aux). ``quant`` holds per-THIS-layer scalars.
+
+    ``attn_impl``/``kv_valid_len`` only affect paged GQA attention: kernel
+    vs gather decode routing and padded-chunk masking (see
+    ``attention.gqa_apply``).
+    """
     kind, ffn = sig
     aux = {}
     if quant is not None:
@@ -189,7 +195,9 @@ def block_apply(params, x, positions, *, cfg, sig, cache=None, cache_pos=None,
                                      cache=cache, cache_pos=cache_pos,
                                      kv_quant=kv_quant,
                                      mrope_positions=mrope_positions,
-                                     page_table=page_table)
+                                     page_table=page_table,
+                                     attn_impl=attn_impl,
+                                     kv_valid_len=kv_valid_len)
     elif kind == "mamba":
         y, new_cache = mamba_apply(params["mixer"], h, cfg=cfg, state=cache,
                                    state_quant=state_quant)
@@ -310,7 +318,8 @@ def init_model(key, cfg):
 
 def _segment_scan(seg_params, x, positions, *, cfg, pattern, start, periods,
                   caches=None, cache_pos=None, quant=None,
-                  mrope_positions=None, page_table=None):
+                  mrope_positions=None, page_table=None,
+                  attn_impl: str = "gather", kv_valid_len=None):
     """Scan one segment. Returns (x, new_caches, aux_sums)."""
     npos = len(pattern)
     layer_idx = start + jnp.arange(periods * npos).reshape(periods, npos)
@@ -326,7 +335,8 @@ def _segment_scan(seg_params, x, positions, *, cfg, pattern, start, periods,
             x, nc, aux = block_apply(
                 seg_p[pi], x, positions, cfg=cfg, sig=sig, cache=c_i,
                 cache_pos=cache_pos, quant=q_i,
-                mrope_positions=mrope_positions, page_table=page_table)
+                mrope_positions=mrope_positions, page_table=page_table,
+                attn_impl=attn_impl, kv_valid_len=kv_valid_len)
             new_caches.append(nc)
             auxes.append(aux.get("moe_lb_loss", jnp.zeros((), jnp.float32)))
         return x, (tuple(new_caches), jnp.stack(auxes).sum())
@@ -343,14 +353,17 @@ def _segment_scan(seg_params, x, positions, *, cfg, pattern, start, periods,
 
 
 def forward_hidden(params, batch, cfg, *, quant: Optional[ModelQuant] = None,
-                   caches=None, cache_pos=None, page_table=None):
+                   caches=None, cache_pos=None, page_table=None,
+                   attn_impl: str = "gather", kv_valid_len=None):
     """Backbone only: returns (hidden_after_final_norm, aux); aux carries
     "caches" when caches were threaded.
 
     batch: {"tokens": (B,S)} or {"embeds": (B,S,D)} (stub frontends), plus
     optional "positions" (B,S), "mrope_positions" (B,S,3).
     ``cache_pos`` is a scalar (shared decode clock) or (B,) per-sequence
-    offsets; ``page_table`` (B, NP) activates paged KV caches.
+    offsets; ``page_table`` (B, NP) activates paged KV caches;
+    ``attn_impl`` ("gather" | "pallas") picks the paged decode backend;
+    ``kv_valid_len`` masks padded bucketed-prefill chunk tails.
     """
     cd = cfg.compute_jnp_dtype
     if "embeds" in batch:
@@ -378,7 +391,8 @@ def forward_hidden(params, batch, cfg, *, quant: Optional[ModelQuant] = None,
             params["segments"][si], x, positions, cfg=cfg, pattern=pattern,
             start=start, periods=periods, caches=seg_cache,
             cache_pos=cache_pos, quant=quant, mrope_positions=mrope_positions,
-            page_table=page_table)
+            page_table=page_table, attn_impl=attn_impl,
+            kv_valid_len=kv_valid_len)
         new_caches.append(nc)
         moe_aux = moe_aux + aux
 
@@ -388,10 +402,12 @@ def forward_hidden(params, batch, cfg, *, quant: Optional[ModelQuant] = None,
 
 
 def forward(params, batch, cfg, *, quant: Optional[ModelQuant] = None,
-            caches=None, cache_pos=None, page_table=None):
+            caches=None, cache_pos=None, page_table=None,
+            attn_impl: str = "gather", kv_valid_len=None):
     """Returns (hidden, logits, new_caches, aux)."""
     x, aux = forward_hidden(params, batch, cfg, quant=quant, caches=caches,
-                            cache_pos=cache_pos, page_table=page_table)
+                            cache_pos=cache_pos, page_table=page_table,
+                            attn_impl=attn_impl, kv_valid_len=kv_valid_len)
     tied = params["embed"]["table"] if cfg.tie_embeddings else None
     logits = lm_head(params.get("head"), x, tied_table=tied)
     return x, logits, aux.pop("caches"), aux
@@ -455,11 +471,11 @@ def prefill(params, batch, cfg, *, quant=None, max_len):
 
 
 def decode_step(params, tokens, pos, caches, cfg, *, quant=None,
-                page_table=None):
+                page_table=None, attn_impl="gather"):
     """One decode step. tokens: (B,) int32; pos: scalar or (B,) int32
     current lengths. Returns (logits (B,V), new_caches)."""
     batch = {"tokens": tokens[:, None]}
     _, logits, caches, _ = forward(params, batch, cfg, quant=quant,
                                    caches=caches, cache_pos=pos,
-                                   page_table=page_table)
+                                   page_table=page_table, attn_impl=attn_impl)
     return logits[:, 0], caches

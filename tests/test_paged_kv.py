@@ -137,8 +137,11 @@ for kv_bits in (0, 8, 4):
     dense = BatchedServer(cfg, params, batch_size=3, max_len=32,
                           kv_bits=kv_bits)
     out_d = dense.run(mk())
+    # prefill="stepwise" isolates the LAYOUT variable: dense == paged must
+    # hold bitwise under the same prefill algorithm. Bucketed == stepwise
+    # is covered separately in tests/test_serve_fast.py.
     paged = BatchedServer(cfg, params, batch_size=3, max_len=32,
-                          kv_bits=kv_bits, page_size=8)
+                          kv_bits=kv_bits, page_size=8, prefill="stepwise")
     out_p = paged.run(mk())
     for a, b in zip(out_d, out_p):
         assert a.out == b.out, (kv_bits, a.rid, a.out, b.out)
