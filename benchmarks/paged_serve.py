@@ -24,11 +24,20 @@ and reports, per configuration:
     token capacity they back (~4x smaller for int8, ~8x for int4 vs fp32),
   * total cache HBM actually allocated.
 
-Results land in results/paged_serve.json AND append a trajectory point to
-the repo-root BENCH_serve.json so the perf trend is tracked across PRs.
+A second, **shared-prefix workload** (``run_prefix`` / ``--workload
+prefix``) serves N requests that share a long system prompt and measures
+the prefix page cache: request/token hit rates, prefill forwards with
+sharing off vs on (the O(prompt/bucket) -> O(suffix/bucket) admission win),
+CoW copies and evictions, and at-rest KV bytes under uniform int8 vs a
+mixed per-layer precision profile vs int4. It RAISES on a prefix-cache
+refcount leak (allocator end-state check) — the CI bench-smoke gate.
+
+Results land in results/paged_serve.json (+ results/prefix_serve.json) AND
+append a trajectory point to the repo-root BENCH_serve.json so the perf
+trend is tracked across PRs.
 
 Run:  PYTHONPATH=src python -m benchmarks.paged_serve [--arch qwen2-72b]
-      [--page-size 16] [--requests 12] [--fast]
+      [--page-size 16] [--requests 12] [--fast] [--workload all|mixed|prefix]
 (--fast = CI smoke: tiny trace, one bench iteration per config.)
 """
 from __future__ import annotations
@@ -53,16 +62,22 @@ BENCH_TRAJECTORY = os.path.join(
 
 
 def _kv_cache_leaves(caches):
-    """Yield (kind, array) for attention-cache storage leaves."""
+    """Yield (kind, array) for attention-cache storage leaves.
+
+    Handles both the stacked (periods, ...) layout and the per-period LIST
+    layout the per-layer precision profiles use (mixed containers cannot
+    stack)."""
     for seg in caches:
-        for layer in seg:
-            if isinstance(layer, dict):
-                if "k_pages" in layer:
-                    for k in ("k_pages", "v_pages", "k_scale", "v_scale"):
-                        yield k, layer[k]
-                elif "k" in layer and "v" in layer:
-                    yield "k", layer["k"]
-                    yield "v", layer["v"]
+        for entry in seg:
+            layers = entry if isinstance(entry, list) else [entry]
+            for layer in layers:
+                if isinstance(layer, dict):
+                    if "k_pages" in layer:
+                        for k in ("k_pages", "v_pages", "k_scale", "v_scale"):
+                            yield k, layer[k]
+                    elif "k" in layer and "v" in layer:
+                        yield "k", layer["k"]
+                        yield "v", layer["v"]
 
 
 def cache_stats(srv):
@@ -134,6 +149,132 @@ def bench_one(cfg, params, *, name, requests, batch, max_len, kv_bits,
     return res
 
 
+def _mixed_profile(cfg):
+    """Per-layer KV policy with two distinct bit-widths: even layers int8
+    Q(2,6), odd layers int4 Q(2,2) — the shape of a core.search output."""
+    from repro.core.fixedpoint import FixedPointFormat
+    from repro.core.policy import LayerPolicy, PrecisionPolicy
+    return PrecisionPolicy(
+        tuple(f"layer_{i:03d}" for i in range(cfg.num_layers)),
+        tuple(LayerPolicy(None, FixedPointFormat(2, 6 if i % 2 == 0 else 2))
+              for i in range(cfg.num_layers)))
+
+
+def mk_prefix_requests(vocab, n, sys_len, max_new, seed=0):
+    """N requests sharing a common system prompt + a short random suffix —
+    the multi-user traffic shape the prefix cache exists for."""
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, vocab, sys_len).astype(np.int32)
+    return [Request(i, np.concatenate(
+                [sys_prompt,
+                 rng.integers(0, vocab, int(rng.integers(3, 8)))
+                 .astype(np.int32)]), max_new)
+            for i in range(n)]
+
+
+def _kv_at_rest_bytes(srv):
+    return sum(a.size * a.dtype.itemsize
+               for _, a in _kv_cache_leaves(srv.caches))
+
+
+def run_prefix(*, arch="qwen2-72b", requests=8, batch=4, verbose=True,
+               fast=False):
+    """Shared-prefix serving workload: prefix cache on vs off, uniform int8
+    vs per-layer profile vs int4.
+
+    Reports the prefix hit rate, prefill forwards saved (the O(prompt) ->
+    O(suffix) admission win), and at-rest KV bytes per configuration; the
+    run RAISES on a prefix-cache refcount leak (allocator end-state check),
+    which is what the CI bench-smoke step gates on."""
+    cfg = get_smoke_config(arch)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    if fast:
+        requests, batch = 4, 2
+    # 42 = 5 full pages + 2 tokens into page 6: every hit aliases 5 pages
+    # AND copies-on-write the partially shared sixth
+    sys_len, page_size, max_new, max_len = 42, 8, 8, 64
+    # pool sized for the UNSHARED worst case so on/off see identical pools
+    per_slot = -(-(sys_len + 7 + max_new) // page_size)
+    num_pages = 1 + batch * per_slot + 2
+    mk = lambda: mk_prefix_requests(cfg.vocab_size, requests, sys_len,
+                                    max_new, seed=0)
+    common = dict(batch_size=batch, max_len=max_len, page_size=page_size,
+                  num_pages=num_pages, prefill_bucket=16)
+
+    def serve(**kw):
+        srv = BatchedServer(cfg, params, **common, **kw)
+        t0 = time.time()
+        reqs = srv.run(mk())
+        return srv, reqs, time.time() - t0
+
+    off, reqs_off, dt_off = serve(kv_bits=8, prefix_cache="off")
+    on, reqs_on, dt_on = serve(kv_bits=8, prefix_cache="on")
+    prof, _, _ = serve(kv_profile=_mixed_profile(cfg), prefix_cache="on")
+    pscale, _, _ = serve(kv_bits=8, kv_scale="page", prefix_cache="on")
+    int4, _, _ = serve(kv_bits=4, prefix_cache="on")
+
+    agree = np.mean([np.mean(np.asarray(a.out) == np.asarray(b.out))
+                     for a, b in zip(reqs_off, reqs_on)])
+    if agree < 0.9:
+        raise RuntimeError(f"prefix sharing broke decode: only {agree:.1%} "
+                           f"token agreement with sharing off")
+    stats = on.prefix_cache.stats()
+    for tag, srv in [("on", on), ("profile", prof), ("pscale", pscale),
+                     ("int4", int4)]:
+        leaked = srv.release_prefix_cache()
+        if leaked or srv.allocator.num_free != srv.allocator.num_usable:
+            raise RuntimeError(
+                f"prefix-cache refcount leak in config {tag!r}: {leaked} "
+                f"pages still cache-referenced, "
+                f"{srv.allocator.num_usable - srv.allocator.num_free} "
+                f"pages unreturned after all requests completed")
+    bytes_int8 = _kv_at_rest_bytes(on)
+    bytes_prof = _kv_at_rest_bytes(prof)
+    bytes_int4 = _kv_at_rest_bytes(int4)
+    res = {
+        "arch": arch, "requests": requests, "batch": batch,
+        "sys_prompt_len": sys_len, "page_size": page_size,
+        "prefix_hit_rate": stats["hit_rate"],
+        "prefix_token_hit_rate": stats["token_hit_rate"],
+        "prefix_hit_tokens": stats["hit_tokens"],
+        "cow_copies": stats["cow_copies"],
+        "evictions": stats["evictions"],
+        "prefill_forwards_off": off.prefill_forwards,
+        "prefill_forwards_on": on.prefill_forwards,
+        "prefill_forwards_saved": on.prefill_forwards_saved,
+        "prefill_forwards_reduction": (
+            off.prefill_forwards / max(on.prefill_forwards, 1)),
+        "prefill_s_off": off.prefill_s,
+        "prefill_s_on": on.prefill_s,
+        "token_agreement_on_vs_off": float(agree),
+        "kv_at_rest_bytes": {"uniform-int8": bytes_int8,
+                             "profile-int8/int4": bytes_prof,
+                             "uniform-int4": bytes_int4},
+        "profile_bytes_vs_int8": bytes_prof / bytes_int8,
+        "tokens_per_s_on": sum(len(r.out) for r in reqs_on) / max(dt_on,
+                                                                  1e-9),
+        "tokens_per_s_off": sum(len(r.out) for r in reqs_off) / max(dt_off,
+                                                                    1e-9),
+    }
+    if verbose:
+        print(f"[prefix_serve] arch={arch} {requests} reqs sharing a "
+              f"{sys_len}-token system prompt (batch={batch})")
+        print(f"  hit rate {res['prefix_hit_rate']:.0%} requests / "
+              f"{res['prefix_token_hit_rate']:.0%} prompt tokens; "
+              f"{res['cow_copies']} CoW copies, {res['evictions']} evictions")
+        print(f"  prefill forwards {res['prefill_forwards_off']} (off) -> "
+              f"{res['prefill_forwards_on']} (on), "
+              f"{res['prefill_forwards_reduction']:.1f}x fewer "
+              f"({res['prefill_forwards_saved']} saved)")
+        print(f"  at-rest KV: int8 {bytes_int8 / 2**10:.1f} KiB, "
+              f"profile {bytes_prof / 2**10:.1f} KiB "
+              f"({res['profile_bytes_vs_int8']:.2f}x), "
+              f"int4 {bytes_int4 / 2**10:.1f} KiB")
+        print(f"  token agreement on/off {agree:.1%}; no refcount leaks")
+    save_json("prefix_serve.json", res)
+    return res
+
+
 def _append_trajectory(point):
     """BENCH_serve.json accumulates one point per bench run, so the serving
     perf trend is visible across PRs (the driver diffs it)."""
@@ -151,7 +292,15 @@ def _append_trajectory(point):
 
 
 def run(*, arch="qwen2-72b", requests=10, batch=4, max_len=64, page_size=16,
-        verbose=True, fast=False):
+        verbose=True, fast=False, workload="all"):
+    if workload == "prefix":
+        res = run_prefix(arch=arch, verbose=verbose, fast=fast)
+        point = {"when": time.strftime("%Y-%m-%d %H:%M:%S"), "arch": arch,
+                 "fast": fast, "summary": {"prefix": res}}
+        path = _append_trajectory(point)
+        if verbose:
+            print(f"  trajectory point appended to {os.path.basename(path)}")
+        return res
     cfg = get_smoke_config(arch)
     params = init_model(jax.random.PRNGKey(0), cfg)
     if fast:   # CI smoke: one tiny iteration per config, no warmup pass
@@ -205,6 +354,15 @@ def run(*, arch="qwen2-72b", requests=10, batch=4, max_len=64, page_size=16,
               f"(stepwise) -> {summary['prefill_forwards_bucketed']} "
               f"(bucketed), "
               f"{summary['prefill_forwards_reduction']:.1f}x fewer")
+    if workload == "all":
+        prefix = run_prefix(arch=arch, verbose=verbose, fast=fast)
+        summary["prefix"] = {
+            k: prefix[k] for k in
+            ("prefix_hit_rate", "prefix_token_hit_rate",
+             "prefill_forwards_off", "prefill_forwards_on",
+             "prefill_forwards_saved", "prefill_forwards_reduction",
+             "cow_copies", "evictions", "kv_at_rest_bytes",
+             "profile_bytes_vs_int8", "token_agreement_on_vs_off")}
     out = {"arch": arch, "batch": batch, "max_len": max_len,
            "page_size": page_size, "rows": rows, "summary": summary}
     save_json("paged_serve.json", out)
@@ -225,9 +383,15 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--fast", action="store_true",
                     help="CI smoke: tiny trace, single iteration per config")
+    ap.add_argument("--workload", choices=["all", "mixed", "prefix"],
+                    default="all",
+                    help="mixed = the PR-2 mixed-length trace; prefix = the "
+                         "shared-system-prompt trace (prefix cache on/off, "
+                         "per-layer profile, refcount-leak gate)")
     args = ap.parse_args(argv)
     run(arch=args.arch, requests=args.requests, batch=args.batch,
-        max_len=args.max_len, page_size=args.page_size, fast=args.fast)
+        max_len=args.max_len, page_size=args.page_size, fast=args.fast,
+        workload=args.workload)
 
 
 if __name__ == "__main__":

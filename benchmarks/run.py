@@ -9,6 +9,10 @@
   paged_serve     — paged vs dense KV-cache serving (tok/s, prefill latency,
                     HBM B/token; also appends a BENCH_serve.json trajectory
                     point at the repo root — the cross-PR perf trend)
+  prefix_serve    — shared-prefix page cache workload (hit rate, prefill
+                    forwards saved, per-layer-profile at-rest KV bytes,
+                    refcount-leak gate); also part of paged_serve's
+                    default workload
   roofline        — EXPERIMENTS.md §Roofline terms from the dry-run JSONs
 
 ``python -m benchmarks.run [--only a,b] [--fast]``
@@ -41,7 +45,10 @@ def main(argv=None):
         "lm_precision": lambda: lm_precision.run(
             steps=120 if args.fast else 300),
         "kernel_bench": kernel_bench.run,
-        "paged_serve": lambda: paged_serve.run(fast=args.fast),
+        "paged_serve": lambda: paged_serve.run(fast=args.fast,
+                                               workload="mixed"),
+        "prefix_serve": lambda: paged_serve.run(fast=args.fast,
+                                                workload="prefix"),
         "roofline": roofline.run,
     }
     # expensive searches reuse their saved results unless --force

@@ -1,0 +1,132 @@
+"""Paper search -> per-layer KV profile -> serving, end to end.
+
+The paper's §2.5 greedy search emits a per-layer PrecisionPolicy; this
+example closes the loop the ROADMAP asks for — the search output drives the
+SERVING memory footprint:
+
+1. run ``core.search.greedy_pareto_search`` on a smoke LM, scoring each
+   candidate policy by greedy-decode token agreement against the fp32
+   rollout (the serving-relevant accuracy proxy), with KV-dominated decode
+   traffic as the cost model;
+2. pick the cheapest policy within tolerance and write it to JSON
+   (``PrecisionPolicy.to_json`` — the same file ``--kv-profile`` loads);
+3. serve with ``--kv-profile``: each layer's paged pool is built in the
+   container its searched data format needs (int4 pages for <= 4 bits,
+   int8 for <= 8, float pages for fp32 layers), plus the shared-prefix
+   page cache on top (``--prefix-cache on``), and compare at-rest KV bytes
+   and output quality against uniform int8.
+
+Run:  PYTHONPATH=src python examples/serve_policy_profile.py
+"""
+import os
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_smoke_config
+from repro.core.fixedpoint import FixedPointFormat
+from repro.core.policy import PrecisionPolicy
+from repro.core.search import greedy_pareto_search
+from repro.launch.serve import BatchedServer, Request
+from repro.models.transformer import decode_step, init_model, prefill
+from repro.quant.apply import (build_model_quant, transformer_layer_names,
+                               transformer_traffic_model)
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+def main():
+    cfg = get_smoke_config("qwen2-72b")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (2, 12)).astype(np.int32)
+
+    # -- 1. search: score = decode token agreement vs the fp32 rollout ------
+    # quant rides the jitted rollout as a pytree ARGUMENT: every candidate
+    # policy shares one compiled program (the paper's search visits dozens)
+    steps = 6
+
+    def _rollout(params, tokens, quant):
+        logits, caches, pos = prefill(params, {"tokens": tokens}, cfg,
+                                      quant=quant,
+                                      max_len=tokens.shape[1] + steps + 1)
+        cur = logits.argmax(-1).astype(np.int32)
+        out = [cur]
+        for s in range(steps - 1):
+            logits, caches = decode_step(params, cur, pos + s, caches, cfg,
+                                         quant=quant)
+            cur = logits.argmax(-1).astype(np.int32)
+            out.append(cur)
+        return jax.numpy.stack(out)
+
+    rollout_j = jax.jit(_rollout)
+    ref = np.asarray(rollout_j(params, toks, None))
+
+    def eval_fn(policy):
+        mq = build_model_quant(policy, cfg, quantize_kv=True,
+                               quantize_activations=False)
+        return float(np.mean(np.asarray(rollout_j(params, toks, mq)) == ref))
+
+    names = transformer_layer_names(cfg)
+    init = PrecisionPolicy.uniform(names, None, FixedPointFormat(2, 6))
+    traffic = transformer_traffic_model(cfg, batch=1, seq_len=64,
+                                        mode="decode")
+    res = greedy_pareto_search(eval_fn, traffic, init,
+                               fields=("data_int", "data_frac"),
+                               max_steps=8, verbose=True)
+    point = res.select(tolerance=0.05) or res.trajectory[-1]
+    policy = point.policy
+    print(f"\nsearched policy (traffic ratio "
+          f"{point.traffic_ratio:.3f} vs fp32):\n{policy.table()}")
+
+    # -- 2. the JSON file --kv-profile consumes -----------------------------
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "kv_policy_qwen2_72b_smoke.json")
+    with open(path, "w") as f:
+        f.write(policy.to_json())
+    print(f"policy written to {path}")
+    with open(path) as f:
+        loaded = PrecisionPolicy.from_json(f.read())
+
+    # -- 3. serve it: per-layer containers + shared-prefix cache ------------
+    sys_prompt = rng.integers(0, cfg.vocab_size, 18).astype(np.int32)
+
+    def mk():
+        r = np.random.default_rng(7)
+        return [Request(i, np.concatenate(
+                    [sys_prompt, r.integers(0, cfg.vocab_size, 4)
+                     .astype(np.int32)]), 8) for i in range(6)]
+
+    def kv_bytes(srv):
+        total = 0
+        for seg in srv.caches:
+            for entry in seg:
+                for d in (entry if isinstance(entry, list) else [entry]):
+                    if isinstance(d, dict) and "k_pages" in d:
+                        total += sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                                     for a in d.values())
+        return total
+
+    base = dict(batch_size=3, max_len=64, page_size=8, prefix_cache="on")
+    print("\n=== uniform int8 + prefix cache ===")
+    srv8 = BatchedServer(cfg, params, kv_bits=8, **base)
+    out8 = srv8.run(mk(), verbose=True)
+    print("=== searched per-layer profile (--kv-profile) + prefix cache ===")
+    srvp = BatchedServer(cfg, params, kv_profile=loaded, **base)
+    outp = srvp.run(mk(), verbose=True)
+    print(f"profile key: {srvp.profile_key}")
+
+    agree = np.mean([np.mean(np.asarray(a.out) == np.asarray(b.out))
+                     for a, b in zip(out8, outp)])
+    b8, bp = kv_bytes(srv8), kv_bytes(srvp)
+    print(f"\nat-rest KV pools: uniform-int8 {b8 / 2**10:.1f} KiB -> "
+          f"profile {bp / 2**10:.1f} KiB ({bp / b8:.2f}x)")
+    print(f"token agreement profile vs uniform-int8: {agree:.1%}")
+    print(f"prefix stats (profile server): {srvp.prefix_cache.stats()}")
+    leak8, leakp = srv8.release_prefix_cache(), srvp.release_prefix_cache()
+    print(f"refcount leaks after release: int8={leak8} profile={leakp}")
+
+
+if __name__ == "__main__":
+    main()

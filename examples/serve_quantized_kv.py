@@ -15,11 +15,27 @@ scale). Three levers stack here:
   Pallas kernel (`kernels.paged_kv_attention`) — interpret-mode on CPU,
   compiled on TPU. `attn_impl="gather"` stays the bitwise-reference mode.
 
+Two further levers ride the same paged pool:
+
+* **shared-prefix page cache** (``prefix_cache="on"`` / ``--prefix-cache
+  on``): requests sharing a system prompt alias its full pages (refcounted;
+  freed only at refcount zero), copy-on-write the page where they diverge
+  mid-page, and prefill only their suffix. Unreferenced cached prefixes are
+  LRU-evicted under pool pressure; ``release_prefix_cache()`` drops them
+  all and returns the leak count (0 = clean).
+* **per-layer precision profiles** (``--kv-profile policy.json``, see
+  examples/serve_policy_profile.py) store each layer's pages in the
+  container its policy data format needs — the paper's per-layer result
+  applied to serving HBM; ``--kv-scale page`` swaps the static Q(I,F) grid
+  for dynamic per-page max-abs calibration.
+
 Error semantics: paged admission preflights a request's WORST-CASE page
-demand (prompt + max_new). A request that can never fit the pool raises
-``core.paged_kv.OutOfPagesError`` with the counts (needed/free/usable); one
-that only has to wait for live requests to release pages is deferred in the
-queue. The free list can therefore never empty mid-prefill.
+demand (prompt + max_new; with prefix sharing, only the non-shared suffix
+is charged). A request that can never fit the pool raises
+``core.paged_kv.OutOfPagesError`` with the counts (needed/free/usable plus
+written vs reserved-but-unwritten vs evictable-cached); one that only has
+to wait for live requests to release pages is deferred in the queue. The
+free list can therefore never empty mid-prefill.
 
 Prints token agreement between the runs and the cache footprint ratios.
 
@@ -91,6 +107,25 @@ def main():
           f"{agreement(reqs_fp, reqs_pl):.1%}")
     print(f"pages free after run: {srv_p4.allocator.num_free}/"
           f"{srv_p4.allocator.num_pages - 1} (all requests released)")
+
+    print("=== int8 paged + shared-prefix page cache ===")
+    rng = np.random.default_rng(3)
+    sys_prompt = rng.integers(0, cfg.vocab_size, 22).astype(np.int32)
+    mk_shared = lambda: [
+        Request(i, np.concatenate([sys_prompt,
+                                   np.random.default_rng(i).integers(
+                                       0, cfg.vocab_size, 4)
+                                   .astype(np.int32)]), 10)
+        for i in range(8)]
+    srv_px = BatchedServer(cfg, params, batch_size=4, max_len=96, kv_bits=8,
+                           page_size=16, prefix_cache="on")
+    srv_px.run(mk_shared(), verbose=True)
+    st = srv_px.prefix_cache.stats()
+    print(f"  {st['hits']}/{st['lookups']} prompts hit the cache "
+          f"({st['hit_tokens']} tokens aliased, {st['cow_copies']} CoW "
+          f"copies); {srv_px.prefill_forwards_saved} prefill forwards saved")
+    print(f"  release_prefix_cache() -> {srv_px.release_prefix_cache()} "
+          f"leaked pages (0 = every refcount balanced)")
 
     # admission preflight: a request whose prompt + max_new can never be
     # backed by the pool is rejected up front with counts

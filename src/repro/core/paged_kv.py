@@ -53,17 +53,29 @@ class OutOfPagesError(RuntimeError):
 
     Raised *before* any page is handed out (admission preflight) or when the
     free list empties mid-run, always with the counts needed to size
-    ``--num-pages`` correctly.
+    ``--num-pages`` correctly. ``reserved`` separates pages *promised* to
+    live requests but not yet written (admission reservations) from
+    ``written`` pages already holding live KV — under prefix sharing a
+    request's demand is suffix-only, so deferral decisions need the split,
+    not just the free count. ``evictable`` counts unreferenced prefix-cache
+    pages that eviction could reclaim.
     """
 
     def __init__(self, *, needed: int, free: int, total: int,
-                 rid: Optional[int] = None):
+                 rid: Optional[int] = None, reserved: int = 0,
+                 written: int = 0, evictable: int = 0):
         self.needed, self.free, self.total, self.rid = needed, free, total, rid
+        self.reserved, self.written = reserved, written
+        self.evictable = evictable
         who = f"request {rid}" if rid is not None else "allocation"
+        extra = ""
+        if reserved or written or evictable:
+            extra = (f" [{written} written, {reserved} reserved-unwritten, "
+                     f"{evictable} evictable-cached]")
         super().__init__(
             f"KV page pool cannot back {who}: needs {needed} page(s), "
-            f"{free} free of {total} usable (page 0 is scratch); raise "
-            f"--num-pages, shrink --max-new, or lower concurrency")
+            f"{free} free of {total} usable (page 0 is scratch){extra}; "
+            f"raise --num-pages, shrink --max-new, or lower concurrency")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,11 +153,23 @@ def max_pages_per_seq(max_len: int, page_size: int) -> int:
 # Host-side page allocator
 # ---------------------------------------------------------------------------
 class PageAllocator:
-    """Free-list allocator over pool pages 1..num_pages-1 (0 is scratch).
+    """Refcounted free-list allocator over pages 1..num_pages-1 (0: scratch).
 
     Pure host-side bookkeeping: the device pool is preallocated; "allocating"
     a page just hands out an index. Fragmentation is free — any page serves
     any (sequence, logical-block) slot via the page table.
+
+    **Refcounts** are what make prefix sharing safe: ``alloc`` returns a page
+    at refcount 1, ``incref`` adds a reference (a sharer's page table aliasing
+    the page, or the prefix cache retaining it), and ``free`` RELEASES one
+    reference per page — the page returns to the free list only when its
+    count reaches zero, so no caller can ever free a page out from under a
+    sharer, and releasing a page twice from the same owner raises.
+
+    ``reclaim`` (optional callable ``n -> pages_freed``) is invoked when the
+    free list empties mid-``alloc`` — the prefix cache registers its LRU
+    eviction here, so unreferenced cached prefixes are recycled under pool
+    pressure instead of failing the allocation.
     """
 
     def __init__(self, num_pages: int):
@@ -153,6 +177,8 @@ class PageAllocator:
             raise ValueError("need >= 2 pages (page 0 is scratch)")
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._refs: Dict[int, int] = {}
+        self.reclaim = None  # optional: n_pages -> n_freed (LRU eviction)
 
     @property
     def num_free(self) -> int:
@@ -162,29 +188,48 @@ class PageAllocator:
     def num_usable(self) -> int:
         return self.num_pages - 1
 
+    def refcount(self, page: int) -> int:
+        """Live references on ``page`` (0 = free / never allocated)."""
+        return self._refs.get(page, 0)
+
     def check(self, needed: int, *, rid: Optional[int] = None) -> None:
         """Preflight: raise OutOfPagesError unless ``needed`` pages are free.
 
-        Callers admit a request only after checking its whole worst-case
-        demand (prompt + max_new), so the free list can never empty
-        mid-prefill with an opaque error.
+        Deliberately CONSERVATIVE: only the free list is consulted, not the
+        ``reclaim`` hook — pages eviction could recover don't count here
+        (the serving admission path does its own reclaim-aware accounting).
         """
         if needed > self.num_free:
             raise OutOfPagesError(needed=needed, free=self.num_free,
                                   total=self.num_usable, rid=rid)
 
     def alloc(self) -> int:
+        if not self._free and self.reclaim is not None:
+            self.reclaim(1)
         if not self._free:
             raise OutOfPagesError(needed=1, free=0, total=self.num_usable)
-        return self._free.pop()
+        page = self._free.pop()
+        self._refs[page] = 1
+        return page
+
+    def incref(self, page: int) -> None:
+        if self._refs.get(page, 0) <= 0:
+            raise ValueError(f"incref of unallocated page {page}")
+        self._refs[page] += 1
 
     def free(self, pages: Sequence[int]) -> None:
+        """Release ONE reference per page; recycle pages that hit zero."""
         for p in pages:
             if not (0 < p < self.num_pages):
                 raise ValueError(f"freeing invalid page id {p}")
-            if p in self._free:
+            refs = self._refs.get(p, 0)
+            if refs <= 0:
                 raise ValueError(f"double free of page {p}")
-            self._free.append(p)
+            if refs == 1:
+                del self._refs[p]
+                self._free.append(p)
+            else:
+                self._refs[p] = refs - 1
 
 
 # ---------------------------------------------------------------------------
@@ -216,7 +261,7 @@ def _pack_grid(q, bits):
 
 def paged_update(pool, k_new, v_new, page_table, pos, *, page_size: int,
                  container: str = "int8", int_bits=None, frac_bits=None,
-                 valid_len=None):
+                 valid_len=None, scale_mode: str = "static"):
     """Append S new tokens per sequence to the paged pool.
 
     k_new/v_new: (B, S, KV, hd) float; page_table: (B, NP) int32;
@@ -229,9 +274,22 @@ def paged_update(pool, k_new, v_new, page_table, pos, *, page_size: int,
     last page once ``pos + S`` exceeds the page-table span, because the
     block gather clamps). Returns the updated pool dict.
 
+    ``scale_mode`` picks the dequant-scale calibration for int containers:
+
+    * ``"static"`` (default) — the layer's Q(I,F) grid scale, uniform across
+      pages (bitwise-reproducible; the reference mode).
+    * ``"page"``  — **dynamic per-page max-abs calibration**: each touched
+      page's scale is the running max-abs of the values written to it over
+      the container's symmetric grid, so small-magnitude layers get a far
+      finer step than the static Q(I,F) grid. When a write raises a page's
+      scale, the page's existing grid values are requantized in place
+      (gather -> rescale -> scatter of just the touched pages), so earlier
+      tokens stay correct under the new scale.
+
     Distinct sequences must map to distinct pages (the allocator guarantees
-    it), so the scatter is collision-free except on the shared scratch page,
-    where any write order is acceptable.
+    it; prefix-shared pages are never written by sharers), so the scatter is
+    collision-free except on the shared scratch page, where any write order
+    is acceptable.
     """
     B, S = k_new.shape[0], k_new.shape[1]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
@@ -240,6 +298,7 @@ def paged_update(pool, k_new, v_new, page_table, pos, *, page_size: int,
     blocks = jnp.minimum(blocks, page_table.shape[1] - 1)
     offsets = positions % page_size                       # (B, S)
     pids = jnp.take_along_axis(page_table, blocks, axis=1)  # (B, S)
+    valid = jnp.ones((B, S), bool)
     if valid_len is not None:
         vl = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32).reshape(-1),
                               (B,))
@@ -247,16 +306,22 @@ def paged_update(pool, k_new, v_new, page_table, pos, *, page_size: int,
         pids = jnp.where(valid, pids, SCRATCH_PAGE)
 
     if container == "fp":
-        k_q, v_q = k_new, v_new
-        new = {
+        return {
             "k_pages": pool["k_pages"].at[pids, offsets].set(
-                k_q.astype(pool["k_pages"].dtype)),
+                k_new.astype(pool["k_pages"].dtype)),
             "v_pages": pool["v_pages"].at[pids, offsets].set(
-                v_q.astype(pool["v_pages"].dtype)),
+                v_new.astype(pool["v_pages"].dtype)),
             "k_scale": pool["k_scale"],
             "v_scale": pool["v_scale"],
         }
-        return new
+
+    if scale_mode == "page":
+        return _paged_update_page_scale(
+            pool, k_new, v_new, page_table, pos, pids, offsets, valid,
+            page_size=page_size, container=container)
+    if scale_mode != "static":
+        raise ValueError(f"scale_mode must be 'static' or 'page', "
+                         f"got {scale_mode!r}")
 
     k_q, rscale = _quant_grid(k_new, int_bits, frac_bits)
     v_q, _ = _quant_grid(v_new, int_bits, frac_bits)
@@ -271,6 +336,88 @@ def paged_update(pool, k_new, v_new, page_table, pos, *, page_size: int,
         "k_scale": pool["k_scale"].at[pids].set(sc),
         "v_scale": pool["v_scale"].at[pids].set(sc),
     }
+
+
+_SCALE_EPS = 2.0 ** -20   # floor for all-zero chunks (avoids 0-division)
+
+
+def _paged_update_page_scale(pool, k_new, v_new, page_table, pos, pids,
+                             offsets, valid, *, page_size: int,
+                             container: str):
+    """Per-page max-abs calibrated write (``scale_mode="page"``).
+
+    Touched pages form a contiguous block range per row (positions are
+    contiguous), so at most ``ceil((S-1)/ps) + 1`` pages per row are
+    gathered, requantized under the (possibly raised) new scale, scattered
+    back, and only then receive the new tokens. Pages past the row's table
+    span and fully-invalid slots redirect to the scratch page, whose content
+    is never read un-masked — duplicate scratch scatters are don't-care.
+    """
+    B, S = k_new.shape[0], k_new.shape[1]
+    ps, NP = page_size, page_table.shape[1]
+    bits = {"int8": 8, "int4": 4}[container]
+    qmax = float(2 ** (bits - 1) - 1)
+    hd = k_new.shape[-1]
+
+    nb = (S - 1) // ps + 2                      # static touched-block bound
+    blk_first = pos // ps                       # (B,)
+    # tokens past the page-table span clamp into the LAST page in static
+    # mode (harmless there: uniform scale, stale rewrite). Under per-page
+    # scales that rewrite would disagree with the page's stored scale, so
+    # out-of-span tokens redirect to the scratch page instead.
+    positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    in_tok = positions // ps < NP               # (B, S)
+    pids = jnp.where(in_tok, pids, SCRATCH_PAGE)
+    blocks_nb = blk_first[:, None] + jnp.arange(nb, dtype=jnp.int32)[None, :]
+    in_span = blocks_nb < NP
+    pids_nb = jnp.take_along_axis(page_table,
+                                  jnp.minimum(blocks_nb, NP - 1), axis=1)
+    pids_nb = jnp.where(in_span, pids_nb, SCRATCH_PAGE)   # (B, nb)
+
+    # a block is "fresh" iff this chunk's first write to it lands at offset
+    # 0 — its prior content (freed-page garbage) must not pin the old scale
+    fresh = (jnp.arange(nb, dtype=jnp.int32)[None, :] > 0) | \
+        ((pos % ps) == 0)[:, None]              # (B, nb)
+
+    rows = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[:, None], (B, S))
+    lb = jnp.clip(positions // ps - blk_first[:, None], 0, nb - 1)  # (B, S)
+
+    def _page_scales(x_new, old_scale):
+        amax = jnp.max(jnp.abs(x_new.astype(jnp.float32)),
+                       axis=(-2, -1))           # (B, S) per-token max-abs
+        amax = jnp.where(valid & in_tok, amax, 0.0)
+        need = jnp.zeros((B, nb), jnp.float32).at[rows, lb].max(amax) / qmax
+        old = old_scale[pids_nb]                # (B, nb)
+        new = jnp.maximum(jnp.where(fresh, 0.0, old),
+                          jnp.maximum(need, _SCALE_EPS))
+        ratio = jnp.where(fresh, 1.0, old / new)
+        return new, ratio
+
+    def _requant_and_write(pages, scale, x_new, new_scale, ratio):
+        got = pages[pids_nb]                    # (B, nb, ps, KV, hdw)
+        if container == "int4":
+            got = unpack_bits(got, 4, hd)
+        re = jnp.round(got.astype(jnp.float32)
+                       * ratio[:, :, None, None, None])
+        re = jnp.clip(re, -qmax, qmax)
+        sc_tok = new_scale[rows, lb]            # (B, S) per-token page scale
+        q = jnp.clip(jnp.round(x_new.astype(jnp.float32)
+                               / sc_tok[:, :, None, None]), -qmax, qmax)
+        if container == "int4":
+            re = _pack_grid(re, 4)
+            q = _pack_grid(q, 4)
+        pages = pages.at[pids_nb].set(re.astype(pages.dtype))
+        pages = pages.at[pids, offsets].set(q.astype(pages.dtype))
+        return pages, scale.at[pids_nb].set(new_scale)
+
+    k_ns, k_ratio = _page_scales(k_new, pool["k_scale"])
+    v_ns, v_ratio = _page_scales(v_new, pool["v_scale"])
+    k_pages, k_scale = _requant_and_write(pool["k_pages"], pool["k_scale"],
+                                          k_new, k_ns, k_ratio)
+    v_pages, v_scale = _requant_and_write(pool["v_pages"], pool["v_scale"],
+                                          v_new, v_ns, v_ratio)
+    return {"k_pages": k_pages, "v_pages": v_pages,
+            "k_scale": k_scale, "v_scale": v_scale}
 
 
 def paged_gather(pool, page_table, *, container: str = "int8",
@@ -297,6 +444,24 @@ def paged_gather(pool, page_table, *, container: str = "int8",
     v = (vg.astype(jnp.float32) * vs[:, :, None, None, None]).astype(dtype)
     hd = k.shape[-1]
     return (k.reshape(B, NP * ps, KV, hd), v.reshape(B, NP * ps, KV, hd))
+
+
+def copy_pool_pages(pool, src: int, dst: int, *, page_axis: int = 0):
+    """Copy one page's stored bytes + scales ``src -> dst`` (copy-on-write).
+
+    The prefix cache calls this when a request diverges *inside* a partially
+    shared page: the sharer gets a private copy to extend while the cached
+    source page stays byte-identical for its other readers. ``page_axis``
+    is 0 for a single layer's pool and 1 for the (periods, NP, ...) stacked
+    pools the segmented scan carries.
+    """
+    idx = (slice(None),) * page_axis
+
+    def cp(a):
+        return a.at[idx + (dst,)].set(a[idx + (src,)])
+
+    return {"k_pages": cp(pool["k_pages"]), "v_pages": cp(pool["v_pages"]),
+            "k_scale": cp(pool["k_scale"]), "v_scale": cp(pool["v_scale"])}
 
 
 def pool_bytes(pool) -> int:

@@ -1,0 +1,311 @@
+"""Shared-prefix page cache: a page-granular radix trie over prompt tokens.
+
+Under real multi-user traffic most requests share long system-prompt
+prefixes. Re-prefilling and re-storing those tokens per slot wastes both
+compute (O(prompt/bucket) chunk forwards) and pool pages. This module keeps
+a **radix/trie index over page-size token chunks**: each node is one pool
+page whose KV holds the node's tokens at the node's absolute positions, so a
+new request whose prompt starts with a cached chain can
+
+* **alias** every fully-matched page (pure page-table indirection — the
+  attention kernels never know; refcounts in
+  :class:`repro.core.paged_kv.PageAllocator` keep aliased pages alive), and
+* **copy-on-write** the page where it diverges mid-page: the matched prefix
+  of the page is copied to a private page
+  (:func:`repro.core.paged_kv.copy_pool_pages`) which the request then
+  extends, while the cached source stays byte-identical for other readers.
+
+Correctness invariants:
+
+* only FULL pages are aliased — a sharer's first write position is always
+  past every aliased page, so shared pages are never scattered to;
+* partial nodes are leaves (a child chunk can only continue at the next
+  page boundary, which requires its parent to be full);
+* page content is position-dependent (RoPE is applied before the cache
+  write), so a chain only ever matches prompts token-for-token from
+  position 0 — exactly the lookup this trie implements;
+* pages are only shared between identically-quantized configurations: the
+  trie is namespaced by a **profile key** (the per-layer KV precision
+  profile + scale mode), so an int8 chain can never back an int4 request.
+
+Eviction is LRU over *unreferenced* cached pages (allocator refcount 1 —
+held only by the cache), leaf-first so a chain never develops a hole. The
+cache registers itself as the allocator's ``reclaim`` hook: pool pressure
+evicts cold prefixes instead of failing the allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .paged_kv import PageAllocator
+
+__all__ = ["PrefixCache", "PrefixHit"]
+
+
+@dataclasses.dataclass
+class PrefixHit:
+    """Result of a longest-prefix lookup.
+
+    ``matched == len(full_pages) * page_size + cow_valid``. ``full_pages``
+    are aliasable as-is (every one is a full page); ``cow_page`` (if any) is
+    the cached page the query diverges inside — the caller must copy it and
+    may then treat its first ``cow_valid`` tokens as written.
+    """
+
+    matched: int = 0
+    full_pages: List[int] = dataclasses.field(default_factory=list)
+    cow_page: Optional[int] = None
+    cow_valid: int = 0
+
+
+class _Node:
+    """One cached page: ``tokens`` (<= page_size) stored at ``page``.
+
+    Children are keyed by their full token tuple for O(1) exact-chunk
+    descent; partial children (count < page_size) are leaves and are found
+    by the best-common-prefix scan.
+    """
+
+    __slots__ = ("tokens", "page", "children", "parent", "stamp")
+
+    def __init__(self, tokens: Tuple[int, ...], page: int, parent, stamp: int):
+        self.tokens = tokens
+        self.page = page
+        self.children: Dict[Tuple[int, ...], "_Node"] = {}
+        self.parent = parent
+        self.stamp = stamp
+
+    @property
+    def count(self) -> int:
+        return len(self.tokens)
+
+
+def _common_prefix(a: Sequence[int], b: Sequence[int]) -> int:
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
+class PrefixCache:
+    """Radix index of cached prompt pages over one server's page pool.
+
+    The cache holds ONE allocator reference per cached page (taken at
+    ``insert``), on top of whatever slots reference it — so a page is
+    evictable exactly when its refcount is 1.
+    """
+
+    def __init__(self, allocator: PageAllocator, page_size: int,
+                 profile_key: str = ""):
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        self.allocator = allocator
+        self.page_size = page_size
+        self.profile_key = profile_key
+        self._roots: Dict[str, _Node] = {}
+        self._clock = itertools.count()
+        # instrumentation (benchmarks/serve read these)
+        self.lookups = 0
+        self.hits = 0
+        self.hit_tokens = 0
+        self.lookup_tokens = 0
+        self.inserted_pages = 0
+        self.cow_copies = 0          # bumped by the server after each copy
+        self.evictions = 0
+
+    # -- internals ----------------------------------------------------------
+    def _root(self, profile_key: Optional[str]) -> _Node:
+        key = self.profile_key if profile_key is None else profile_key
+        if key not in self._roots:
+            self._roots[key] = _Node((), -1, None, next(self._clock))
+        return self._roots[key]
+
+    def _nodes(self) -> List[_Node]:
+        out = []
+        stack = list(self._roots.values())
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n.page >= 0:
+                out.append(n)
+        return out
+
+    # -- stats --------------------------------------------------------------
+    @property
+    def num_pages(self) -> int:
+        """Pages currently retained by the cache."""
+        return len(self._nodes())
+
+    def evictable_pages(self) -> int:
+        """Pages reclaimable right now: refcount-1 nodes whose whole subtree
+        is refcount-1 (an ancestor of a referenced page must stay, or the
+        chain develops a hole while a reader still aliases the child)."""
+
+        def count(node: _Node) -> Tuple[int, bool]:
+            n, free = 0, True
+            for c in node.children.values():
+                cn, cfree = count(c)
+                n += cn
+                free &= cfree
+            if node.page >= 0:
+                if free and self.allocator.refcount(node.page) == 1:
+                    return n + 1, True
+                return n, False
+            return n, free
+        return sum(count(r)[0] for r in self._roots.values())
+
+    # -- lookup -------------------------------------------------------------
+    def lookup(self, tokens: Sequence[int],
+               profile_key: Optional[str] = None,
+               record: bool = True) -> PrefixHit:
+        """Longest cached prefix of ``tokens`` (page-granular + intra-page).
+
+        Pure read: no refcounts change. The caller pins (increfs) the hit's
+        pages before any operation that could evict — lookup and pinning are
+        adjacent, synchronous host work in the serving loop.
+
+        ``record=False`` leaves the hit-rate counters untouched (the server
+        passes it during admission, which may retry the same request every
+        decode span while deferred, and records once on success via
+        :meth:`note_lookup`); chain LRU stamps are refreshed either way.
+        """
+        tokens = [int(t) for t in tokens]
+        if record:
+            self.lookups += 1
+            self.lookup_tokens += len(tokens)
+        hit = PrefixHit()
+        node = self._root(profile_key)
+        ps = self.page_size
+        i = 0
+        while i < len(tokens):
+            chunk = tuple(tokens[i:i + ps])
+            child = node.children.get(chunk) if len(chunk) == ps else None
+            if child is not None and child.count == ps:
+                child.stamp = next(self._clock)
+                hit.full_pages.append(child.page)
+                hit.matched += ps
+                node = child
+                i += ps
+                continue
+            # diverging (or final sub-page) chunk: best intra-page match
+            best, best_len = None, 0
+            for c in node.children.values():
+                n = _common_prefix(c.tokens, chunk)
+                if n > best_len:
+                    best, best_len = c, n
+            if best is not None:
+                best.stamp = next(self._clock)
+                hit.cow_page = best.page
+                hit.cow_valid = best_len
+                hit.matched += best_len
+            break
+        if record and hit.matched:
+            self.hits += 1
+            self.hit_tokens += hit.matched
+        return hit
+
+    def note_lookup(self, n_tokens: int, matched: int) -> None:
+        """Record one admission's hit-rate sample (pairs with
+        ``lookup(record=False)``: counted once per ADMITTED request, not
+        once per deferral retry)."""
+        self.lookups += 1
+        self.lookup_tokens += n_tokens
+        if matched:
+            self.hits += 1
+            self.hit_tokens += matched
+
+    # -- insert -------------------------------------------------------------
+    def insert(self, tokens: Sequence[int], pages: Sequence[int],
+               profile_key: Optional[str] = None) -> int:
+        """Index ``tokens`` (page-chunked into ``pages``) into the trie.
+
+        ``pages[j]`` must hold the KV of ``tokens[j*ps:(j+1)*ps]`` at those
+        absolute positions (the caller's prefill just wrote them, or they
+        came from this cache). Chunks already cached are deduplicated —
+        existing nodes are reused and the caller's duplicate page simply
+        stays slot-owned. Newly indexed pages get one cache reference
+        (``allocator.incref``). Returns the number of pages newly retained.
+        """
+        tokens = [int(t) for t in tokens]
+        ps = self.page_size
+        need = -(-len(tokens) // ps) if tokens else 0
+        if len(pages) < need:
+            raise ValueError(f"insert needs {need} pages for "
+                             f"{len(tokens)} tokens, got {len(pages)}")
+        node = self._root(profile_key)
+        added = 0
+        for j in range(need):
+            chunk = tuple(tokens[j * ps:(j + 1) * ps])
+            full = len(chunk) == ps
+            if full:
+                child = node.children.get(chunk)
+                if child is not None:
+                    child.stamp = next(self._clock)
+                    node = child
+                    continue
+            else:
+                # final partial chunk: covered iff an existing child already
+                # holds these tokens as a prefix
+                if any(_common_prefix(c.tokens, chunk) == len(chunk)
+                       for c in node.children.values()):
+                    break
+            page = int(pages[j])
+            self.allocator.incref(page)
+            child = _Node(chunk, page, node, next(self._clock))
+            node.children[chunk] = child
+            added += 1
+            if not full:
+                break
+            node = child
+        self.inserted_pages += added
+        return added
+
+    # -- eviction -----------------------------------------------------------
+    def evict(self, n_pages: int) -> int:
+        """Release up to ``n_pages`` LRU unreferenced cached pages.
+
+        Leaf-first: only nodes with no children are candidates, so chains
+        never develop holes; a parent becomes a candidate once its children
+        are gone. Returns the number of pages actually freed."""
+        freed = 0
+        while freed < n_pages:
+            victim = None
+            for node in self._nodes():
+                if node.children:
+                    continue
+                if self.allocator.refcount(node.page) != 1:
+                    continue
+                if victim is None or node.stamp < victim.stamp:
+                    victim = node
+            if victim is None:
+                break
+            del victim.parent.children[victim.tokens]
+            self.allocator.free([victim.page])
+            self.evictions += 1
+            freed += 1
+        return freed
+
+    def clear(self) -> int:
+        """Evict everything evictable; returns the number of pages the cache
+        STILL retains (pages some slot also references — nonzero after all
+        slots released means a refcount leak)."""
+        self.evict(len(self._nodes()))
+        return self.num_pages
+
+    def stats(self) -> dict:
+        return {
+            "lookups": self.lookups,
+            "hits": self.hits,
+            "hit_rate": self.hits / max(self.lookups, 1),
+            "hit_tokens": self.hit_tokens,
+            "token_hit_rate": self.hit_tokens / max(self.lookup_tokens, 1),
+            "cached_pages": self.num_pages,
+            "evictable_pages": self.evictable_pages(),
+            "inserted_pages": self.inserted_pages,
+            "cow_copies": self.cow_copies,
+            "evictions": self.evictions,
+        }

@@ -38,6 +38,21 @@ The serving **hot path** is built around three ideas:
   next-token ids device-to-device and fetching generated tokens
   asynchronously at run boundaries — no per-token ``.at[slot].set`` and no
   blocking per-step ``np.array`` round-trips.
+* **Shared-prefix page cache** (--prefix-cache on): a page-granular radix
+  index over prompt tokens (``core.prefix_cache``). Admission aliases fully
+  matched pages into the new slot's page table (refcounted — sharing is
+  pure indirection, the kernels never know), copies-on-write the page where
+  the prompt diverges mid-page, charges reservation accounting only for the
+  non-shared suffix, and prefills only that suffix: prefix hits turn
+  O(prompt/bucket) admission forwards into O(suffix/bucket). Unreferenced
+  cached prefixes are LRU-evicted under pool pressure.
+* **Per-layer KV precision profiles** (--kv-profile policy.json): the
+  paper's central result — precision tolerance varies per layer — applied
+  to the serving pool. Each layer's pages live in the container its policy
+  data format needs (int4 / int8 / float), so a ``core.search`` policy
+  drives the at-rest KV footprint directly; uniform --kv-bits stays the
+  degenerate profile. --kv-scale page additionally calibrates per-page
+  max-abs dequant scales at write time instead of the static Q(I,F) grid.
 
 CPU demos:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
@@ -64,10 +79,13 @@ import numpy as np
 from ..configs.registry import get_config, get_smoke_config
 from ..core.fixedpoint import FixedPointFormat
 from ..core.paged_kv import (SCRATCH_PAGE, OutOfPagesError, PageAllocator,
-                             PagedCacheSpec, max_pages_per_seq)
-from ..core.policy import PrecisionPolicy
+                             PagedCacheSpec, copy_pool_pages,
+                             max_pages_per_seq)
+from ..core.policy import LayerPolicy, PrecisionPolicy
+from ..core.prefix_cache import PrefixCache
 from ..models.transformer import init_cache, init_model
-from ..quant.apply import build_model_quant, transformer_layer_names
+from ..quant.apply import (build_model_quant, kv_profile_key,
+                           transformer_layer_names)
 from .steps import make_chunk_prefill_step, make_decode_step
 
 
@@ -115,7 +133,9 @@ class BatchedServer:
                  kv_bits: int = 0, page_size: int = 0,
                  num_pages: Optional[int] = None, seed: int = 0,
                  attn_impl: str = "gather", prefill: str = "auto",
-                 prefill_bucket: int = 32):
+                 prefill_bucket: int = 32,
+                 kv_profile: Optional[PrecisionPolicy] = None,
+                 kv_scale: str = "static", prefix_cache: str = "off"):
         self.cfg = cfg
         self.params = params
         self.B = batch_size
@@ -133,12 +153,12 @@ class BatchedServer:
         if prefill not in ("auto", "bucketed", "stepwise"):
             raise ValueError(f"prefill must be auto|bucketed|stepwise, "
                              f"got {prefill!r}")
+        attn_only = all(k == "attn" for k in cfg.layer_kinds)
         # bucketed prefill is only offered where it is output-equivalent to
         # the stepwise reference: SSM states are per-slot dense, and
         # capacity-bounded scatter MoE routes differently at chunk batch
         # shapes (capacity scales with tokens-per-forward)
-        bucketed_ok = (self.paged
-                       and all(k == "attn" for k in cfg.layer_kinds)
+        bucketed_ok = (self.paged and attn_only
                        and (cfg.num_experts == 0
                             or cfg.moe_mode == "eval_all"))
         if prefill == "bucketed" and not bucketed_ok:
@@ -152,15 +172,58 @@ class BatchedServer:
         if prefill_bucket < 1:
             raise ValueError("prefill_bucket must be >= 1")
         self.prefill_bucket = prefill_bucket
+        if kv_scale not in ("static", "page"):
+            raise ValueError(f"kv_scale must be 'static' or 'page', "
+                             f"got {kv_scale!r}")
+        if kv_scale == "page" and not (self.paged
+                                       and (kv_bits or kv_profile)):
+            raise ValueError("--kv-scale page calibrates per-page dequant "
+                             "scales; it needs a quantized paged cache "
+                             "(--page-size > 0 and --kv-bits/--kv-profile)")
+        self.kv_scale = kv_scale
+        if prefix_cache not in ("on", "off"):
+            raise ValueError(f"prefix_cache must be 'on' or 'off', "
+                             f"got {prefix_cache!r}")
+        if prefix_cache == "on" and not self.paged:
+            raise ValueError("--prefix-cache on shares pool pages; it needs "
+                             "--page-size > 0")
+        if prefix_cache == "on" and not attn_only:
+            raise ValueError("prefix sharing needs an attention-only arch: "
+                             "an SSM state folds the whole prefix, so "
+                             "cached KV pages cannot stand in for skipped "
+                             "prefill forwards")
         self.quant = None
-        if kv_bits:
+        if kv_profile is not None:
+            if kv_bits:
+                raise ValueError("--kv-profile supersedes --kv-bits; "
+                                 "pass only one")
+            if not (self.paged and attn_only):
+                raise ValueError("--kv-profile (per-layer KV containers) "
+                                 "needs a paged cache and an attention-only "
+                                 "arch")
+            # serving quantizes the CACHE only: data formats drive the KV
+            # containers, weight formats (if the policy has them, e.g. from
+            # core.search output) are dropped
+            kv_profile = PrecisionPolicy(
+                kv_profile.names,
+                tuple(LayerPolicy(None, lp.data) for lp in kv_profile.layers))
+            self.quant = build_model_quant(kv_profile, cfg, quantize_kv=True,
+                                           quantize_activations=False,
+                                           per_layer_kv=True,
+                                           kv_scale_mode=kv_scale)
+        elif kv_bits:
             container = "int4" if (self.paged and kv_bits <= 4) else "int8"
             names = transformer_layer_names(cfg)
             pol = PrecisionPolicy.uniform(
                 names, None, FixedPointFormat(2, kv_bits - 2))
             self.quant = build_model_quant(pol, cfg, quantize_kv=True,
                                            quantize_activations=False,
-                                           kv_container=container)
+                                           kv_container=container,
+                                           kv_scale_mode=kv_scale)
+        # pages may only be shared between identically-quantized configs:
+        # the prefix cache namespaces its trie by this key
+        self.profile_key = kv_profile_key(kv_profile, kv_bits=kv_bits,
+                                          kv_scale_mode=kv_scale)
         self.decode = jax.jit(make_decode_step(cfg, quant=self.quant,
                                                attn_impl=attn_impl))
         self._chunk_prefill = (
@@ -168,6 +231,7 @@ class BatchedServer:
             if self.prefill_mode == "bucketed" else None)
 
         paged_spec = None
+        self.prefix_cache: Optional[PrefixCache] = None
         if self.paged:
             self.np_max = max_pages_per_seq(max_len, page_size)
             if num_pages is None:
@@ -182,6 +246,11 @@ class BatchedServer:
             self.slot_reserved = [0] * batch_size  # worst-case page demand
             self._pt_dev = _upload(self.page_table)
             self._pt_dirty = False
+            if prefix_cache == "on":
+                self.prefix_cache = PrefixCache(self.allocator, page_size,
+                                                self.profile_key)
+                # pool pressure evicts cold cached prefixes before failing
+                self.allocator.reclaim = self.prefix_cache.evict
         self.caches = init_cache(cfg, batch_size, max_len, self.quant,
                                  paged=paged_spec)
         self.slots: List[Optional[Request]] = [None] * batch_size
@@ -193,6 +262,8 @@ class BatchedServer:
         self.prefill_tokens = 0     # prompt tokens consumed by prefill
         self.prefill_s = 0.0
         self.decode_steps = 0
+        self.prefix_hit_tokens = 0        # prompt tokens served from cache
+        self.prefill_forwards_saved = 0   # forwards prefix hits avoided
 
     # -- page bookkeeping ---------------------------------------------------
     def _ensure_page(self, slot: int, position: int):
@@ -245,14 +316,16 @@ class BatchedServer:
             self.caches, pt)
         self.prefill_forwards += 1
 
-    def _prefill_stepwise(self, slot: int, req: Request):
-        """Feed prompt[:-1] through shared decode steps, leaving the last
-        prompt token in ``tokens`` for the run loop to consume. Other slots
-        do not advance: they rewrite their current position with identical
-        values. This is the bitwise-reference prefill (one compiled program,
-        O(prompt_len) whole-batch forwards)."""
-        self.pos[slot] = 0
-        for t in req.prompt[:-1]:
+    def _prefill_stepwise(self, slot: int, req: Request, start: int = 0):
+        """Feed prompt[start:-1] through shared decode steps, leaving the
+        last prompt token in ``tokens`` for the run loop to consume
+        (``start`` > 0 = prefix-cache hit: positions [0, start) are already
+        backed by shared/copied pages). Other slots do not advance: they
+        rewrite their current position with identical values. This is the
+        bitwise-reference prefill (one compiled program, O(prompt_len)
+        whole-batch forwards)."""
+        self.pos[slot] = start
+        for t in req.prompt[start:-1]:
             if self.paged:
                 self._ensure_page(slot, int(self.pos[slot]))
             self.tokens[slot] = int(t)
@@ -260,34 +333,44 @@ class BatchedServer:
             self.pos[slot] += 1
         self.tokens[slot] = int(req.prompt[-1])
 
-    def _prefill_bucketed(self, slot: int, req: Request):
-        """Write prompt[:-1] into the paged pool in O(P / bucket) chunked
-        forwards: each chunk is padded to a power-of-two bucket (so at most
-        log2(prefill_bucket)+1 programs ever compile), masked via
+    def _prefill_bucketed(self, slot: int, req: Request, start: int = 0):
+        """Write prompt[start:-1] into the paged pool in O(suffix / bucket)
+        chunked forwards: each chunk is padded to a power-of-two bucket (so
+        at most log2(prefill_bucket)+1 programs ever compile), masked via
         ``valid_len`` (padded tails scatter to the scratch page), and runs
         as a single-sequence forward against the shared pools — other slots
-        are untouched."""
-        toks = np.asarray(req.prompt[:-1], np.int32)
-        self.pos[slot] = 0
+        are untouched. A prefix-cache hit (``start`` > 0) turns the
+        O(prompt/bucket) admission cost into O(suffix/bucket): fully cached
+        pages never see a forward."""
+        toks = np.asarray(req.prompt[start:-1], np.int32)
+        self.pos[slot] = start
         done = 0
         while done < len(toks):
             n = len(toks) - done
             bucket = _pow2_bucket(n, self.prefill_bucket)
             valid = min(bucket, n)
-            self._ensure_page(slot, done + valid - 1)
+            self._ensure_page(slot, start + done + valid - 1)
             chunk = np.zeros((1, bucket), np.int32)
             chunk[0, :valid] = toks[done:done + valid]
             self.caches = self._chunk_prefill(
                 self.params, jnp.asarray(chunk),
-                jnp.asarray([done], jnp.int32),
+                jnp.asarray([start + done], jnp.int32),
                 jnp.asarray([valid], jnp.int32),
                 self.caches, _upload(self.page_table[slot:slot + 1]))
             self.prefill_forwards += 1
             done += valid
-        self.pos[slot] = len(toks)
+        self.pos[slot] = start + len(toks)
         self.tokens[slot] = int(req.prompt[-1])
 
-    def _prefill_slot(self, slot: int, req: Request):
+    def _n_chunks(self, n: int) -> int:
+        """Bucketed-prefill forwards needed for ``n`` prompt tokens."""
+        c, done = 0, 0
+        while done < n:
+            done += min(_pow2_bucket(n - done, self.prefill_bucket), n - done)
+            c += 1
+        return c
+
+    def _prefill_slot(self, slot: int, req: Request, start: int = 0):
         if len(req.prompt) == 0:
             raise ValueError(f"request {req.rid} has an empty prompt")
         if len(req.prompt) >= self.max_len:
@@ -295,12 +378,48 @@ class BatchedServer:
                              f"{len(req.prompt)} >= max_len {self.max_len}")
         t0 = time.perf_counter()
         if self.prefill_mode == "bucketed":
-            self._prefill_bucketed(slot, req)
+            self._prefill_bucketed(slot, req, start)
+            self.prefill_forwards_saved += (
+                self._n_chunks(len(req.prompt) - 1)
+                - self._n_chunks(len(req.prompt) - 1 - start))
         else:
-            self._prefill_stepwise(slot, req)
+            self._prefill_stepwise(slot, req, start)
+            self.prefill_forwards_saved += start
         self.prefill_s += time.perf_counter() - t0
         self.prefill_tokens += len(req.prompt)
         self.slot_gen[slot] = 0
+
+    # -- prefix sharing -----------------------------------------------------
+    def _copy_pool_pages(self, src: int, dst: int):
+        """Copy page ``src`` -> ``dst`` in EVERY attention layer's pool
+        (copy-on-write: one host-side allocator, one page-id space, all
+        layers alias the same table)."""
+        new_caches = []
+        for seg in self.caches:
+            seg_new = []
+            for entry in seg:
+                if isinstance(entry, list):      # per-layer profile pools
+                    seg_new.append([
+                        copy_pool_pages(d, src, dst)
+                        if isinstance(d, dict) and "k_pages" in d else d
+                        for d in entry])
+                elif isinstance(entry, dict) and "k_pages" in entry:
+                    seg_new.append(copy_pool_pages(entry, src, dst,
+                                                   page_axis=1))
+                else:
+                    seg_new.append(entry)
+            new_caches.append(tuple(seg_new))
+        self.caches = new_caches
+
+    def _cache_insert(self, slot: int, req: Request):
+        """Index the request's freshly prefilled prompt pages (tokens
+        [0, P-1)) into the prefix cache; chunks already cached dedupe."""
+        n_tok = len(req.prompt) - 1
+        if n_tok <= 0:
+            return
+        n_pages = -(-n_tok // self.page_size)
+        self.prefix_cache.insert(req.prompt[:n_tok],
+                                 self.slot_pages[slot][:n_pages])
 
     # -- admission ----------------------------------------------------------
     def _admit(self, queue: List[Request]):
@@ -309,25 +428,80 @@ class BatchedServer:
         requests still have reserved — so ``_ensure_page`` can never hit an
         empty free list mid-run. A request that can never fit raises
         ``OutOfPagesError``; one that must wait for live requests is
-        deferred (the queue stalls until a completion frees pages)."""
+        deferred (the queue stalls until a completion frees pages).
+
+        With the prefix cache on, admission first looks up the longest
+        cached prefix of the prompt: fully-matched pages are ALIASED into
+        the slot's page table (incref — reservation accounting then charges
+        only the non-shared suffix), a divergence inside a partially shared
+        page copies that page (CoW), and unreferenced cached pages count as
+        reclaimable headroom (LRU eviction) in the preflight."""
         for i in range(self.B):
             if self.slots[i] is not None or not queue:
                 continue
             req = queue[0]
+            start = 0
             if self.paged:
-                need = self._pages_needed(req)
-                avail = self.allocator.num_free - \
-                    self._outstanding_reservation()
-                if need > avail:
-                    if (need > self.allocator.num_usable
+                total = self._pages_needed(req)
+                hit, shared, cow_pin = None, [], None
+                if self.prefix_cache is not None:
+                    # record=False: a deferred request retries this lookup
+                    # every span; hit-rate stats count once, on admission
+                    hit = self.prefix_cache.lookup(req.prompt[:-1],
+                                                   record=False)
+                    shared = list(hit.full_pages)
+                    # pin the chain so preflight eviction can't reclaim it
+                    for p in shared:
+                        self.allocator.incref(p)
+                    if hit.cow_page is not None and hit.cow_valid > 0:
+                        cow_pin = hit.cow_page
+                        self.allocator.incref(cow_pin)
+                need_new = total - len(shared)   # suffix-only page demand
+                avail = (self.allocator.num_free
+                         - self._outstanding_reservation())
+                evictable = 0
+                if need_new > avail and self.prefix_cache is not None:
+                    # only walk the trie when the free list alone won't do
+                    evictable = self.prefix_cache.evictable_pages()
+                    avail += evictable
+                if need_new > avail:
+                    if cow_pin is not None:
+                        self.allocator.free([cow_pin])
+                    if shared:
+                        self.allocator.free(shared)
+                    if (need_new > self.allocator.num_usable
                             or not any(s is not None for s in self.slots)):
+                        written = len(set().union(*map(set,
+                                                       self.slot_pages)))
                         raise OutOfPagesError(
-                            needed=need, free=avail,
-                            total=self.allocator.num_usable, rid=req.rid)
+                            needed=need_new, free=self.allocator.num_free,
+                            total=self.allocator.num_usable, rid=req.rid,
+                            reserved=self._outstanding_reservation(),
+                            written=written, evictable=evictable)
                     break  # defer until live requests free pages
-                self.slot_reserved[i] = need
+                self.slot_reserved[i] = total
+                for j, p in enumerate(shared):
+                    self.page_table[i, j] = p    # alias; already increfed
+                    self.slot_pages[i].append(p)
+                    self._pt_dirty = True
+                start = len(shared) * self.page_size
+                if cow_pin is not None:
+                    # divergence inside a partially shared page: private copy
+                    dst = self.allocator.alloc()   # reclaim hook may evict
+                    self.page_table[i, len(shared)] = dst
+                    self.slot_pages[i].append(dst)
+                    self._pt_dirty = True
+                    self._copy_pool_pages(int(cow_pin), int(dst))
+                    self.prefix_cache.cow_copies += 1
+                    start += hit.cow_valid
+                    self.allocator.free([cow_pin])   # unpin the source
+                if self.prefix_cache is not None:
+                    self.prefix_cache.note_lookup(len(req.prompt) - 1, start)
+                self.prefix_hit_tokens += start
             queue.pop(0)
-            self._prefill_slot(i, req)
+            self._prefill_slot(i, req, start)
+            if self.prefix_cache is not None:
+                self._cache_insert(i, req)
             self.slots[i] = req
 
     # -- decode -------------------------------------------------------------
@@ -414,7 +588,24 @@ class BatchedServer:
                   f"{gen_tokens / max(dt, 1e-9):,.1f} tok/s "
                   f"({steps * self.B / max(dt, 1e-9):,.1f} "
                   f"tok-slots/s, {layout}, attn={self.attn_impl})")
+            if self.prefix_cache is not None:
+                s = self.prefix_cache.stats()
+                print(f"[serve] prefix cache: {s['hits']}/{s['lookups']} "
+                      f"hits, {s['hit_tokens']} tokens reused, "
+                      f"{self.prefill_forwards_saved} prefill forwards "
+                      f"saved, {s['cow_copies']} CoW copies, "
+                      f"{s['cached_pages']} pages cached "
+                      f"({s['evictions']} evicted)")
         return requests
+
+    def release_prefix_cache(self) -> int:
+        """Drop every unreferenced cached prefix page back to the free
+        list. Returns the page count the cache STILL holds — with all
+        requests completed that must be 0, anything else is a refcount
+        leak (the bench-smoke CI gate checks exactly this)."""
+        if self.prefix_cache is None:
+            return 0
+        return self.prefix_cache.clear()
 
 
 def main(argv=None):
@@ -444,6 +635,22 @@ def main(argv=None):
                          "paged pool; stepwise = slot-granular reference")
     ap.add_argument("--prefill-bucket", type=int, default=32,
                     help="max power-of-two prompt chunk for bucketed prefill")
+    ap.add_argument("--kv-profile", default="",
+                    help="path to a core.policy.PrecisionPolicy JSON (e.g. "
+                         "core.search output): per-layer KV containers — "
+                         "int4 pages for <=4 data bits, int8 for <=8, float "
+                         "pages for fp32 layers (paged, attention-only "
+                         "archs; supersedes --kv-bits)")
+    ap.add_argument("--kv-scale", choices=["static", "page"],
+                    default="static",
+                    help="paged dequant scales: static = the layer's Q(I,F) "
+                         "grid (bitwise-reproducible reference); page = "
+                         "dynamic per-page max-abs calibration")
+    ap.add_argument("--prefix-cache", choices=["on", "off"], default="off",
+                    help="share page-aligned common prompt prefixes across "
+                         "requests (refcounted aliasing + copy-on-write; "
+                         "LRU eviction of unreferenced prefixes under pool "
+                         "pressure)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -456,12 +663,18 @@ def main(argv=None):
                                     args.prompt_len).astype(np.int32),
                     args.max_new)
             for i in range(args.requests)]
+    kv_profile = None
+    if args.kv_profile:
+        with open(args.kv_profile) as f:
+            kv_profile = PrecisionPolicy.from_json(f.read())
     srv = BatchedServer(cfg, params, batch_size=args.batch_size,
                         max_len=args.max_len, kv_bits=args.kv_bits,
                         page_size=args.page_size,
                         num_pages=args.num_pages or None,
                         attn_impl=args.attn_impl, prefill=args.prefill,
-                        prefill_bucket=args.prefill_bucket)
+                        prefill_bucket=args.prefill_bucket,
+                        kv_profile=kv_profile, kv_scale=args.kv_scale,
+                        prefix_cache=args.prefix_cache)
     srv.run(reqs, verbose=True)
     for r in reqs[:4]:
         print(f"  req {r.rid}: {len(r.out)} tokens -> {r.out[:8]}...")

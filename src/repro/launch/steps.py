@@ -95,6 +95,12 @@ def make_chunk_prefill_step(cfg, *, quant=None):
     that nobody reads. Skips the LM head entirely (prefill logits are never
     sampled; the decode step consumes the last prompt token), which is why
     this wraps ``forward_hidden`` and not ``forward``.
+
+    Prefix sharing composes here for free: a prefix-cache hit aliases the
+    shared pages into the slot's page table and the server calls this step
+    with ``start_pos`` at the first NON-shared token — fully cached pages
+    never see a forward (O(suffix/bucket) admission), while the chunk's
+    attention still reads the shared history through the same page table.
     """
     def step(params, tokens, start_pos, valid_len, caches, page_table):
         batch = {"tokens": tokens}

@@ -43,11 +43,17 @@ def _len_col(kv_len, ndim):
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class KVQuantSpec:
-    """Per-layer fixed-point spec for the KV cache (the paper's data bits)."""
+    """Per-layer fixed-point spec for the KV cache (the paper's data bits).
+
+    ``scale_mode`` (paged caches only): "static" stores on the layer's
+    Q(I,F) grid; "page" calibrates a per-page max-abs scale at write time
+    (see ``core.paged_kv.paged_update``).
+    """
 
     int_bits: object  # python int or traced scalar (inside lax.scan)
     frac_bits: object
     container: str = "int8"  # static storage dtype
+    scale_mode: str = "static"
 
     @property
     def dtype(self):
@@ -132,7 +138,8 @@ def paged_cache_update(cache, k_new, v_new, page_table, pos,
         page_size=cache["k_pages"].shape[1], container=container,
         int_bits=None if quant is None else quant.int_bits,
         frac_bits=None if quant is None else quant.frac_bits,
-        valid_len=valid_len)
+        valid_len=valid_len,
+        scale_mode="static" if quant is None else quant.scale_mode)
 
 
 def paged_cache_view(cache, page_table, *, head_dim, dtype):

@@ -47,6 +47,14 @@ class ModelQuant:
     """Stacked per-layer Q(I,F) parameters; (L,) float32 arrays (or None).
 
     Built from a PrecisionPolicy by ``repro.quant.apply.build_model_quant``.
+
+    ``kv_container`` is the uniform storage container; ``kv_containers``
+    (optional, static tuple of one container name per layer, "fp" marking an
+    unquantized layer) switches the paged serving cache to **per-layer KV
+    precision profiles**: each layer's pool is built in its own container
+    and the segment scan unrolls so the static container can differ per
+    layer. ``kv_scale_mode`` ("static" | "page") picks the paged dequant
+    scale calibration (see ``core.paged_kv.paged_update``).
     """
 
     w_int: Optional[jnp.ndarray] = None
@@ -56,22 +64,48 @@ class ModelQuant:
     kv_int: Optional[jnp.ndarray] = None
     kv_frac: Optional[jnp.ndarray] = None
     kv_container: str = "int8"
+    kv_containers: Optional[Tuple[str, ...]] = None  # per-layer (static)
+    kv_scale_mode: str = "static"
 
     def layer_slice(self, sl):
-        """Slice all stacked arrays with ``sl`` (layer indices)."""
+        """Slice all stacked arrays with ``sl`` (layer indices).
+
+        Only valid on uniform-container quants: per-layer containers are
+        static python strings and cannot ride a scan — the unrolled segment
+        path slices with :meth:`layer_static` instead."""
+        assert self.kv_containers is None, \
+            "per-layer KV containers require the unrolled (layer_static) path"
         f = lambda a: None if a is None else a[sl]
         return ModelQuant(f(self.w_int), f(self.w_frac), f(self.a_int),
                           f(self.a_frac), f(self.kv_int), f(self.kv_frac),
-                          self.kv_container)
+                          self.kv_container,
+                          kv_scale_mode=self.kv_scale_mode)
+
+    def layer_static(self, li: int) -> "ModelQuant":
+        """Static single-layer view for the unrolled segment path: scalars
+        plus THIS layer's concrete container ("fp" layers drop the KV quant
+        entirely, so their pools store float pages)."""
+        cont = (self.kv_containers[li] if self.kv_containers is not None
+                else self.kv_container)
+        f = lambda a: None if a is None else a[li]
+        kv_i, kv_f = f(self.kv_int), f(self.kv_frac)
+        if cont == "fp":
+            kv_i = kv_f = None
+            cont = self.kv_container
+        return ModelQuant(f(self.w_int), f(self.w_frac), f(self.a_int),
+                          f(self.a_frac), kv_i, kv_f, cont,
+                          kv_scale_mode=self.kv_scale_mode)
 
 
 def _mq_flatten(mq):
     return ((mq.w_int, mq.w_frac, mq.a_int, mq.a_frac, mq.kv_int,
-             mq.kv_frac), mq.kv_container)
+             mq.kv_frac),
+            (mq.kv_container, mq.kv_containers, mq.kv_scale_mode))
 
 
 def _mq_unflatten(aux, children):
-    return ModelQuant(*children, kv_container=aux)
+    return ModelQuant(*children, kv_container=aux[0], kv_containers=aux[1],
+                      kv_scale_mode=aux[2])
 
 
 jax.tree_util.register_pytree_node(ModelQuant, _mq_flatten, _mq_unflatten)
@@ -176,7 +210,9 @@ def block_apply(params, x, positions, *, cfg, sig, cache=None, cache_pos=None,
     aux = {}
     if quant is not None:
         params = _quant_weights(params, quant.w_int, quant.w_frac)
-        kv_quant = (KVQuantSpec(quant.kv_int, quant.kv_frac, quant.kv_container)
+        kv_quant = (KVQuantSpec(quant.kv_int, quant.kv_frac,
+                                quant.kv_container,
+                                scale_mode=quant.kv_scale_mode)
                     if quant.kv_int is not None else None)
         state_quant = ((quant.kv_int, quant.kv_frac)
                        if quant.kv_int is not None else None)
@@ -267,14 +303,36 @@ def init_cache(cfg, batch, max_len, quant: Optional[ModelQuant] = None,
     core.paged_kv): each attention layer gets a (num_pages, page_size, KV,
     hd) pool instead of a (batch, max_len, KV, hd) slab, so HBM scales with
     allocated pages, not worst-case request length. SSM states are O(batch)
-    and stay dense."""
+    and stay dense.
+
+    With a **per-layer precision profile** (``quant.kv_containers``), pools
+    cannot be broadcast-stacked — an int4 layer's pool has a different
+    store dtype/shape than an int8 layer's — so each (segment, position)
+    entry becomes a LIST of per-period pools and the forward unrolls the
+    segment (``_segment_unrolled``). Requires a paged cache."""
+    per_layer = quant is not None and quant.kv_containers is not None
+    if per_layer and paged is None:
+        raise ValueError("per-layer KV containers require a paged cache "
+                         "(--page-size > 0)")
     kv_quant = None
     if quant is not None and quant.kv_int is not None:
         kv_quant = KVQuantSpec(8, 0, quant.kv_container)  # container only
     caches = []
     for pattern, periods, start in layer_segments(cfg):
         seg = []
-        for sig in pattern:
+        npos = len(pattern)
+        for pi, sig in enumerate(pattern):
+            if per_layer:
+                pools = []
+                for p in range(periods):
+                    cont = quant.kv_containers[start + p * npos + pi]
+                    kvq = (None if cont == "fp"
+                           else KVQuantSpec(8, 0, cont))
+                    pools.append(init_block_cache(
+                        cfg, sig, batch, max_len, cfg.compute_jnp_dtype,
+                        kvq, paged))
+                seg.append(pools)
+                continue
             one = init_block_cache(cfg, sig, batch, max_len,
                                    cfg.compute_jnp_dtype, kv_quant, paged)
             seg.append(jax.tree_util.tree_map(
@@ -352,6 +410,38 @@ def _segment_scan(seg_params, x, positions, *, cfg, pattern, start, periods,
     return x, new_caches, aux_per.sum()
 
 
+def _segment_unrolled(seg_params, x, positions, *, cfg, pattern, start,
+                      periods, caches=None, cache_pos=None, quant=None,
+                      mrope_positions=None, page_table=None,
+                      attn_impl: str = "gather", kv_valid_len=None):
+    """Unrolled twin of ``_segment_scan`` for per-layer KV containers.
+
+    A layer's storage container is static program structure (pool dtype,
+    int4 lane-packing), so it cannot vary across a ``lax.scan`` — the
+    serving path with a per-layer precision profile runs the segment as a
+    python loop instead. Caches arrive/leave as per-period LISTS (see
+    ``init_cache``); compile cost is O(layers), acceptable for the few-layer
+    serving configs the profile path targets."""
+    npos = len(pattern)
+    new_caches: Tuple[list, ...] = tuple([] for _ in pattern)
+    moe_aux = jnp.zeros((), jnp.float32)
+    for p in range(periods):
+        for pi, sig in enumerate(pattern):
+            li = start + p * npos + pi
+            q_i = quant.layer_static(li) if quant is not None else None
+            c_i = caches[pi][p] if caches is not None else None
+            seg_p = jax.tree_util.tree_map(lambda a: a[p], seg_params[pi])
+            x, nc, aux = block_apply(
+                seg_p, x, positions, cfg=cfg, sig=sig, cache=c_i,
+                cache_pos=cache_pos, quant=q_i,
+                mrope_positions=mrope_positions, page_table=page_table,
+                attn_impl=attn_impl, kv_valid_len=kv_valid_len)
+            new_caches[pi].append(nc)
+            moe_aux = moe_aux + aux.get("moe_lb_loss",
+                                        jnp.zeros((), jnp.float32))
+    return x, tuple(list(c) for c in new_caches), moe_aux
+
+
 def forward_hidden(params, batch, cfg, *, quant: Optional[ModelQuant] = None,
                    caches=None, cache_pos=None, page_table=None,
                    attn_impl: str = "gather", kv_valid_len=None):
@@ -385,9 +475,12 @@ def forward_hidden(params, batch, cfg, *, quant: Optional[ModelQuant] = None,
     x = constrain(x, "dp", None, None)   # batch over ("pod","data")
 
     new_caches, moe_aux = [], jnp.zeros((), jnp.float32)
+    seg_fn = (_segment_unrolled
+              if quant is not None and quant.kv_containers is not None
+              else _segment_scan)
     for si, (pattern, periods, start) in enumerate(layer_segments(cfg)):
         seg_cache = caches[si] if caches is not None else None
-        x, nc, aux = _segment_scan(
+        x, nc, aux = seg_fn(
             params["segments"][si], x, positions, cfg=cfg, pattern=pattern,
             start=start, periods=periods, caches=seg_cache,
             cache_pos=cache_pos, quant=quant, mrope_positions=mrope_positions,

@@ -31,13 +31,22 @@ def transformer_layer_names(cfg) -> Tuple[str, ...]:
 def build_model_quant(policy: Optional[PrecisionPolicy], cfg,
                       *, quantize_kv: bool = True,
                       quantize_activations: bool = True,
-                      kv_container: str = "int8") -> Optional[ModelQuant]:
+                      kv_container: str = "int8",
+                      per_layer_kv: bool = False,
+                      kv_scale_mode: str = "static") -> Optional[ModelQuant]:
     """PrecisionPolicy -> ModelQuant. Policy layer i == transformer layer i.
 
     The KV/state cache inherits each layer's *data* format (the cache IS the
     layer's inter-step data), clipped to the container width.
     ``quantize_activations=False`` restricts the data bits to the cache only
     (KV-quantized serving without residual-stream fake-quant).
+
+    ``per_layer_kv=True`` derives a **per-layer storage container** from
+    each layer's data bits (<= 4 total bits -> lane-packed "int4", <= 8 ->
+    "int8", an fp32 layer -> "fp" float pages) instead of one uniform
+    container — the serving path that lets a ``core.search`` policy drive
+    the at-rest KV footprint. Paged caches only (see
+    ``models.transformer.init_cache``).
     """
     if policy is None:
         return None
@@ -46,7 +55,16 @@ def build_model_quant(policy: Optional[PrecisionPolicy], cfg,
     w_i, w_f, w_en = policy.stacked_arrays("weight")
     a_i, a_f, a_en = policy.stacked_arrays("data")
     kv_i = kv_f = None
-    if quantize_kv:
+    kv_containers = None
+    if quantize_kv and per_layer_kv:
+        kv_containers = tuple(kv_layer_container(lp.data)
+                              for lp in policy.layers)
+        caps = jnp.asarray([{"int4": 4, "int8": 8, "fp": 8}[c]
+                            for c in kv_containers], jnp.float32)
+        tot = jnp.clip(a_i + a_f, 2, caps)
+        kv_i = jnp.minimum(a_i, tot - 1)
+        kv_f = tot - kv_i
+    elif quantize_kv:
         cap = {"int4": 4, "int8": 8, "int16": 16}[kv_container]
         tot = jnp.clip(a_i + a_f, 2, cap)
         kv_i = jnp.minimum(a_i, tot - 1)
@@ -57,7 +75,34 @@ def build_model_quant(policy: Optional[PrecisionPolicy], cfg,
         w_frac=w_f if bool(w_en.any()) else None,
         a_int=a_i if act_on else None,
         a_frac=a_f if act_on else None,
-        kv_int=kv_i, kv_frac=kv_f, kv_container=kv_container)
+        kv_int=kv_i, kv_frac=kv_f, kv_container=kv_container,
+        kv_containers=kv_containers, kv_scale_mode=kv_scale_mode)
+
+
+def kv_layer_container(data_fmt) -> str:
+    """Storage container for one layer's KV under its data format."""
+    if data_fmt is None:
+        return "fp"
+    return "int4" if data_fmt.total_bits <= 4 else "int8"
+
+
+def kv_profile_key(policy: Optional[PrecisionPolicy], *,
+                   kv_bits: int = 0, kv_scale_mode: str = "static") -> str:
+    """Canonical string identifying a KV quantization configuration.
+
+    The prefix cache namespaces its trie by this key, so pages are only
+    ever shared between identically-quantized configurations — an int8
+    chain can never back an int4 request, and a per-layer profile never
+    aliases a uniform one unless they quantize every layer identically.
+    """
+    if policy is not None:
+        per = ",".join(
+            f"{kv_layer_container(lp.data)}"
+            + (f":Q{lp.data.int_bits}.{lp.data.frac_bits}" if lp.data else "")
+            for lp in policy.layers)
+    else:
+        per = f"uniform{kv_bits}"
+    return f"{per}|scale={kv_scale_mode}"
 
 
 def transformer_traffic_model(cfg, *, batch: int, seq_len: int,

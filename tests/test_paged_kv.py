@@ -97,6 +97,83 @@ def test_paged_update_gather_roundtrip(container, bits):
         assert err.max() <= step / 2 + 1e-6
 
 
+@pytest.mark.parametrize("container,bits", [("int8", 8), ("int4", 4)])
+def test_page_scale_calibration_tighter_than_static(container, bits):
+    """``scale_mode="page"`` (dynamic per-page max-abs calibration) must
+    dequantize small-magnitude values with materially lower error than the
+    layer's static Q(2, bits-2) grid, including under decode-style
+    token-at-a-time appends (which trigger in-place page requantization
+    whenever a later token raises the page's scale)."""
+    rng = np.random.default_rng(0)
+    B, KV, hd, ps, NP = 2, 2, 16, 4, 3
+    layout = PagedKVLayout(num_pages=1 + B * NP, page_size=ps,
+                           num_kv_heads=KV, head_dim=hd, container=container)
+    ids = np.arange(1, 1 + B * NP)
+    rng.shuffle(ids)
+    pt = jnp.asarray(ids.reshape(B, NP).astype(np.int32))
+    T = NP * ps
+    k = jnp.asarray(rng.normal(size=(B, T, KV, hd)) * 0.12, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, KV, hd)) * 0.12, jnp.float32)
+    err = {}
+    for mode in ("static", "page"):
+        pool = init_paged_pool(layout)
+        for t in range(T):
+            pool = paged_update(pool, k[:, t:t + 1], v[:, t:t + 1], pt,
+                                jnp.full((B,), t, jnp.int32), page_size=ps,
+                                container=container, int_bits=2,
+                                frac_bits=bits - 2, scale_mode=mode)
+        kg, vg = paged_gather(pool, pt, container=container, head_dim=hd)
+        err[mode] = max(float(jnp.abs(kg - k).max()),
+                        float(jnp.abs(vg - v).max()))
+    # static grid: step 2^-(bits-2); page scales track the ~0.5 abs-max
+    assert err["page"] < 0.7 * err["static"], err
+
+
+def test_page_scale_respects_valid_len_masking():
+    """Padded chunk tails (bucketed prefill) must neither write pages nor
+    inflate any live page's calibrated scale."""
+    B, KV, hd, ps = 1, 2, 8, 4
+    layout = PagedKVLayout(num_pages=4, page_size=ps, num_kv_heads=KV,
+                           head_dim=hd, container="int8")
+    pool = init_paged_pool(layout)
+    pt = jnp.asarray([[1, 2]], np.int32)
+    rng = np.random.default_rng(1)
+    small = jnp.asarray(rng.normal(size=(B, 8, KV, hd)) * 0.05, jnp.float32)
+    # huge values in the padded tail must not touch the scale
+    chunk = small.at[:, 3:].set(100.0)
+    pool = paged_update(pool, chunk, chunk, pt, 0, page_size=ps,
+                        container="int8", int_bits=2, frac_bits=6,
+                        valid_len=3, scale_mode="page")
+    kg, _ = paged_gather(pool, pt, container="int8", head_dim=hd)
+    np.testing.assert_allclose(np.asarray(kg[:, :3]),
+                               np.asarray(small[:, :3]), atol=1e-3)
+
+
+def test_page_scale_out_of_span_tokens_cannot_corrupt_last_page():
+    """In static mode a token past the page-table span harmlessly rewrites
+    the clamped last page (uniform scale); under per-page scales that write
+    must redirect to scratch instead — the last real page's bytes and scale
+    stay intact."""
+    B, KV, hd, ps = 1, 2, 8, 4
+    layout = PagedKVLayout(num_pages=4, page_size=ps, num_kv_heads=KV,
+                           head_dim=hd, container="int8")
+    pool = init_paged_pool(layout)
+    pt = jnp.asarray([[1, 2]], np.int32)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(B, 2 * ps, KV, hd)) * 0.1, jnp.float32)
+    pool = paged_update(pool, x, x, pt, 0, page_size=ps, container="int8",
+                        int_bits=2, frac_bits=6, scale_mode="page")
+    before = {k: np.asarray(v) for k, v in pool.items()}
+    huge = jnp.full((B, 1, KV, hd), 50.0, jnp.float32)
+    pool = paged_update(pool, huge, huge, pt,
+                        jnp.asarray([2 * ps], jnp.int32),  # past the span
+                        page_size=ps, container="int8", int_bits=2,
+                        frac_bits=6, scale_mode="page")
+    for key in ("k_pages", "v_pages", "k_scale", "v_scale"):
+        np.testing.assert_array_equal(np.asarray(pool[key])[1:3],
+                                      before[key][1:3])
+
+
 def test_paged_pool_footprint_ratios():
     """Stored pool bytes shrink ~4x (int8) / ~8x (int4) vs fp32 pages."""
     mk = lambda c: pool_bytes(init_paged_pool(PagedKVLayout(

@@ -106,6 +106,135 @@ def test_bucketed_prefill_matches_stepwise():
 
 
 # ---------------------------------------------------------------------------
+# Prefix sharing on == off, token for token (incl. per-layer profile)
+# ---------------------------------------------------------------------------
+# The trace makes every sharing mechanism fire: a common system prompt whose
+# length (11) is NOT page-aligned at ps=8 forces full-page aliasing AND a
+# copy-on-write inside page 1, a repeated identical prompt gives a full-chain
+# hit (zero prefill forwards), and distinct suffixes exercise divergence.
+_PREFIX_IDENTITY_SCRIPT = r"""
+import jax, numpy as np
+jax.config.update("jax_platform_name", "cpu")
+from repro.configs.registry import get_smoke_config
+from repro.core.fixedpoint import FixedPointFormat
+from repro.core.policy import LayerPolicy, PrecisionPolicy
+from repro.launch.serve import BatchedServer, Request
+from repro.models.transformer import init_model
+
+cfg = get_smoke_config("qwen2-72b")
+params = init_model(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(11)
+sys_prompt = rng.integers(0, cfg.vocab_size, 11).astype(np.int32)
+
+def mk():
+    r = np.random.default_rng(13)
+    reqs = [Request(i, np.concatenate(
+                [sys_prompt, r.integers(0, cfg.vocab_size, 2 + i)
+                 .astype(np.int32)]), 4 + i % 3) for i in range(4)]
+    reqs.append(Request(4, reqs[0].prompt.copy(), 6))   # full-chain hit
+    return reqs
+
+profile = PrecisionPolicy(
+    tuple(f"layer_{i:03d}" for i in range(cfg.num_layers)),
+    tuple(LayerPolicy(None, FixedPointFormat(2, 6 if i % 2 == 0 else 2))
+          for i in range(cfg.num_layers)))
+
+for tag, kw in [("kv0", dict(kv_bits=0)), ("kv8", dict(kv_bits=8)),
+                ("kv4", dict(kv_bits=4)),
+                ("profile", dict(kv_profile=profile))]:
+    for prefill in ("bucketed", "stepwise"):
+        base = dict(batch_size=2, max_len=32, page_size=8, prefill=prefill,
+                    prefill_bucket=8, **kw)
+        off = BatchedServer(cfg, params, prefix_cache="off", **base)
+        out_off = off.run(mk())
+        on = BatchedServer(cfg, params, prefix_cache="on", **base)
+        out_on = on.run(mk())
+        for a, b in zip(out_off, out_on):
+            assert a.out == b.out, (tag, prefill, a.rid, a.out, b.out)
+        assert all(r.done for r in out_on)
+        st = on.prefix_cache.stats()
+        assert st["hits"] >= 4 and st["cow_copies"] >= 1, st
+        assert on.prefill_forwards < off.prefill_forwards, (
+            tag, prefill, on.prefill_forwards, off.prefill_forwards)
+        assert on.release_prefix_cache() == 0          # no refcount leak
+        assert on.allocator.num_free == on.allocator.num_usable
+        print(f"{tag}/{prefill} identical "
+              f"({off.prefill_forwards} -> {on.prefill_forwards} fwd, "
+              f"{st['hit_tokens']} tokens reused, {st['cow_copies']} CoW)")
+print("PREFIX_IDENTITY_OK")
+"""
+
+
+def test_prefix_sharing_matches_unshared():
+    """--prefix-cache on produces token-identical output to off, across
+    kv-bits {0, 8, 4} and a mixed per-layer profile, in both prefill modes,
+    while saving prefill forwards and leaking no pages.
+
+    Runs in a subprocess with single-threaded XLA: multi-threaded XLA:CPU
+    GEMMs are not bitwise deterministic under thread contention, and exact
+    argmax token identity needs bitwise-equal logits."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_cpu_multi_thread_eigen=false "
+                        "intra_op_parallelism_threads=1 "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p]
+        + [os.path.join(os.path.dirname(__file__), "..", "src")])
+    res = subprocess.run([sys.executable, "-c", _PREFIX_IDENTITY_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=1200)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "PREFIX_IDENTITY_OK" in res.stdout
+
+
+def test_per_layer_profile_shrinks_at_rest_bytes(smoke_model):
+    """A profile with >= 2 distinct layer bit-widths stores its paged pools
+    below uniform int8 (and above uniform int4) at rest."""
+    from repro.core.fixedpoint import FixedPointFormat
+    from repro.core.paged_kv import pool_bytes
+    from repro.core.policy import LayerPolicy, PrecisionPolicy
+    cfg, params = smoke_model
+
+    def kv_bytes(srv):
+        total = 0
+        for seg in srv.caches:
+            for entry in seg:
+                for d in (entry if isinstance(entry, list) else [entry]):
+                    if isinstance(d, dict) and "k_pages" in d:
+                        total += pool_bytes(d)
+        return total
+
+    profile = PrecisionPolicy(
+        tuple(f"layer_{i:03d}" for i in range(cfg.num_layers)),
+        tuple(LayerPolicy(None, FixedPointFormat(2, 6 if i % 2 == 0 else 2))
+              for i in range(cfg.num_layers)))
+    mk = lambda kw: BatchedServer(cfg, params, batch_size=2, max_len=32,
+                                  page_size=8, **kw)
+    prof = kv_bytes(mk(dict(kv_profile=profile)))
+    u8 = kv_bytes(mk(dict(kv_bits=8)))
+    u4 = kv_bytes(mk(dict(kv_bits=4)))
+    assert u4 < prof < u8, (u4, prof, u8)
+
+
+def test_kv_profile_validation(smoke_model):
+    cfg, params = smoke_model
+    from repro.core.fixedpoint import FixedPointFormat
+    from repro.core.policy import PrecisionPolicy
+    profile = PrecisionPolicy.uniform(
+        [f"layer_{i:03d}" for i in range(cfg.num_layers)], None,
+        FixedPointFormat(2, 6))
+    with pytest.raises(ValueError, match="paged"):
+        BatchedServer(cfg, params, batch_size=2, max_len=32,
+                      kv_profile=profile)
+    with pytest.raises(ValueError, match="supersedes"):
+        BatchedServer(cfg, params, batch_size=2, max_len=32, page_size=8,
+                      kv_bits=8, kv_profile=profile)
+
+
+# ---------------------------------------------------------------------------
 # Pallas decode == gather decode on fragmented page tables (oracle-style)
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("kv_bits", [0, 8, 4])
