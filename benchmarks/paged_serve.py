@@ -32,12 +32,22 @@ CoW copies and evictions, and at-rest KV bytes under uniform int8 vs a
 mixed per-layer precision profile vs int4. It RAISES on a prefix-cache
 refcount leak (allocator end-state check) — the CI bench-smoke gate.
 
-Results land in results/paged_serve.json (+ results/prefix_serve.json) AND
-append a trajectory point to the repo-root BENCH_serve.json so the perf
-trend is tracked across PRs.
+A third, **overcommit workload** (``run_overcommit`` / ``--workload
+overcommit``) offers ~2.5x the device pool's page capacity through the
+tiered page store: --kv-offload host + --sched slo + preemption. It
+reports the device/host byte split (per container), preempt/resume and
+demote/promote counts, and prefix hit-rate parity after a simulated
+restart (snapshot -> fresh server -> restore). It RAISES on any rejected
+waitable request, an unresumed preemption victim, an allocator refcount
+leak, or a host-tier page leak — the CI overcommit-smoke gate.
+
+Results land in results/paged_serve.json (+ results/prefix_serve.json,
+results/overcommit_serve.json) AND append a trajectory point to the
+repo-root BENCH_serve.json so the perf trend is tracked across PRs.
 
 Run:  PYTHONPATH=src python -m benchmarks.paged_serve [--arch qwen2-72b]
-      [--page-size 16] [--requests 12] [--fast] [--workload all|mixed|prefix]
+      [--page-size 16] [--requests 12] [--fast]
+      [--workload all|mixed|prefix|overcommit]
 (--fast = CI smoke: tiny trace, one bench iteration per config.)
 """
 from __future__ import annotations
@@ -275,6 +285,167 @@ def run_prefix(*, arch="qwen2-72b", requests=8, batch=4, verbose=True,
     return res
 
 
+def mk_overcommit_requests(vocab, sys_len, *, waves, seed=0):
+    """Overcommitted trace in three deterministic waves (decode-step
+    arrivals): (1) low-priority long decodes that oversubscribe the pool,
+    (2) later high-priority short SLO requests that must PREEMPT, (3) a
+    tail re-using the shared system prompt (hits demoted/promoted prefix
+    pages). ``waves = (n_long, n_urgent, n_tail)``."""
+    from repro.launch.serve import Request
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, vocab, sys_len).astype(np.int32)
+    n_long, n_urgent, n_tail = waves
+    reqs, rid = [], 0
+
+    def add(n, sfx_len, max_new, priority, arrive, deadline=None):
+        nonlocal rid
+        for _ in range(n):
+            prompt = np.concatenate(
+                [sys_prompt, rng.integers(0, vocab, sfx_len)
+                 .astype(np.int32)])
+            reqs.append(Request(rid, prompt, max_new, priority=priority,
+                                arrive_step=arrive, deadline_step=deadline))
+            rid += 1
+    add(n_long, 3, 16, priority=0, arrive=0)
+    add(n_urgent, 2, 6, priority=5, arrive=6, deadline=30)
+    add(n_tail, 4, 8, priority=1, arrive=18)
+    return reqs
+
+
+def run_overcommit(*, arch="qwen2-72b", verbose=True, fast=False):
+    """Overcommit workload: offered page demand ~2.5x the device pool,
+    served through the tiered page store (--kv-offload host) with SLO
+    scheduling + preemption and a simulated restart.
+
+    Gates (RAISES — the CI bench-smoke step): zero rejected waitable
+    requests, every preempted request resumed and completed, prefix
+    hit-rate parity after snapshot restore, no allocator refcount leaks,
+    and no host-tier page leaks after release."""
+    cfg = get_smoke_config(arch)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    waves = (3, 1, 2) if fast else (4, 2, 3)
+    sys_len, page_size, max_len, batch = 21, 8, 64, 3
+    # pool sized to ~2 concurrent long requests; the OFFERED demand
+    # (waves[0] alone needs waves[0]*5 pages) oversubscribes it ~2.5x
+    num_pages = 1 + 11
+    mk = lambda: mk_overcommit_requests(cfg.vocab_size, sys_len,
+                                        waves=waves, seed=0)
+    common = dict(batch_size=batch, max_len=max_len, page_size=page_size,
+                  num_pages=num_pages, kv_bits=8, prefix_cache="on",
+                  kv_offload="host", sched="slo")
+
+    srv = BatchedServer(cfg, params, **common)
+    t0 = time.time()
+    reqs = srv.run(mk())
+    dt = time.time() - t0
+    offered_pages = sum(srv._pages_needed(r) for r in reqs)
+
+    # --- gate: a bounded pool served an overcommitted offered load ---
+    rejected = [r for r in reqs if r.error is not None]
+    if rejected:
+        raise RuntimeError(f"overcommit: {len(rejected)} waitable requests "
+                           f"rejected with --kv-offload host (expected 0): "
+                           f"{[r.rid for r in rejected]}")
+    if not all(r.done and len(r.out) > 0 for r in reqs):
+        raise RuntimeError("overcommit: not every request completed")
+    if srv.preempt_count < 1:
+        raise RuntimeError("overcommit trace failed to trigger preemption")
+    if srv.resume_count != srv.preempt_count:
+        raise RuntimeError(f"preempted {srv.preempt_count} but resumed "
+                           f"{srv.resume_count} — a victim never came back")
+
+    # --- preempted streams match an uninterrupted run (agreement: argmax
+    # can flip on float ties under multithreaded XLA; the subprocess test
+    # in tests/test_scheduler.py asserts bitwise identity) ---
+    big = BatchedServer(cfg, params, batch_size=batch, max_len=max_len,
+                        page_size=page_size, kv_bits=8)
+    reqs_ref = big.run(mk())
+    by_rid = {r.rid: r for r in reqs_ref}
+    agree = np.mean([np.mean(np.asarray(r.out)
+                             == np.asarray(by_rid[r.rid].out))
+                     for r in reqs])
+    if agree < 0.9:
+        raise RuntimeError(f"overcommit decode disagrees with the "
+                           f"uninterrupted reference: {agree:.1%}")
+
+    inv = srv.kv_inventory()
+    stats = srv.prefix_cache.stats()
+
+    # --- simulated restart: snapshot -> fresh server -> restore ---
+    import tempfile
+    snap = os.path.join(tempfile.mkdtemp(prefix="kv_snapshot_"),
+                        "prefix_pages.npz")
+    snap_pages = srv.snapshot_prefix_cache(snap)
+    # warm reference: second pass on the ORIGINAL server
+    l0, h0 = srv.prefix_cache.lookups, srv.prefix_cache.hits
+    srv.run(mk())
+    warm_rate = ((srv.prefix_cache.hits - h0)
+                 / max(srv.prefix_cache.lookups - l0, 1))
+    srv2 = BatchedServer(cfg, params, **common)
+    restored = srv2.restore_prefix_cache(snap)
+    reqs2 = srv2.run(mk())
+    s2 = srv2.prefix_cache.stats()
+    if not all(r.done and r.error is None for r in reqs2):
+        raise RuntimeError("restored server failed the overcommit trace")
+    if s2["hit_rate"] < warm_rate - 0.05:
+        raise RuntimeError(
+            f"restart hit-rate parity broken: restored {s2['hit_rate']:.0%}"
+            f" vs warm {warm_rate:.0%}")
+
+    # --- leak gates: refcounts AND host tier drain to zero ---
+    for tag, s in [("primary", srv), ("restored", srv2)]:
+        leaked = s.release_prefix_cache()
+        if leaked or s.allocator.num_free != s.allocator.num_usable:
+            raise RuntimeError(
+                f"allocator refcount leak ({tag}): {leaked} cache pages, "
+                f"{s.allocator.num_usable - s.allocator.num_free} "
+                f"unreturned")
+        if s.host_store.num_pages != 0:
+            raise RuntimeError(
+                f"host-tier page leak ({tag}): {s.host_store.num_pages} "
+                f"pages still parked after release")
+
+    res = {
+        "arch": arch, "requests": len(reqs), "batch": batch,
+        "page_size": page_size, "device_pages": num_pages - 1,
+        "offered_pages": offered_pages,
+        "overcommit_ratio": offered_pages / (num_pages - 1),
+        "completed": len(reqs), "rejected": 0,
+        "preemptions": srv.preempt_count, "resumes": srv.resume_count,
+        "ooo_admissions": srv.scheduler.ooo_admissions,
+        "demotions": stats["demotions"], "promotions": stats["promotions"],
+        "host_peak_pages": srv.host_store.peak_pages,
+        "host_peak_bytes": srv.host_store.peak_bytes,
+        "kv_inventory": inv,
+        "prefix_hit_rate_cold": stats["hit_rate"],
+        "prefix_hit_rate_warm": warm_rate,
+        "prefix_hit_rate_restored": s2["hit_rate"],
+        "snapshot_pages": snap_pages, "restored_pages": restored,
+        "token_agreement_vs_uninterrupted": float(agree),
+        "tokens_per_s": sum(len(r.out) for r in reqs) / max(dt, 1e-9),
+        "wall_s": dt,
+    }
+    if verbose:
+        print(f"[overcommit_serve] arch={arch} offered "
+              f"{offered_pages} pages onto a {num_pages - 1}-page pool "
+              f"({res['overcommit_ratio']:.1f}x overcommit, batch={batch})")
+        print(f"  {len(reqs)} completed / 0 rejected; "
+              f"{srv.preempt_count} preemptions (all resumed), "
+              f"{res['ooo_admissions']} out-of-order admissions")
+        print(f"  tiers: device {inv['device_bytes'] / 2**10:.1f} KiB "
+              f"{inv['device_by_container']} | host peak "
+              f"{res['host_peak_pages']} pages "
+              f"{res['host_peak_bytes'] / 2**10:.1f} KiB "
+              f"({stats['demotions']} demotions, {stats['promotions']} "
+              f"promotions)")
+        print(f"  restart: {snap_pages} pages snapshotted, {restored} "
+              f"restored; hit rate cold {res['prefix_hit_rate_cold']:.0%} "
+              f"-> warm {warm_rate:.0%} -> restored {s2['hit_rate']:.0%}")
+        print(f"  agreement vs uninterrupted run {agree:.1%}; no leaks")
+    save_json("overcommit_serve.json", res)
+    return res
+
+
 def _append_trajectory(point):
     """BENCH_serve.json accumulates one point per bench run, so the serving
     perf trend is visible across PRs (the driver diffs it)."""
@@ -293,10 +464,11 @@ def _append_trajectory(point):
 
 def run(*, arch="qwen2-72b", requests=10, batch=4, max_len=64, page_size=16,
         verbose=True, fast=False, workload="all"):
-    if workload == "prefix":
-        res = run_prefix(arch=arch, verbose=verbose, fast=fast)
+    if workload in ("prefix", "overcommit"):
+        fn = run_prefix if workload == "prefix" else run_overcommit
+        res = fn(arch=arch, verbose=verbose, fast=fast)
         point = {"when": time.strftime("%Y-%m-%d %H:%M:%S"), "arch": arch,
-                 "fast": fast, "summary": {"prefix": res}}
+                 "fast": fast, "summary": {workload: res}}
         path = _append_trajectory(point)
         if verbose:
             print(f"  trajectory point appended to {os.path.basename(path)}")
@@ -363,6 +535,14 @@ def run(*, arch="qwen2-72b", requests=10, batch=4, max_len=64, page_size=16,
              "prefill_forwards_saved", "prefill_forwards_reduction",
              "cow_copies", "evictions", "kv_at_rest_bytes",
              "profile_bytes_vs_int8", "token_agreement_on_vs_off")}
+        over = run_overcommit(arch=arch, verbose=verbose, fast=fast)
+        summary["overcommit"] = {
+            k: over[k] for k in
+            ("overcommit_ratio", "completed", "rejected", "preemptions",
+             "resumes", "ooo_admissions", "demotions", "promotions",
+             "host_peak_pages", "kv_inventory",
+             "prefix_hit_rate_restored", "prefix_hit_rate_warm",
+             "token_agreement_vs_uninterrupted")}
     out = {"arch": arch, "batch": batch, "max_len": max_len,
            "page_size": page_size, "rows": rows, "summary": summary}
     save_json("paged_serve.json", out)
@@ -383,11 +563,15 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--fast", action="store_true",
                     help="CI smoke: tiny trace, single iteration per config")
-    ap.add_argument("--workload", choices=["all", "mixed", "prefix"],
+    ap.add_argument("--workload",
+                    choices=["all", "mixed", "prefix", "overcommit"],
                     default="all",
                     help="mixed = the PR-2 mixed-length trace; prefix = the "
                          "shared-system-prompt trace (prefix cache on/off, "
-                         "per-layer profile, refcount-leak gate)")
+                         "per-layer profile, refcount-leak gate); "
+                         "overcommit = offered pages >> device pool through "
+                         "the tiered store (offload + preemption + restart "
+                         "parity; refcount/host-leak gates)")
     args = ap.parse_args(argv)
     run(arch=args.arch, requests=args.requests, batch=args.batch,
         max_len=args.max_len, page_size=args.page_size, fast=args.fast,

@@ -13,6 +13,10 @@
                     forwards saved, per-layer-profile at-rest KV bytes,
                     refcount-leak gate); also part of paged_serve's
                     default workload
+  overcommit_serve — tiered page store workload: offered pages >> device
+                    pool via host offload + SLO preemption + snapshot
+                    restart parity (refcount/host-leak gates); also part
+                    of paged_serve's default workload
   roofline        — EXPERIMENTS.md §Roofline terms from the dry-run JSONs
 
 ``python -m benchmarks.run [--only a,b] [--fast]``
@@ -49,6 +53,8 @@ def main(argv=None):
                                                workload="mixed"),
         "prefix_serve": lambda: paged_serve.run(fast=args.fast,
                                                 workload="prefix"),
+        "overcommit_serve": lambda: paged_serve.run(fast=args.fast,
+                                                    workload="overcommit"),
         "roofline": roofline.run,
     }
     # expensive searches reuse their saved results unless --force

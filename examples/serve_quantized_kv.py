@@ -29,13 +29,44 @@ Two further levers ride the same paged pool:
   applied to serving HBM; ``--kv-scale page`` swaps the static Q(I,F) grid
   for dynamic per-page max-abs calibration.
 
-Error semantics: paged admission preflights a request's WORST-CASE page
-demand (prompt + max_new; with prefix sharing, only the non-shared suffix
-is charged). A request that can never fit the pool raises
-``core.paged_kv.OutOfPagesError`` with the counts (needed/free/usable plus
-written vs reserved-but-unwritten vs evictable-cached); one that only has
-to wait for live requests to release pages is deferred in the queue. The
-free list can therefore never empty mid-prefill.
+Since PR 4 the bounded device pool is backed by a **tiered page store**:
+
+* ``kv_offload="host"`` (``--kv-offload host``) adds a host-memory tier
+  (``core.page_store``): pool pressure *demotes* unreferenced cached
+  prefix pages to host numpy instead of destroying them, and admission
+  *promotes* matched host pages back before aliasing. Demoted bytes stay
+  in their packed int4/int8/fp containers, so offload traffic scales with
+  the precision policy. ``host_pages=N`` (``--host-pages``) bounds the
+  tier; when it fills, cold host pages are dropped LRU and eviction falls
+  back to the PR-3 destructive path.
+* ``sched="slo"`` (``--sched``) replaces FIFO admission: the queue is
+  ordered by (priority, deadline_step, arrival), up to ``admit_window``
+  requests may be admitted past a deferred head (no more head-of-line
+  block), and a strictly more urgent request may PREEMPT a running one —
+  the victim's written pages demote to the host tier, it re-queues, and
+  resume promotes the pages back and continues decoding
+  bitwise-identically (no re-prefill).
+* ``snapshot_prefix_cache(path)`` / ``restore_prefix_cache(path)``
+  (``--prefix-snapshot``) persist cached prefix chains across server
+  restarts. The snapshot format is **profile-key-namespaced like the
+  trie** — every chain carries its KV quantization key, so an int8
+  snapshot can never back an int4 server — and a pool-geometry signature
+  rejects arch mismatches. Restored pages land in the HOST tier (zero
+  device pages until a hit promotes them).
+
+Error/failure semantics: paged admission preflights a request's WORST-CASE
+page demand (prompt + max_new; with prefix sharing, only the non-shared
+suffix plus one promotion page per matched host page is charged). A
+request that can never fit the pool is rejected with
+``core.paged_kv.OutOfPagesError`` carrying the full inventory
+(needed/free/usable plus written vs reserved-but-unwritten vs
+evictable-cached vs host-tier pages): FIFO mode records it on
+``request.error``, SKIPS it (the queue behind it keeps being served — the
+old behavior stalled), and re-raises after the run drains; SLO mode only
+records it. A request that merely has to wait is deferred. Preemption
+requires the host tier (victim pages must survive); with the tier full
+and nothing droppable, preemption simply does not fire and the request
+waits like before. The free list can never empty mid-prefill.
 
 Prints token agreement between the runs and the cache footprint ratios.
 
@@ -127,14 +158,52 @@ def main():
     print(f"  release_prefix_cache() -> {srv_px.release_prefix_cache()} "
           f"leaked pages (0 = every refcount balanced)")
 
+    print("=== tiered page store: host offload + SLO preemption + "
+          "restart ===")
+    import os
+    import tempfile
+    mk_tiered = lambda: [
+        Request(0, np.concatenate([sys_prompt, np.arange(3, dtype=np.int32)]),
+                16, priority=0),                       # long, low priority
+        Request(1, np.concatenate([sys_prompt, np.arange(2, dtype=np.int32)]),
+                6, priority=5, arrive_step=4, deadline_step=24),  # urgent
+        Request(2, np.concatenate([sys_prompt, np.arange(4, dtype=np.int32)]),
+                8, priority=1, arrive_step=10),
+    ]
+    tiered_kw = dict(batch_size=1, max_len=96, kv_bits=8, page_size=16,
+                     num_pages=5,                      # 4 usable: too small
+                     prefix_cache="on", kv_offload="host", sched="slo")
+    srv_t = BatchedServer(cfg, params, **tiered_kw)
+    reqs_t = srv_t.run(mk_tiered(), verbose=True)
+    print(f"  {srv_t.preempt_count} preemption(s), {srv_t.resume_count} "
+          f"resume(s); every request completed: "
+          f"{all(r.done and r.error is None for r in reqs_t)}")
+    print(f"  kv inventory (device/host split): {srv_t.kv_inventory()}")
+    snap = os.path.join(tempfile.mkdtemp(), "prefix_pages.npz")
+    n = srv_t.snapshot_prefix_cache(snap)
+    srv_t2 = BatchedServer(cfg, params, **tiered_kw)
+    m = srv_t2.restore_prefix_cache(snap)
+    srv_t2.run(mk_tiered())
+    s2 = srv_t2.prefix_cache.stats()
+    print(f"  restart: {n} pages snapshotted -> {m} restored to the host "
+          f"tier; hit rate after restore {s2['hit_rate']:.0%} "
+          f"({s2['promotions']} host pages promoted on demand)")
+    for s in (srv_t, srv_t2):
+        assert s.release_prefix_cache() == 0 and s.host_store.num_pages == 0
+
     # admission preflight: a request whose prompt + max_new can never be
-    # backed by the pool is rejected up front with counts
+    # backed by the pool is rejected with counts — recorded on the request
+    # and (FIFO mode) re-raised AFTER serviceable traffic drains, so a
+    # too-large head no longer starves the queue behind it
     tiny = BatchedServer(cfg, params, batch_size=2, max_len=96, kv_bits=8,
                          page_size=16, num_pages=4)   # 3 usable pages
+    ok_req = Request(100, np.arange(8, dtype=np.int32), 8)
     try:
-        tiny.run([Request(99, np.arange(40, dtype=np.int32), 50)])
+        tiny.run([Request(99, np.arange(40, dtype=np.int32), 50), ok_req])
     except OutOfPagesError as e:
         print(f"\nOutOfPagesError (expected): {e}")
+    print(f"request behind the rejected head still served: {ok_req.done} "
+          f"({len(ok_req.out)} tokens)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,314 @@
+"""Tiered KV page store: host-memory offload + persistent prefix pages.
+
+The device page pool (:mod:`repro.core.paged_kv`) enforces the paper's
+*bounded memory* brutally: when it fills, requests defer and LRU-evicted
+cached prefixes are destroyed. This module adds the second, cheaper tier the
+bound can spill into and refill from:
+
+* :func:`extract_page` / :func:`inject_page` move ONE logical page between
+  the device pools and host memory. Bytes stay in their **packed storage
+  containers** (int8 grids, int4 lane-packed int32 words, fp pages) plus the
+  per-page dequant scales — so offload traffic scales with the searched
+  precision policy (a 4-bit layer demotes at ~1/8 the fp32 cost), which is
+  the paper's per-layer payoff made operational, and a demote→promote round
+  trip is **byte-identical** (the preemption-resume bitwise contract).
+* :class:`HostPageStore` is the bounded host tier: a handle-keyed dict of
+  :class:`PageBlob` snapshots with page/byte accounting per container.
+* :class:`TieredPager` binds an allocator + host store + the server's cache
+  pytree into demote/promote primitives, and registers itself as an
+  allocator ``pressure`` callback consumer (the prefix cache drives it).
+* :func:`save_prefix_snapshot` / :func:`load_prefix_snapshot` persist host
+  pages (token chains + blobs) across server restarts. The format is
+  **profile-key-namespaced like the trie**: every chain carries the KV
+  quantization profile key it was written under, so an int8 snapshot can
+  never back an int4 server, and a geometry signature guards against arch
+  mismatches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .paged_kv import iter_kv_pools, map_kv_pools, pool_container
+
+__all__ = ["PageBlob", "HostPageStore", "TieredPager", "extract_page",
+           "inject_page", "cache_geometry", "save_prefix_snapshot",
+           "load_prefix_snapshot"]
+
+_FIELDS = ("k", "v", "ks", "vs")
+
+
+@dataclasses.dataclass
+class PageBlob:
+    """Host-side copy of ONE logical page across every attention pool.
+
+    ``arrays[i]`` holds the page's k/v bytes and k/v scales for the i-th
+    pool in :func:`repro.core.paged_kv.iter_kv_pools` traversal order —
+    stacked pools contribute a leading layer dim, unstacked pools a single
+    page. Arrays keep the pool's storage dtype (packed containers).
+    """
+
+    arrays: List[Dict[str, np.ndarray]]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(a.nbytes) for rec in self.arrays
+                   for a in rec.values())
+
+    def bytes_by_container(self) -> Dict[str, int]:
+        """Page (k+v) bytes per storage container; the per-page dequant
+        scales are excluded here (they are counted in ``nbytes``)."""
+        out: Dict[str, int] = {}
+        for rec in self.arrays:
+            dt = rec["k"].dtype
+            if np.issubdtype(dt, np.floating):
+                cont = "fp"
+            else:
+                cont = "int8" if dt == np.dtype(np.int8) else "int4"
+            out[cont] = out.get(cont, 0) + int(rec["k"].nbytes
+                                               + rec["v"].nbytes)
+        return out
+
+
+def extract_page(caches, page: int) -> PageBlob:
+    """Copy logical ``page``'s stored bytes + scales out of every pool.
+
+    Non-destructive (the device page keeps its content); the copy is forced
+    to host numpy, so the blob stays valid after the page is freed and
+    recycled.
+    """
+    arrays = []
+    for pool, axis in iter_kv_pools(caches):
+        idx = (slice(None), page) if axis == 1 else (page,)
+        arrays.append({
+            "k": np.asarray(pool["k_pages"][idx]),
+            "v": np.asarray(pool["v_pages"][idx]),
+            "ks": np.asarray(pool["k_scale"][idx]),
+            "vs": np.asarray(pool["v_scale"][idx]),
+        })
+    return PageBlob(arrays)
+
+
+def inject_page(caches, blob: PageBlob, page: int):
+    """Write ``blob`` into logical ``page`` of every pool; returns the new
+    cache structure (functional update — callers reassign their caches)."""
+    it = iter(blob.arrays)
+
+    def put(pool, axis):
+        rec = next(it)
+        idx = (slice(None), page) if axis == 1 else (page,)
+        return {
+            "k_pages": pool["k_pages"].at[idx].set(
+                jnp.asarray(rec["k"], pool["k_pages"].dtype)),
+            "v_pages": pool["v_pages"].at[idx].set(
+                jnp.asarray(rec["v"], pool["v_pages"].dtype)),
+            "k_scale": pool["k_scale"].at[idx].set(
+                jnp.asarray(rec["ks"], pool["k_scale"].dtype)),
+            "v_scale": pool["v_scale"].at[idx].set(
+                jnp.asarray(rec["vs"], pool["v_scale"].dtype)),
+        }
+
+    new_caches = map_kv_pools(caches, put)
+    try:
+        next(it)
+    except StopIteration:
+        return new_caches
+    raise ValueError("blob has more pool records than the cache structure")
+
+
+def cache_geometry(caches) -> str:
+    """Canonical signature of the paged-pool structure (shapes minus the
+    page axis, dtypes, containers). Snapshot restore validates it so a blob
+    is only ever injected into an identically shaped pool."""
+    sig = []
+    for pool, axis in iter_kv_pools(caches):
+        shape = list(pool["k_pages"].shape)
+        del shape[axis]            # page count may differ between servers
+        sig.append([pool_container(pool), shape,
+                    str(pool["k_pages"].dtype), int(axis)])
+    return json.dumps(sig)
+
+
+# ---------------------------------------------------------------------------
+# Host tier
+# ---------------------------------------------------------------------------
+class HostPageStore:
+    """Bounded host-memory (numpy) page tier.
+
+    Pure storage + accounting: handles are opaque ints, policy (what to
+    demote, what to drop when full) lives in the callers — the prefix cache
+    manages its demoted nodes, the server its preempted requests. ``put``
+    on a full store raises; callers check :meth:`has_room` first.
+    """
+
+    def __init__(self, max_pages: Optional[int] = None):
+        if max_pages is not None and max_pages < 1:
+            raise ValueError("max_pages must be >= 1 (or None = unbounded)")
+        self.max_pages = max_pages
+        self._blobs: Dict[int, PageBlob] = {}
+        self._next = 0
+        self.nbytes = 0
+        # lifetime counters (benchmarks read these)
+        self.puts = 0
+        self.pops = 0
+        self.drops = 0
+        self.peak_pages = 0
+        self.peak_bytes = 0
+
+    @property
+    def num_pages(self) -> int:
+        return len(self._blobs)
+
+    def has_room(self, n: int = 1) -> bool:
+        return (self.max_pages is None
+                or self.num_pages + n <= self.max_pages)
+
+    def put(self, blob: PageBlob) -> int:
+        if not self.has_room(1):
+            raise RuntimeError(
+                f"host page tier full ({self.num_pages}/{self.max_pages} "
+                f"pages); raise --host-pages or drop cold prefixes first")
+        h = self._next
+        self._next += 1
+        self._blobs[h] = blob
+        self.nbytes += blob.nbytes
+        self.puts += 1
+        self.peak_pages = max(self.peak_pages, self.num_pages)
+        self.peak_bytes = max(self.peak_bytes, self.nbytes)
+        return h
+
+    def get(self, handle: int) -> PageBlob:
+        return self._blobs[handle]
+
+    def pop(self, handle: int) -> PageBlob:
+        blob = self._blobs.pop(handle)
+        self.nbytes -= blob.nbytes
+        self.pops += 1
+        return blob
+
+    def drop(self, handle: int) -> None:
+        blob = self._blobs.pop(handle)
+        self.nbytes -= blob.nbytes
+        self.drops += 1
+
+    def bytes_by_container(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for blob in self._blobs.values():
+            for cont, b in blob.bytes_by_container().items():
+                out[cont] = out.get(cont, 0) + b
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Pager: moves pages between the tiers
+# ---------------------------------------------------------------------------
+class TieredPager:
+    """Demote/promote primitives over (allocator, host store, cache pytree).
+
+    The cache pytree is owned by the server and rebuilt functionally on
+    every write, so the pager holds ``get_caches``/``set_caches`` closures
+    instead of a reference. ``promote`` may recursively trigger allocator
+    pressure (reclaim -> prefix-cache demotion), which is safe: eviction
+    never touches pinned or non-resident nodes.
+    """
+
+    def __init__(self, allocator, host: HostPageStore, get_caches,
+                 set_caches):
+        self.allocator = allocator
+        self.host = host
+        self._get = get_caches
+        self._set = set_caches
+        self.demotions = 0
+        self.promotions = 0
+
+    def host_room(self) -> float:
+        """Host pages still available (inf when unbounded)."""
+        if self.host.max_pages is None:
+            return float("inf")
+        return max(0, self.host.max_pages - self.host.num_pages)
+
+    def extract(self, page: int) -> PageBlob:
+        return extract_page(self._get(), page)
+
+    def demote(self, page: int) -> int:
+        """Copy ``page`` to the host tier, release the caller's device
+        reference, return the host handle. The caller must hold the ONLY
+        reference (refcount 1) or the page content could keep changing
+        under other owners after the snapshot."""
+        blob = extract_page(self._get(), page)
+        h = self.host.put(blob)
+        self.allocator.free([page])
+        self.demotions += 1
+        return h
+
+    def promote(self, handle: int) -> int:
+        """Allocate a device page (may trigger reclaim pressure), inject the
+        host blob into it, release the host copy; returns the page id (at
+        refcount 1, owned by the caller)."""
+        page = self.allocator.alloc()
+        blob = self.host.pop(handle)
+        self._set(inject_page(self._get(), blob, page))
+        self.promotions += 1
+        return page
+
+
+# ---------------------------------------------------------------------------
+# Snapshot / restore (persistent prefix pages)
+# ---------------------------------------------------------------------------
+SNAPSHOT_VERSION = 1
+
+
+def snapshot_path(path: str) -> str:
+    """The on-disk filename for ``path``: ``np.savez`` appends ``.npz`` to
+    bare names, so save/load/exists checks all normalize through here."""
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def save_prefix_snapshot(path: str, entries, *, page_size: int,
+                         geometry: str) -> int:
+    """Serialize prefix-cache chains to ``path`` (one ``np.savez`` archive).
+
+    ``entries`` is an iterable of ``(profile_key, tokens, PageBlob)`` with
+    parents emitted before children (the trie's DFS order); ``tokens`` is
+    the FULL token path from the root through the node's own chunk, so
+    restore can rebuild the chain shape without trie internals. Returns the
+    number of pages written.
+    """
+    chains = []
+    arrays = {}
+    n = 0
+    for pk, tokens, blob in entries:
+        chains.append({"profile": pk, "tokens": [int(t) for t in tokens],
+                       "pools": len(blob.arrays)})
+        for j, rec in enumerate(blob.arrays):
+            for f in _FIELDS:
+                arrays[f"e{n}_p{j}_{f}"] = rec[f]
+        n += 1
+    header = {"version": SNAPSHOT_VERSION, "page_size": int(page_size),
+              "geometry": geometry, "chains": chains}
+    np.savez(snapshot_path(path), __header__=np.asarray(json.dumps(header)),
+             **arrays)
+    return n
+
+
+def load_prefix_snapshot(path: str) -> Tuple[dict, List[tuple]]:
+    """Read a snapshot back: ``(meta, [(profile_key, tokens, PageBlob)])``
+    in the order saved (parents before children)."""
+    with np.load(snapshot_path(path), allow_pickle=False) as z:
+        header = json.loads(str(z["__header__"]))
+        if header.get("version") != SNAPSHOT_VERSION:
+            raise ValueError(f"unsupported snapshot version "
+                             f"{header.get('version')!r}")
+        entries = []
+        for i, ch in enumerate(header["chains"]):
+            arrays = [{f: z[f"e{i}_p{j}_{f}"] for f in _FIELDS}
+                      for j in range(ch["pools"])]
+            entries.append((ch["profile"], list(ch["tokens"]),
+                            PageBlob(arrays)))
+    meta = {"version": header["version"], "page_size": header["page_size"],
+            "geometry": header["geometry"]}
+    return meta, entries

@@ -58,20 +58,23 @@ class OutOfPagesError(RuntimeError):
     ``written`` pages already holding live KV — under prefix sharing a
     request's demand is suffix-only, so deferral decisions need the split,
     not just the free count. ``evictable`` counts unreferenced prefix-cache
-    pages that eviction could reclaim.
+    pages that eviction could reclaim, ``host_pages`` the pages currently
+    parked in the host-memory tier (demoted prefixes + preempted requests)
+    — together the full device/host/evictable inventory.
     """
 
     def __init__(self, *, needed: int, free: int, total: int,
                  rid: Optional[int] = None, reserved: int = 0,
-                 written: int = 0, evictable: int = 0):
+                 written: int = 0, evictable: int = 0, host_pages: int = 0):
         self.needed, self.free, self.total, self.rid = needed, free, total, rid
         self.reserved, self.written = reserved, written
         self.evictable = evictable
+        self.host_pages = host_pages
         who = f"request {rid}" if rid is not None else "allocation"
         extra = ""
-        if reserved or written or evictable:
+        if reserved or written or evictable or host_pages:
             extra = (f" [{written} written, {reserved} reserved-unwritten, "
-                     f"{evictable} evictable-cached]")
+                     f"{evictable} evictable-cached, {host_pages} host-tier]")
         super().__init__(
             f"KV page pool cannot back {who}: needs {needed} page(s), "
             f"{free} free of {total} usable (page 0 is scratch){extra}; "
@@ -166,10 +169,18 @@ class PageAllocator:
     count reaches zero, so no caller can ever free a page out from under a
     sharer, and releasing a page twice from the same owner raises.
 
-    ``reclaim`` (optional callable ``n -> pages_freed``) is invoked when the
-    free list empties mid-``alloc`` — the prefix cache registers its LRU
-    eviction here, so unreferenced cached prefixes are recycled under pool
-    pressure instead of failing the allocation.
+    ``reclaim`` (optional callable ``n -> pages_freed``) is invoked when
+    the free list empties mid-``alloc`` — the prefix cache registers its
+    eviction here, which under a tiered page store DEMOTES unreferenced
+    cached prefixes to host memory (destructive LRU drop otherwise), so
+    pool pressure recycles pages instead of failing the allocation.
+    ``pressure`` is a list of further callbacks (same ``n -> freed``
+    contract, ``add_pressure``) tried in order after ``reclaim`` — an
+    extension point for additional reclaimers (e.g. future async offload
+    writeback); nothing in the serving stack registers one today.
+    ``host_inventory`` (optional zero-arg callable -> page count) lets
+    :class:`OutOfPagesError` report the host-tier inventory alongside the
+    device counts.
     """
 
     def __init__(self, num_pages: int):
@@ -179,6 +190,8 @@ class PageAllocator:
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
         self._refs: Dict[int, int] = {}
         self.reclaim = None  # optional: n_pages -> n_freed (LRU eviction)
+        self.pressure: List = []      # further n -> n_freed callbacks
+        self.host_inventory = None    # optional: () -> host-tier page count
 
     @property
     def num_free(self) -> int:
@@ -196,18 +209,40 @@ class PageAllocator:
         """Preflight: raise OutOfPagesError unless ``needed`` pages are free.
 
         Deliberately CONSERVATIVE: only the free list is consulted, not the
-        ``reclaim`` hook — pages eviction could recover don't count here
-        (the serving admission path does its own reclaim-aware accounting).
+        ``reclaim``/``pressure`` hooks — pages eviction could recover don't
+        count here (the serving admission path does its own reclaim-aware
+        accounting).
         """
         if needed > self.num_free:
             raise OutOfPagesError(needed=needed, free=self.num_free,
-                                  total=self.num_usable, rid=rid)
+                                  total=self.num_usable, rid=rid,
+                                  host_pages=self.host_pages())
+
+    def host_pages(self) -> int:
+        """Pages currently parked in the host tier (0 without a tier)."""
+        return int(self.host_inventory()) if self.host_inventory else 0
+
+    def add_pressure(self, fn) -> None:
+        """Register an ``n_pages -> n_freed`` pressure callback (tried after
+        ``reclaim`` when the free list empties mid-``alloc``)."""
+        self.pressure.append(fn)
+
+    def _apply_pressure(self, needed: int) -> None:
+        if self._free:
+            return
+        if self.reclaim is not None:
+            self.reclaim(needed)
+        for fn in self.pressure:
+            if self._free:
+                return
+            fn(needed)
 
     def alloc(self) -> int:
-        if not self._free and self.reclaim is not None:
-            self.reclaim(1)
         if not self._free:
-            raise OutOfPagesError(needed=1, free=0, total=self.num_usable)
+            self._apply_pressure(1)
+        if not self._free:
+            raise OutOfPagesError(needed=1, free=0, total=self.num_usable,
+                                  host_pages=self.host_pages())
         page = self._free.pop()
         self._refs[page] = 1
         return page
@@ -468,3 +503,64 @@ def pool_bytes(pool) -> int:
     """True stored bytes of one layer's pool (pages + scales)."""
     return sum(int(np.prod(a.shape)) * a.dtype.itemsize
                for a in jax.tree_util.tree_leaves(pool))
+
+
+def pool_container(pool) -> str:
+    """Container name of a pool dict, inferred from the stored dtype."""
+    dt = pool["k_pages"].dtype
+    if jnp.issubdtype(dt, jnp.floating):
+        return "fp"
+    return "int8" if dt == jnp.dtype(jnp.int8) else "int4"
+
+
+# ---------------------------------------------------------------------------
+# Full-model cache traversal (used by the tiered page store + benchmarks)
+# ---------------------------------------------------------------------------
+def iter_kv_pools(caches):
+    """Yield ``(pool_dict, page_axis)`` for every paged attention pool in a
+    full-model cache structure (``models.transformer.init_cache``), in a
+    DETERMINISTIC traversal order.
+
+    Handles all three layouts: stacked ``(periods, NP, ...)`` entries and the
+    per-run stacked lists of the grouped per-layer-profile scan (both
+    ``page_axis=1``), and the per-period unstacked dicts of the fully
+    unrolled profile path (``page_axis=0``). Non-paged entries (dense KV
+    slabs, SSM states) are skipped.
+    """
+    for seg in caches:
+        for entry in seg:
+            for d in (entry if isinstance(entry, list) else [entry]):
+                if isinstance(d, dict) and "k_pages" in d:
+                    yield d, (1 if d["k_pages"].ndim == 5 else 0)
+
+
+def map_kv_pools(caches, fn):
+    """Rebuild a full-model cache structure, replacing every paged pool dict
+    with ``fn(pool, page_axis)``; non-pool entries pass through unchanged.
+    Traversal order matches :func:`iter_kv_pools`."""
+
+    def one(d):
+        if isinstance(d, dict) and "k_pages" in d:
+            return fn(d, 1 if d["k_pages"].ndim == 5 else 0)
+        return d
+
+    new_caches = []
+    for seg in caches:
+        seg_new = []
+        for entry in seg:
+            if isinstance(entry, list):
+                seg_new.append([one(d) for d in entry])
+            else:
+                seg_new.append(one(entry))
+        new_caches.append(tuple(seg_new))
+    return new_caches
+
+
+def caches_kv_bytes(caches) -> Dict[str, int]:
+    """Device at-rest bytes of every paged pool, split per container — one
+    half of the device/host inventory the tiered page store reports."""
+    out: Dict[str, int] = {}
+    for pool, _ in iter_kv_pools(caches):
+        cont = pool_container(pool)
+        out[cont] = out.get(cont, 0) + pool_bytes(pool)
+    return out

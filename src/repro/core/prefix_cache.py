@@ -15,6 +15,17 @@ new request whose prompt starts with a cached chain can
   (:func:`repro.core.paged_kv.copy_pool_pages`) which the request then
   extends, while the cached source stays byte-identical for other readers.
 
+Nodes live in one of two states:
+
+* **resident** — ``node.page`` is a device pool page (refcount >= 1, one
+  reference owned by the cache);
+* **host** — the page's bytes were *demoted* to the host tier
+  (``core.page_store``): ``node.host`` is a :class:`HostPageStore` handle,
+  no device page is held. A hit through a host node still matches; admission
+  *promotes* it back to a device page before aliasing. Restart restore
+  (:func:`core.page_store.load_prefix_snapshot`) creates nodes directly in
+  the host state.
+
 Correctness invariants:
 
 * only FULL pages are aliased — a sharer's first write position is always
@@ -26,12 +37,19 @@ Correctness invariants:
   position 0 — exactly the lookup this trie implements;
 * pages are only shared between identically-quantized configurations: the
   trie is namespaced by a **profile key** (the per-layer KV precision
-  profile + scale mode), so an int8 chain can never back an int4 request.
+  profile + scale mode), so an int8 chain can never back an int4 request;
+* a chain may interleave resident and host nodes freely — demoting a
+  mid-chain node leaves no hole because its bytes survive on the host tier;
+  *destroying* a node (drop) stays leaf-only.
 
-Eviction is LRU over *unreferenced* cached pages (allocator refcount 1 —
-held only by the cache), leaf-first so a chain never develops a hole. The
+Eviction under pool pressure prefers **demotion** (LRU over unreferenced
+resident pages, any trie position) when a pager with host room is attached,
+and falls back to the destructive LRU leaf-first drop otherwise. Admission
+pins the nodes of a hit (``node.pins``) so reclaim triggered by its own
+promotions/allocations can never evict the chain out from under it. The
 cache registers itself as the allocator's ``reclaim`` hook: pool pressure
-evicts cold prefixes instead of failing the allocation.
+spills cold prefixes to host memory (or drops them) instead of failing the
+allocation.
 """
 from __future__ import annotations
 
@@ -48,38 +66,58 @@ __all__ = ["PrefixCache", "PrefixHit"]
 class PrefixHit:
     """Result of a longest-prefix lookup.
 
-    ``matched == len(full_pages) * page_size + cow_valid``. ``full_pages``
-    are aliasable as-is (every one is a full page); ``cow_page`` (if any) is
-    the cached page the query diverges inside — the caller must copy it and
-    may then treat its first ``cow_valid`` tokens as written.
+    ``matched == len(nodes) * page_size + cow_valid``. ``nodes`` is the
+    fully-matched chain (each node one FULL page, resident or host);
+    ``cow_node`` (if any) is the cached page the query diverges inside — the
+    caller must copy it (after promoting, if host) and may then treat its
+    first ``cow_valid`` tokens as written. ``full_pages``/``cow_page``
+    expose the device page ids (-1 for host nodes) for introspection.
     """
 
     matched: int = 0
-    full_pages: List[int] = dataclasses.field(default_factory=list)
-    cow_page: Optional[int] = None
+    nodes: List["_Node"] = dataclasses.field(default_factory=list)
+    cow_node: Optional["_Node"] = None
     cow_valid: int = 0
+
+    @property
+    def full_pages(self) -> List[int]:
+        return [n.page for n in self.nodes]
+
+    @property
+    def cow_page(self) -> Optional[int]:
+        return None if self.cow_node is None else self.cow_node.page
 
 
 class _Node:
-    """One cached page: ``tokens`` (<= page_size) stored at ``page``.
+    """One cached page: ``tokens`` (<= page_size) stored at ``page`` (device,
+    resident state) or behind ``host`` (host-tier handle, demoted state).
 
     Children are keyed by their full token tuple for O(1) exact-chunk
     descent; partial children (count < page_size) are leaves and are found
-    by the best-common-prefix scan.
+    by the best-common-prefix scan. ``pins`` counts in-flight admissions
+    holding this node — eviction (demote AND drop) skips pinned nodes.
     """
 
-    __slots__ = ("tokens", "page", "children", "parent", "stamp")
+    __slots__ = ("tokens", "page", "host", "children", "parent", "stamp",
+                 "pins")
 
-    def __init__(self, tokens: Tuple[int, ...], page: int, parent, stamp: int):
+    def __init__(self, tokens: Tuple[int, ...], page: int, parent,
+                 stamp: int, host: Optional[int] = None):
         self.tokens = tokens
         self.page = page
+        self.host = host
         self.children: Dict[Tuple[int, ...], "_Node"] = {}
         self.parent = parent
         self.stamp = stamp
+        self.pins = 0
 
     @property
     def count(self) -> int:
         return len(self.tokens)
+
+    @property
+    def resident(self) -> bool:
+        return self.page >= 0
 
 
 def _common_prefix(a: Sequence[int], b: Sequence[int]) -> int:
@@ -94,18 +132,23 @@ def _common_prefix(a: Sequence[int], b: Sequence[int]) -> int:
 class PrefixCache:
     """Radix index of cached prompt pages over one server's page pool.
 
-    The cache holds ONE allocator reference per cached page (taken at
-    ``insert``), on top of whatever slots reference it — so a page is
-    evictable exactly when its refcount is 1.
+    The cache holds ONE allocator reference per RESIDENT cached page (taken
+    at ``insert`` or promotion), on top of whatever slots reference it — so
+    a resident page is evictable exactly when its refcount is 1. Host-state
+    nodes hold a host-tier handle instead. ``pager`` (optional,
+    :class:`repro.core.page_store.TieredPager`) enables the host tier:
+    without it the cache degrades to PR-3 behavior (destructive eviction,
+    resident-only nodes).
     """
 
     def __init__(self, allocator: PageAllocator, page_size: int,
-                 profile_key: str = ""):
+                 profile_key: str = "", pager=None):
         if page_size < 1:
             raise ValueError("page_size must be >= 1")
         self.allocator = allocator
         self.page_size = page_size
         self.profile_key = profile_key
+        self.pager = pager
         self._roots: Dict[str, _Node] = {}
         self._clock = itertools.count()
         # instrumentation (benchmarks/serve read these)
@@ -115,7 +158,11 @@ class PrefixCache:
         self.lookup_tokens = 0
         self.inserted_pages = 0
         self.cow_copies = 0          # bumped by the server after each copy
-        self.evictions = 0
+        self.evictions = 0           # destructive drops of RESIDENT pages
+        self.demotions = 0           # resident -> host spills
+        self.promotions = 0          # host -> resident refills
+        self.host_drops = 0          # destructive drops of HOST pages
+        self.restored_pages = 0      # nodes created from a snapshot
 
     # -- internals ----------------------------------------------------------
     def _root(self, profile_key: Optional[str]) -> _Node:
@@ -124,26 +171,40 @@ class PrefixCache:
             self._roots[key] = _Node((), -1, None, next(self._clock))
         return self._roots[key]
 
-    def _nodes(self) -> List[_Node]:
+    def _all_nodes(self) -> List[_Node]:
         out = []
         stack = list(self._roots.values())
         while stack:
             n = stack.pop()
             stack.extend(n.children.values())
-            if n.page >= 0:
+            if n.parent is not None:
                 out.append(n)
         return out
+
+    def _nodes(self) -> List[_Node]:
+        return [n for n in self._all_nodes() if n.resident]
+
+    @staticmethod
+    def _detach(node: _Node) -> None:
+        del node.parent.children[node.tokens]
+        node.parent = None
 
     # -- stats --------------------------------------------------------------
     @property
     def num_pages(self) -> int:
-        """Pages currently retained by the cache."""
+        """Device pages currently retained by the cache (resident nodes)."""
         return len(self._nodes())
 
-    def evictable_pages(self) -> int:
-        """Pages reclaimable right now: refcount-1 nodes whose whole subtree
-        is refcount-1 (an ancestor of a referenced page must stay, or the
-        chain develops a hole while a reader still aliases the child)."""
+    @property
+    def host_pages(self) -> int:
+        """Cached pages currently demoted to the host tier."""
+        return sum(1 for n in self._all_nodes() if n.host is not None)
+
+    def _droppable_pages(self) -> int:
+        """Resident pages reclaimable by DESTRUCTIVE leaf-first eviction:
+        refcount-1 unpinned nodes whose whole subtree is also reclaimable
+        (an ancestor of a referenced page must stay, or the chain develops
+        a hole while a reader still aliases the child)."""
 
         def count(node: _Node) -> Tuple[int, bool]:
             n, free = 0, True
@@ -151,12 +212,32 @@ class PrefixCache:
                 cn, cfree = count(c)
                 n += cn
                 free &= cfree
-            if node.page >= 0:
+            if node.pins:
+                return n, False
+            if node.resident:
                 if free and self.allocator.refcount(node.page) == 1:
                     return n + 1, True
                 return n, False
             return n, free
         return sum(count(r)[0] for r in self._roots.values())
+
+    def _demotable_nodes(self) -> List[_Node]:
+        """Resident refcount-1 unpinned nodes — demotion candidates (ANY
+        trie position: a demoted mid-chain node leaves no hole)."""
+        return [n for n in self._nodes()
+                if not n.pins and self.allocator.refcount(n.page) == 1]
+
+    def evictable_pages(self) -> int:
+        """Device pages reclaimable right now, by demotion (host room
+        permitting) and/or destructive leaf-first drops."""
+        drop = self._droppable_pages()
+        if self.pager is None:
+            return drop
+        demotable = len(self._demotable_nodes())
+        room = self.pager.host_room()
+        if room == float("inf"):
+            return demotable
+        return min(demotable, drop + int(room))
 
     # -- lookup -------------------------------------------------------------
     def lookup(self, tokens: Sequence[int],
@@ -164,9 +245,10 @@ class PrefixCache:
                record: bool = True) -> PrefixHit:
         """Longest cached prefix of ``tokens`` (page-granular + intra-page).
 
-        Pure read: no refcounts change. The caller pins (increfs) the hit's
-        pages before any operation that could evict — lookup and pinning are
-        adjacent, synchronous host work in the serving loop.
+        Pure read: no refcounts change, host nodes stay host. The caller
+        pins the hit (:meth:`pin`) before any operation that could evict —
+        lookup and pinning are adjacent, synchronous host work in the
+        serving loop.
 
         ``record=False`` leaves the hit-rate counters untouched (the server
         passes it during admission, which may retry the same request every
@@ -186,7 +268,7 @@ class PrefixCache:
             child = node.children.get(chunk) if len(chunk) == ps else None
             if child is not None and child.count == ps:
                 child.stamp = next(self._clock)
-                hit.full_pages.append(child.page)
+                hit.nodes.append(child)
                 hit.matched += ps
                 node = child
                 i += ps
@@ -199,7 +281,7 @@ class PrefixCache:
                     best, best_len = c, n
             if best is not None:
                 best.stamp = next(self._clock)
-                hit.cow_page = best.page
+                hit.cow_node = best
                 hit.cow_valid = best_len
                 hit.matched += best_len
             break
@@ -218,6 +300,41 @@ class PrefixCache:
             self.hits += 1
             self.hit_tokens += matched
 
+    # -- pinning / promotion ------------------------------------------------
+    def _hit_nodes(self, hit: PrefixHit) -> List[_Node]:
+        return hit.nodes + ([hit.cow_node] if hit.cow_node is not None
+                            else [])
+
+    def pin(self, hit: PrefixHit) -> None:
+        """Shield a hit's chain from eviction (demote AND drop) while an
+        admission is in flight. Balanced by :meth:`unpin`."""
+        for n in self._hit_nodes(hit):
+            n.pins += 1
+
+    def unpin(self, hit: PrefixHit) -> None:
+        for n in self._hit_nodes(hit):
+            assert n.pins > 0, "unbalanced prefix-cache unpin"
+            n.pins -= 1
+
+    def host_nodes_in(self, hit: PrefixHit) -> int:
+        """Host-state nodes an admission of this hit must promote — each
+        costs one device page on top of the request's own demand."""
+        return sum(1 for n in self._hit_nodes(hit) if not n.resident)
+
+    def ensure_resident(self, node: _Node) -> int:
+        """Promote ``node`` from the host tier if needed; returns the device
+        page id. Promotion allocates (may trigger reclaim pressure — safe,
+        the caller pinned the chain). The promoted page's single reference
+        belongs to the cache, exactly like a freshly inserted node."""
+        if node.resident:
+            return node.page
+        if self.pager is None:
+            raise RuntimeError("host-state node without a pager")
+        node.page = self.pager.promote(node.host)
+        node.host = None
+        self.promotions += 1
+        return node.page
+
     # -- insert -------------------------------------------------------------
     def insert(self, tokens: Sequence[int], pages: Sequence[int],
                profile_key: Optional[str] = None) -> int:
@@ -226,9 +343,10 @@ class PrefixCache:
         ``pages[j]`` must hold the KV of ``tokens[j*ps:(j+1)*ps]`` at those
         absolute positions (the caller's prefill just wrote them, or they
         came from this cache). Chunks already cached are deduplicated —
-        existing nodes are reused and the caller's duplicate page simply
-        stays slot-owned. Newly indexed pages get one cache reference
-        (``allocator.incref``). Returns the number of pages newly retained.
+        existing nodes are reused (resident OR host) and the caller's
+        duplicate page simply stays slot-owned. Newly indexed pages get one
+        cache reference (``allocator.incref``). Returns the number of pages
+        newly retained.
         """
         tokens = [int(t) for t in tokens]
         ps = self.page_size
@@ -264,36 +382,138 @@ class PrefixCache:
         self.inserted_pages += added
         return added
 
-    # -- eviction -----------------------------------------------------------
-    def evict(self, n_pages: int) -> int:
-        """Release up to ``n_pages`` LRU unreferenced cached pages.
+    def insert_host(self, tokens: Sequence[int], handle: int,
+                    profile_key: Optional[str] = None) -> bool:
+        """Create ONE node directly in the host state (snapshot restore).
 
-        Leaf-first: only nodes with no children are candidates, so chains
-        never develop holes; a parent becomes a candidate once its children
-        are gone. Returns the number of pages actually freed."""
+        ``tokens`` is the full token path from the root through the node's
+        own chunk; every ancestor chunk must already exist (restore feeds
+        entries parents-first). Returns False — without consuming the
+        handle — when the node already exists or an ancestor is missing.
+        """
+        tokens = [int(t) for t in tokens]
+        ps = self.page_size
+        if not tokens:
+            return False
+        node = self._root(profile_key)
+        n_chunks = -(-len(tokens) // ps)
+        for j in range(n_chunks - 1):
+            node = node.children.get(tuple(tokens[j * ps:(j + 1) * ps]))
+            if node is None or node.count != ps:
+                return False
+        chunk = tuple(tokens[(n_chunks - 1) * ps:])
+        if chunk in node.children:
+            return False
+        node.children[chunk] = _Node(chunk, -1, node, next(self._clock),
+                                     host=handle)
+        self.restored_pages += 1
+        return True
+
+    # -- snapshot -----------------------------------------------------------
+    def iter_chain_nodes(self):
+        """Yield ``(profile_key, full_tokens, node)`` for every cached page,
+        parents before children — the snapshot serialization order."""
+        for key, root in self._roots.items():
+            stack = [(root, [])]
+            while stack:
+                node, prefix = stack.pop()
+                if node.parent is not None:
+                    prefix = prefix + list(node.tokens)
+                    yield key, prefix, node
+                for c in node.children.values():
+                    stack.append((c, prefix))
+
+    # -- eviction -----------------------------------------------------------
+    def drop_host_lru(self) -> bool:
+        """Destroy the LRU unpinned host-tier LEAF page (frees host room,
+        no device effect). Returns False when none exists."""
+        victim = None
+        for n in self._all_nodes():
+            if n.resident or n.pins or n.children:
+                continue
+            if victim is None or n.stamp < victim.stamp:
+                victim = n
+        if victim is None:
+            return False
+        self.pager.host.drop(victim.host)
+        self._detach(victim)
+        self.host_drops += 1
+        return True
+
+    def _drop_one(self) -> bool:
+        """Destroy the LRU droppable RESIDENT leaf page (PR-3 eviction)."""
+        victim = None
+        for node in self._nodes():
+            if node.children or node.pins:
+                continue
+            if self.allocator.refcount(node.page) != 1:
+                continue
+            if victim is None or node.stamp < victim.stamp:
+                victim = node
+        if victim is None:
+            return False
+        self._detach(victim)
+        self.allocator.free([victim.page])
+        self.evictions += 1
+        return True
+
+    def _demote_one(self) -> bool:
+        """Spill the LRU demotable resident page to the host tier (making
+        host room first by dropping host LRU leaves if needed)."""
+        if self.pager is None:
+            return False
+        cands = self._demotable_nodes()
+        if not cands:
+            return False
+        while not self.pager.host.has_room(1):
+            if not self.drop_host_lru():
+                return False
+        victim = min(cands, key=lambda n: n.stamp)
+        victim.host = self.pager.demote(victim.page)
+        victim.page = -1
+        self.demotions += 1
+        return True
+
+    def evict(self, n_pages: int) -> int:
+        """Release up to ``n_pages`` device pages held by the cache — by
+        DEMOTION to the host tier when a pager with room is attached
+        (nothing is destroyed; any chain position is eligible because
+        demoted bytes survive), falling back to the destructive LRU
+        leaf-first drop. Returns the device pages actually freed."""
         freed = 0
         while freed < n_pages:
-            victim = None
-            for node in self._nodes():
-                if node.children:
-                    continue
-                if self.allocator.refcount(node.page) != 1:
-                    continue
-                if victim is None or node.stamp < victim.stamp:
-                    victim = node
-            if victim is None:
-                break
-            del victim.parent.children[victim.tokens]
-            self.allocator.free([victim.page])
-            self.evictions += 1
-            freed += 1
+            if self._demote_one():
+                freed += 1
+                continue
+            if self._drop_one():
+                freed += 1
+                continue
+            break
         return freed
 
     def clear(self) -> int:
-        """Evict everything evictable; returns the number of pages the cache
-        STILL retains (pages some slot also references — nonzero after all
-        slots released means a refcount leak)."""
-        self.evict(len(self._nodes()))
+        """Tear the cache down destructively: drop every unpinned,
+        unreferenced page — resident AND host (leaf-first, cascading).
+        Returns the number of device pages the cache STILL retains (pages
+        some slot also references — nonzero after all slots released means
+        a refcount leak)."""
+        changed = True
+        while changed:
+            changed = False
+            for node in self._all_nodes():
+                if node.children or node.pins:
+                    continue
+                if node.resident:
+                    if self.allocator.refcount(node.page) != 1:
+                        continue
+                    self._detach(node)
+                    self.allocator.free([node.page])
+                    self.evictions += 1
+                else:
+                    self.pager.host.drop(node.host)
+                    self._detach(node)
+                    self.host_drops += 1
+                changed = True
         return self.num_pages
 
     def stats(self) -> dict:
@@ -304,8 +524,13 @@ class PrefixCache:
             "hit_tokens": self.hit_tokens,
             "token_hit_rate": self.hit_tokens / max(self.lookup_tokens, 1),
             "cached_pages": self.num_pages,
+            "host_pages": self.host_pages,
             "evictable_pages": self.evictable_pages(),
             "inserted_pages": self.inserted_pages,
             "cow_copies": self.cow_copies,
             "evictions": self.evictions,
+            "demotions": self.demotions,
+            "promotions": self.promotions,
+            "host_drops": self.host_drops,
+            "restored_pages": self.restored_pages,
         }

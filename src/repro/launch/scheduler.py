@@ -1,0 +1,103 @@
+"""Priority + SLO-aware admission scheduling and preemption policy.
+
+The FIFO ``_admit`` loop of :class:`repro.launch.serve.BatchedServer` has a
+head-of-line problem: one request whose page demand cannot be met right now
+blocks every request behind it, even ones that would fit immediately. This
+module is the POLICY side of the replacement — pure decision functions over
+request metadata, no server state mutated — and the server is the MECHANISM
+(it executes admissions, demotions and preemptions through the tiered page
+store).
+
+Ordering is (priority, deadline, arrival): higher ``Request.priority``
+first, then earliest ``deadline_step`` (EDF inside a priority class; a
+request without a deadline sorts after every deadlined one), then arrival
+order. On top of the ordering:
+
+* **bounded out-of-order admission** — when the queue head must defer for
+  pages, up to ``admit_window`` requests past it may still be examined and
+  admitted if they fit, so the head blocks the *pages* it is waiting for,
+  not the whole queue;
+* **preemption** — a queued request strictly more urgent than a running one
+  may evict it: the victim's written pages demote to the host tier, the
+  victim re-queues (its position in the order is unchanged — it is less
+  urgent by construction, so it cannot immediately preempt back), and on
+  re-admission its pages promote back and decoding resumes bitwise
+  identically (no re-prefill). Victims are chosen least-urgent-first and
+  only when the freed pages actually make the preemptor admissible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+_NO_DEADLINE = float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedPolicy:
+    """Knobs for the SLO scheduler.
+
+    ``admit_window``: how many requests past a deferred head admission may
+    examine per cycle (0 = strict FIFO order, just priority-sorted).
+    ``preempt``: allow evicting running requests for strictly more urgent
+    queued ones (needs the host-memory tier to park victim pages).
+    ``max_preempt_per_admit``: cap on victims per admission cycle — bounds
+    demotion burst latency under adversarial priority traffic.
+    """
+
+    admit_window: int = 4
+    preempt: bool = True
+    max_preempt_per_admit: int = 2
+
+
+def request_key(req) -> Tuple[int, float, int, int]:
+    """Total urgency order: smaller sorts first (more urgent)."""
+    deadline = (_NO_DEADLINE if req.deadline_step is None
+                else float(req.deadline_step))
+    return (-req.priority, deadline, req.arrive_step, req.rid)
+
+
+class SLOScheduler:
+    """Stateless-ish policy object (holds only the knobs + counters)."""
+
+    def __init__(self, policy: Optional[SchedPolicy] = None):
+        self.policy = policy or SchedPolicy()
+        self.ooo_admissions = 0   # admissions past a deferred head
+
+    def sort_queue(self, queue: List) -> None:
+        """Stable-sort the queue most-urgent-first (priority, EDF,
+        arrival)."""
+        queue.sort(key=request_key)
+
+    def choose_victims(self, req, running: List[Tuple[int, object, int]],
+                       shortfall: int, gain: Callable[[int], int],
+                       limit: Optional[int] = None) -> List[int]:
+        """Pick slots to preempt so ``req`` becomes admissible.
+
+        ``running`` is ``[(slot, request, _)]`` for live slots eligible for
+        preemption (the server pre-filters e.g. host-tier room);
+        ``shortfall`` is the page deficit after normal reclaim;
+        ``gain(slot)`` the device pages a preemption of that slot would
+        actually recover (refcount-1 pages + released reservation);
+        ``limit`` the admission cycle's REMAINING victim budget (capped by
+        ``max_preempt_per_admit`` either way). Only STRICTLY less urgent
+        victims are eligible, least urgent first, and the empty list is
+        returned unless the accumulated gain covers the shortfall — half a
+        preemption buys nothing but churn.
+        """
+        if not self.policy.preempt:
+            return []
+        cap = self.policy.max_preempt_per_admit
+        if limit is not None:
+            cap = min(cap, limit)
+        rk = request_key(req)
+        eligible = [(slot, r) for slot, r, _ in running
+                    if request_key(r) > rk]
+        eligible.sort(key=lambda sr: request_key(sr[1]), reverse=True)
+        victims, got = [], 0
+        for slot, _ in eligible[:cap]:
+            victims.append(slot)
+            got += gain(slot)
+            if got >= shortfall:
+                return victims
+        return []

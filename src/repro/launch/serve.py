@@ -51,8 +51,28 @@ The serving **hot path** is built around three ideas:
   to the serving pool. Each layer's pages live in the container its policy
   data format needs (int4 / int8 / float), so a ``core.search`` policy
   drives the at-rest KV footprint directly; uniform --kv-bits stays the
-  degenerate profile. --kv-scale page additionally calibrates per-page
-  max-abs dequant scales at write time instead of the static Q(I,F) grid.
+  degenerate profile. Contiguous same-container layer runs still ride
+  ``lax.scan`` (--kv-profile-scan unroll forces the unrolled reference).
+  --kv-scale page additionally calibrates per-page max-abs dequant scales
+  at write time instead of the static Q(I,F) grid.
+* **Tiered page store** (--kv-offload host): a host-memory page tier
+  (``core.page_store``) behind the bounded device pool. Pool pressure
+  *demotes* unreferenced cached prefixes to host numpy (bytes stay in their
+  packed int4/int8/fp containers, so offload traffic scales with the
+  precision policy) instead of destroying them; admission *promotes*
+  matched host pages back before aliasing. --host-pages bounds the tier.
+  ``snapshot_prefix_cache``/``restore_prefix_cache`` (--prefix-snapshot)
+  persist the cached chains across server restarts — the snapshot is
+  profile-key-namespaced like the trie, so an int8 snapshot never backs an
+  int4 server.
+* **SLO scheduling + preemption** (--sched slo): admission orders the queue
+  by (priority, deadline, arrival) and may admit up to --admit-window
+  requests past a deferred head (killing the FIFO head-of-line block). A
+  queued request strictly more urgent than a running one may PREEMPT it:
+  the victim's written pages demote to the host tier, the request
+  re-queues, and on re-admission its pages promote back and decoding
+  resumes bitwise-identically — no re-prefill (gather mode; see
+  tests/test_scheduler.py). Preemption requires --kv-offload host.
 
 CPU demos:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
@@ -78,15 +98,34 @@ import numpy as np
 
 from ..configs.registry import get_config, get_smoke_config
 from ..core.fixedpoint import FixedPointFormat
+from ..core.page_store import (HostPageStore, TieredPager, cache_geometry,
+                               extract_page, inject_page,
+                               load_prefix_snapshot, save_prefix_snapshot,
+                               snapshot_path)
 from ..core.paged_kv import (SCRATCH_PAGE, OutOfPagesError, PageAllocator,
-                             PagedCacheSpec, copy_pool_pages,
-                             max_pages_per_seq)
+                             PagedCacheSpec, caches_kv_bytes, copy_pool_pages,
+                             map_kv_pools, max_pages_per_seq)
 from ..core.policy import LayerPolicy, PrecisionPolicy
 from ..core.prefix_cache import PrefixCache
 from ..models.transformer import init_cache, init_model
 from ..quant.apply import (build_model_quant, kv_profile_key,
                            transformer_layer_names)
+from .scheduler import SchedPolicy, SLOScheduler
 from .steps import make_chunk_prefill_step, make_decode_step
+
+
+@dataclasses.dataclass
+class PreemptedState:
+    """Slot state captured at a span boundary when a request is preempted:
+    everything resume needs to continue decoding bitwise-identically —
+    the cache position, the next token to consume, the generated count,
+    and the host-tier handles of the slot's demoted pages (in page-table
+    order)."""
+
+    pos: int
+    token: int
+    gen: int
+    handles: List[int]
 
 
 @dataclasses.dataclass
@@ -96,6 +135,14 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # --- scheduling metadata (core.launch.scheduler orders on these) ---
+    priority: int = 0           # higher = more urgent
+    deadline_step: Optional[int] = None  # SLO: finish by this decode step
+    arrive_step: int = 0        # becomes visible to admission at this step
+    # --- outcome / preemption state ---
+    error: Optional[Exception] = None    # set when admission rejects
+    preemptions: int = 0
+    _paused: Optional[PreemptedState] = None
 
 
 def _pow2_bucket(n: int, cap: int) -> int:
@@ -135,7 +182,12 @@ class BatchedServer:
                  attn_impl: str = "gather", prefill: str = "auto",
                  prefill_bucket: int = 32,
                  kv_profile: Optional[PrecisionPolicy] = None,
-                 kv_scale: str = "static", prefix_cache: str = "off"):
+                 kv_scale: str = "static", prefix_cache: str = "off",
+                 kv_profile_scan: str = "group",
+                 kv_offload: str = "none",
+                 host_pages: Optional[int] = None,
+                 sched: str = "fifo", admit_window: int = 4,
+                 preempt: Optional[bool] = None):
         self.cfg = cfg
         self.params = params
         self.B = batch_size
@@ -192,6 +244,32 @@ class BatchedServer:
                              "an SSM state folds the whole prefix, so "
                              "cached KV pages cannot stand in for skipped "
                              "prefill forwards")
+        if kv_offload not in ("none", "host"):
+            raise ValueError(f"kv_offload must be 'none' or 'host', "
+                             f"got {kv_offload!r}")
+        if kv_offload == "host" and not self.paged:
+            raise ValueError("--kv-offload host demotes pool pages; it "
+                             "needs --page-size > 0")
+        if sched not in ("fifo", "slo"):
+            raise ValueError(f"sched must be 'fifo' or 'slo', got {sched!r}")
+        if sched == "slo" and not self.paged:
+            raise ValueError("--sched slo schedules page-pool admission; "
+                             "it needs --page-size > 0")
+        if preempt is None:
+            preempt = sched == "slo" and kv_offload == "host"
+        if preempt and kv_offload != "host":
+            raise ValueError("preemption parks victim pages in the host "
+                             "tier; it needs --kv-offload host")
+        if preempt and sched != "slo":
+            raise ValueError("preemption is driven by the SLO scheduler; "
+                             "it needs --sched slo")
+        self.sched = sched
+        self.scheduler = (SLOScheduler(SchedPolicy(admit_window=admit_window,
+                                                   preempt=preempt))
+                          if sched == "slo" else None)
+        if kv_profile_scan not in ("group", "unroll"):
+            raise ValueError(f"kv_profile_scan must be 'group' or 'unroll', "
+                             f"got {kv_profile_scan!r}")
         self.quant = None
         if kv_profile is not None:
             if kv_bits:
@@ -210,7 +288,9 @@ class BatchedServer:
             self.quant = build_model_quant(kv_profile, cfg, quantize_kv=True,
                                            quantize_activations=False,
                                            per_layer_kv=True,
-                                           kv_scale_mode=kv_scale)
+                                           kv_scale_mode=kv_scale,
+                                           kv_unroll=(kv_profile_scan
+                                                      == "unroll"))
         elif kv_bits:
             container = "int4" if (self.paged and kv_bits <= 4) else "int8"
             names = transformer_layer_names(cfg)
@@ -232,6 +312,8 @@ class BatchedServer:
 
         paged_spec = None
         self.prefix_cache: Optional[PrefixCache] = None
+        self.host_store: Optional[HostPageStore] = None
+        self.pager: Optional[TieredPager] = None
         if self.paged:
             self.np_max = max_pages_per_seq(max_len, page_size)
             if num_pages is None:
@@ -246,10 +328,20 @@ class BatchedServer:
             self.slot_reserved = [0] * batch_size  # worst-case page demand
             self._pt_dev = _upload(self.page_table)
             self._pt_dirty = False
+            if kv_offload == "host":
+                self.host_store = HostPageStore(max_pages=host_pages)
+                self.pager = TieredPager(
+                    self.allocator, self.host_store,
+                    lambda: self.caches,
+                    lambda c: setattr(self, "caches", c))
+                self.allocator.host_inventory = \
+                    lambda: self.host_store.num_pages
             if prefix_cache == "on":
                 self.prefix_cache = PrefixCache(self.allocator, page_size,
-                                                self.profile_key)
-                # pool pressure evicts cold cached prefixes before failing
+                                                self.profile_key,
+                                                pager=self.pager)
+                # pool pressure demotes (host tier) or evicts cold cached
+                # prefixes before failing the allocation
                 self.allocator.reclaim = self.prefix_cache.evict
         self.caches = init_cache(cfg, batch_size, max_len, self.quant,
                                  paged=paged_spec)
@@ -264,6 +356,9 @@ class BatchedServer:
         self.decode_steps = 0
         self.prefix_hit_tokens = 0        # prompt tokens served from cache
         self.prefill_forwards_saved = 0   # forwards prefix hits avoided
+        self.preempt_count = 0            # victim slots demoted + re-queued
+        self.resume_count = 0             # preempted requests resumed
+        self.rejected: List[Request] = []  # never-fit requests (error set)
 
     # -- page bookkeeping ---------------------------------------------------
     def _ensure_page(self, slot: int, position: int):
@@ -394,22 +489,10 @@ class BatchedServer:
         """Copy page ``src`` -> ``dst`` in EVERY attention layer's pool
         (copy-on-write: one host-side allocator, one page-id space, all
         layers alias the same table)."""
-        new_caches = []
-        for seg in self.caches:
-            seg_new = []
-            for entry in seg:
-                if isinstance(entry, list):      # per-layer profile pools
-                    seg_new.append([
-                        copy_pool_pages(d, src, dst)
-                        if isinstance(d, dict) and "k_pages" in d else d
-                        for d in entry])
-                elif isinstance(entry, dict) and "k_pages" in entry:
-                    seg_new.append(copy_pool_pages(entry, src, dst,
-                                                   page_axis=1))
-                else:
-                    seg_new.append(entry)
-            new_caches.append(tuple(seg_new))
-        self.caches = new_caches
+        self.caches = map_kv_pools(
+            self.caches,
+            lambda pool, axis: copy_pool_pages(pool, src, dst,
+                                               page_axis=axis))
 
     def _cache_insert(self, slot: int, req: Request):
         """Index the request's freshly prefilled prompt pages (tokens
@@ -422,87 +505,263 @@ class BatchedServer:
                                  self.slot_pages[slot][:n_pages])
 
     # -- admission ----------------------------------------------------------
-    def _admit(self, queue: List[Request]):
-        """Fill free slots from the queue. Paged admission preflights the
-        pool against the request's WORST-CASE page demand minus what live
-        requests still have reserved — so ``_ensure_page`` can never hit an
-        empty free list mid-run. A request that can never fit raises
-        ``OutOfPagesError``; one that must wait for live requests is
-        deferred (the queue stalls until a completion frees pages).
+    def _admission_plan(self, req: Request):
+        """Preflight one request against the pool. Returns
+        ``(verdict, info)`` with verdict in {"admit", "defer", "reject"}.
 
-        With the prefix cache on, admission first looks up the longest
-        cached prefix of the prompt: fully-matched pages are ALIASED into
-        the slot's page table (incref — reservation accounting then charges
-        only the non-shared suffix), a divergence inside a partially shared
-        page copies that page (CoW), and unreferenced cached pages count as
-        reclaimable headroom (LRU eviction) in the preflight."""
-        for i in range(self.B):
-            if self.slots[i] is not None or not queue:
-                continue
-            req = queue[0]
-            start = 0
-            if self.paged:
-                total = self._pages_needed(req)
-                hit, shared, cow_pin = None, [], None
-                if self.prefix_cache is not None:
-                    # record=False: a deferred request retries this lookup
-                    # every span; hit-rate stats count once, on admission
-                    hit = self.prefix_cache.lookup(req.prompt[:-1],
-                                                   record=False)
-                    shared = list(hit.full_pages)
-                    # pin the chain so preflight eviction can't reclaim it
-                    for p in shared:
-                        self.allocator.incref(p)
-                    if hit.cow_page is not None and hit.cow_valid > 0:
-                        cow_pin = hit.cow_page
-                        self.allocator.incref(cow_pin)
-                need_new = total - len(shared)   # suffix-only page demand
-                avail = (self.allocator.num_free
-                         - self._outstanding_reservation())
-                evictable = 0
-                if need_new > avail and self.prefix_cache is not None:
-                    # only walk the trie when the free list alone won't do
-                    evictable = self.prefix_cache.evictable_pages()
-                    avail += evictable
-                if need_new > avail:
-                    if cow_pin is not None:
-                        self.allocator.free([cow_pin])
-                    if shared:
-                        self.allocator.free(shared)
-                    if (need_new > self.allocator.num_usable
-                            or not any(s is not None for s in self.slots)):
-                        written = len(set().union(*map(set,
-                                                       self.slot_pages)))
-                        raise OutOfPagesError(
-                            needed=need_new, free=self.allocator.num_free,
-                            total=self.allocator.num_usable, rid=req.rid,
-                            reserved=self._outstanding_reservation(),
-                            written=written, evictable=evictable)
-                    break  # defer until live requests free pages
-                self.slot_reserved[i] = total
-                for j, p in enumerate(shared):
-                    self.page_table[i, j] = p    # alias; already increfed
-                    self.slot_pages[i].append(p)
-                    self._pt_dirty = True
-                start = len(shared) * self.page_size
-                if cow_pin is not None:
-                    # divergence inside a partially shared page: private copy
-                    dst = self.allocator.alloc()   # reclaim hook may evict
-                    self.page_table[i, len(shared)] = dst
-                    self.slot_pages[i].append(dst)
-                    self._pt_dirty = True
-                    self._copy_pool_pages(int(cow_pin), int(dst))
-                    self.prefix_cache.cow_copies += 1
-                    start += hit.cow_valid
-                    self.allocator.free([cow_pin])   # unpin the source
-                if self.prefix_cache is not None:
-                    self.prefix_cache.note_lookup(len(req.prompt) - 1, start)
-                self.prefix_hit_tokens += start
-            queue.pop(0)
-            self._prefill_slot(i, req, start)
-            if self.prefix_cache is not None:
-                self._cache_insert(i, req)
+        Paged admission preflights the request's WORST-CASE page demand
+        (prompt + max_new, minus fully-matched RESIDENT prefix pages, plus
+        one promotion page per matched HOST page) against the free list
+        less outstanding reservations, counting reclaimable cached pages —
+        so ``_ensure_page`` can never hit an empty free list mid-run.
+
+        On "admit" the hit's chain is PINNED in the trie (``info["hit"]``);
+        the caller must either complete the admission (``_do_admit``
+        unpins) or unpin itself. "defer" means the request must wait for
+        live requests' pages; "reject" means it can NEVER fit (its error
+        carries the full device/host/evictable inventory)."""
+        if not self.paged:
+            return "admit", {"hit": None, "total": 0}
+        total = self._pages_needed(req)
+        hit = None
+        if self.prefix_cache is not None and req._paused is None:
+            # record=False: a deferred request retries this lookup every
+            # span; hit-rate stats count once, on admission
+            hit = self.prefix_cache.lookup(req.prompt[:-1], record=False)
+            # pin the chain so preflight/admission eviction can't touch it
+            self.prefix_cache.pin(hit)
+            need_new = (total - len(hit.nodes)
+                        + self.prefix_cache.host_nodes_in(hit))
+        else:
+            need_new = total
+        avail = self.allocator.num_free - self._outstanding_reservation()
+        evictable = 0
+        if need_new > avail and self.prefix_cache is not None:
+            # only walk the trie when the free list alone won't do
+            evictable = self.prefix_cache.evictable_pages()
+            avail += evictable
+        if need_new <= avail:
+            return "admit", {"hit": hit, "total": total,
+                             "need_new": need_new}
+        if hit is not None:
+            self.prefix_cache.unpin(hit)
+        if (need_new > self.allocator.num_usable
+                or not any(s is not None for s in self.slots)):
+            written = len(set().union(*map(set, self.slot_pages)))
+            err = OutOfPagesError(
+                needed=need_new, free=self.allocator.num_free,
+                total=self.allocator.num_usable, rid=req.rid,
+                reserved=self._outstanding_reservation(),
+                written=written, evictable=evictable,
+                host_pages=self.allocator.host_pages())
+            return "reject", {"err": err}
+        return "defer", {"total": total, "need_new": need_new,
+                         "shortfall": need_new - avail}
+
+    def _do_admit(self, i: int, req: Request, info: dict):
+        """Execute a planned admission into free slot ``i``: alias/promote
+        the pinned prefix chain, CoW-copy a mid-page divergence, prefill
+        the non-shared suffix (or promote+resume a preempted request), and
+        index the fresh prompt pages into the prefix cache."""
+        if not self.paged:
+            self._prefill_slot(i, req, 0)
             self.slots[i] = req
+            return
+        if req._paused is not None:
+            self._resume_slot(i, req, info["total"])
+            return
+        hit = info["hit"]
+        self.slot_reserved[i] = info["total"]
+        start = 0
+        if hit is not None:
+            for j, node in enumerate(hit.nodes):
+                # host-state nodes promote back to device pages first
+                page = self.prefix_cache.ensure_resident(node)
+                self.allocator.incref(page)   # the slot's alias reference
+                self.page_table[i, j] = page
+                self.slot_pages[i].append(page)
+                self._pt_dirty = True
+            start = len(hit.nodes) * self.page_size
+            if hit.cow_node is not None and hit.cow_valid > 0:
+                # divergence inside a partially shared page: private copy
+                src = self.prefix_cache.ensure_resident(hit.cow_node)
+                dst = self.allocator.alloc()   # reclaim hook may evict
+                self.page_table[i, len(hit.nodes)] = dst
+                self.slot_pages[i].append(dst)
+                self._pt_dirty = True
+                self._copy_pool_pages(int(src), int(dst))
+                self.prefix_cache.cow_copies += 1
+                start += hit.cow_valid
+            self.prefix_cache.unpin(hit)
+            self.prefix_cache.note_lookup(len(req.prompt) - 1, start)
+            self.prefix_hit_tokens += start
+        self._prefill_slot(i, req, start)
+        if self.prefix_cache is not None:
+            self._cache_insert(i, req)
+        self.slots[i] = req
+
+    def _reject(self, queue: List[Request], idx: int, err) -> None:
+        """Drop a never-fit request from the queue WITHOUT killing the run
+        (the legacy behavior stalled everything behind a too-large head):
+        the error is recorded on the request; FIFO mode re-raises it after
+        the serviceable traffic drained."""
+        req = queue.pop(idx)
+        req.error = err
+        req.done = True
+        self.rejected.append(req)
+
+    def _admit_fifo(self, queue: List[Request]):
+        """Legacy FIFO admission: strict queue order, but a permanently
+        -too-large head is SKIPPED (recorded + surfaced at end of run)
+        instead of stalling the queue forever behind it."""
+        for i in range(self.B):
+            if self.slots[i] is not None:
+                continue
+            while queue:
+                verdict, info = self._admission_plan(queue[0])
+                if verdict == "reject":
+                    self._reject(queue, 0, info["err"])
+                    continue              # next head, same free slot
+                if verdict == "defer":
+                    return                # wait for live requests' pages
+                self._do_admit(i, queue.pop(0), info)
+                break
+
+    def _admit_slo(self, queue: List[Request]):
+        """Priority/EDF admission with bounded out-of-order admission past
+        a deferred head, and preemption of strictly less urgent running
+        requests when a candidate's page shortfall can be met by demoting
+        a victim to the host tier."""
+        pol = self.scheduler.policy
+        self.scheduler.sort_queue(queue)
+        preempts_left = pol.max_preempt_per_admit
+        deferred = False
+        examined = 0          # requests examined past the deferred head
+        idx = 0
+        while idx < len(queue):
+            if deferred:
+                examined += 1
+                if examined > pol.admit_window:
+                    break
+            req = queue[idx]
+            free = [i for i in range(self.B) if self.slots[i] is None]
+            if not free:
+                # batch full: the most urgent queued request may claim a
+                # slot by preempting a strictly less urgent running one
+                n = self._preempt_for(req, queue, 0, preempts_left)
+                if n:
+                    preempts_left -= n
+                    continue
+                break
+            verdict, info = self._admission_plan(req)
+            if verdict == "reject":
+                self._reject(queue, idx, info["err"])
+                continue
+            if verdict == "admit":
+                queue.pop(idx)
+                self._do_admit(free[0], req, info)
+                if deferred:
+                    self.scheduler.ooo_admissions += 1
+                continue
+            # defer: try preemption before stepping past this request
+            n = self._preempt_for(req, queue, info["shortfall"],
+                                  preempts_left)
+            if n:
+                preempts_left -= n
+                continue                  # re-plan the same request
+            deferred = True
+            idx += 1
+
+    def _admit(self, queue: List[Request]):
+        if not queue:
+            return
+        if self.scheduler is not None:
+            self._admit_slo(queue)
+        else:
+            self._admit_fifo(queue)
+
+    # -- preemption ---------------------------------------------------------
+    def _preempt_gain(self, i: int) -> int:
+        """Device pages preempting slot ``i`` recovers: its exclusively
+        held pages (shared/aliased pages only drop a refcount) plus its
+        not-yet-allocated reservation."""
+        freed = sum(1 for p in self.slot_pages[i]
+                    if self.allocator.refcount(p) == 1)
+        return freed + max(0, self.slot_reserved[i] - len(self.slot_pages[i]))
+
+    def _preempt_for(self, req: Request, queue: List[Request],
+                     shortfall: int, budget: int) -> int:
+        """Preempt strictly-less-urgent running slots so ``req`` becomes
+        admissible (``shortfall`` pages short; 0 = needs only a slot),
+        spending at most ``budget`` victims (the admission cycle's
+        remaining max_preempt_per_admit allowance). Victims demote to the
+        host tier and re-queue. Returns the number of slots preempted."""
+        if self.scheduler is None or self.host_store is None or budget <= 0:
+            return 0
+        running = [(i, self.slots[i], 0) for i in range(self.B)
+                   if self.slots[i] is not None]
+        victims = self.scheduler.choose_victims(
+            req, running, max(0, shortfall), self._preempt_gain,
+            limit=budget)
+        preempted = 0
+        for i in victims:
+            need_room = len(self.slot_pages[i])
+            while not self.host_store.has_room(need_room):
+                # make host room by dropping cold demoted prefixes
+                if (self.prefix_cache is None
+                        or not self.prefix_cache.drop_host_lru()):
+                    return preempted      # host tier genuinely full
+            queue.append(self._preempt_slot(i))
+            preempted += 1
+        return preempted
+
+    def _preempt_slot(self, i: int) -> Request:
+        """Evict the request in slot ``i`` mid-decode (at a span boundary,
+        where host-side slot state is consistent): demote every written
+        page to the host tier in page-table order, release the device
+        pages + reservation, and capture the resume state. The request
+        re-queues; resume promotes the pages back and continues decoding
+        bitwise-identically (no re-prefill)."""
+        req = self.slots[i]
+        handles = [self.host_store.put(extract_page(self.caches, p))
+                   for p in self.slot_pages[i]]
+        self.allocator.free(self.slot_pages[i])
+        self.slot_pages[i] = []
+        self.page_table[i, :] = SCRATCH_PAGE
+        self._pt_dirty = True
+        self.slot_reserved[i] = 0
+        req._paused = PreemptedState(pos=int(self.pos[i]),
+                                     token=int(self.tokens[i]),
+                                     gen=int(self.slot_gen[i]),
+                                     handles=handles)
+        req.preemptions += 1
+        self.preempt_count += 1
+        self.pos[i] = 0
+        self.slot_gen[i] = 0
+        self.tokens[i] = 0
+        self.slots[i] = None
+        return req
+
+    def _resume_slot(self, i: int, req: Request, total: int):
+        """Re-admit a preempted request: promote its demoted pages back
+        into freshly allocated device pages (byte-identical — see
+        core.page_store), restore the slot clock/token state, and continue
+        decoding where it left off. No prefill runs."""
+        st = req._paused
+        self.slot_reserved[i] = total
+        for j, h in enumerate(st.handles):
+            page = self.allocator.alloc()  # reclaim hook may evict/demote
+            self.caches = inject_page(self.caches,
+                                      self.host_store.pop(h), page)
+            self.page_table[i, j] = page
+            self.slot_pages[i].append(page)
+            self._pt_dirty = True
+        self.pos[i] = st.pos
+        self.tokens[i] = st.token
+        self.slot_gen[i] = st.gen
+        req._paused = None
+        self.resume_count += 1
+        self.slots[i] = req
 
     # -- decode -------------------------------------------------------------
     def _run_span(self) -> int:
@@ -519,17 +778,38 @@ class BatchedServer:
         return max(1, min(spans))
 
     def run(self, requests: List[Request], *, verbose: bool = False):
-        queue = list(requests)
+        # arrivals are measured on a per-run decode-step clock
+        # (deterministic, unlike wall time): a request joins the queue once
+        # `clock >= arrive_step`; requests with the default arrive_step=0
+        # reproduce the all-at-once legacy behavior exactly
+        pending = sorted(requests, key=lambda r: r.arrive_step)
+        queue: List[Request] = []
+        clock = 0
         t0 = time.time()
         gen_tokens = 0
         # instance counters are cumulative across run() calls (benchmarks
         # zero them between warmup and measurement); the verbose print
         # reports THIS run's deltas
         steps0, pf0 = self.decode_steps, self.prefill_forwards
-        while queue or any(s is not None for s in self.slots):
+        rejected0 = len(self.rejected)
+        while (pending or queue
+               or any(s is not None for s in self.slots)):
+            while pending and pending[0].arrive_step <= clock:
+                queue.append(pending.pop(0))
             self._admit(queue)
             live = [i for i in range(self.B) if self.slots[i] is not None]
+            if not live:
+                # nothing runnable: everything admissible was admitted (or
+                # rejected), so only a future arrival can change the state
+                if pending:
+                    clock = max(clock, pending[0].arrive_step)
+                    continue
+                break
             span = self._run_span()
+            if pending:
+                # cap the span at the next arrival so urgent latecomers
+                # get an admission (and preemption) opportunity promptly
+                span = max(1, min(span, pending[0].arrive_step - clock))
             # device-resident state for the span: tokens advance
             # device-to-device; generated ids are fetched asynchronously and
             # materialized only at the span boundary
@@ -540,7 +820,7 @@ class BatchedServer:
             all_live = bool(live_mask.all())
             live_mask_dev = jnp.asarray(live_mask)
             live_inc = jnp.asarray(live_mask.astype(np.int32))
-            pending = []                       # (nxt_dev, owner snapshot)
+            fetches = []                       # (nxt_dev, owner snapshot)
             for _ in range(span):
                 if self.paged:
                     for i in live:
@@ -549,7 +829,7 @@ class BatchedServer:
                 nxt, _, self.caches = self.decode(
                     self.params, tokens_dev, pos_dev, self.caches, pt)
                 nxt.copy_to_host_async()
-                pending.append((nxt, tuple(self.slots)))
+                fetches.append((nxt, tuple(self.slots)))
                 # idle slots hold their token (keeps runs reproducible
                 # across layouts even when idle rows share MoE capacity)
                 tokens_dev = (nxt if all_live
@@ -562,7 +842,7 @@ class BatchedServer:
                 gen_tokens += len(live)
             # span boundary: materialize generated tokens, retire finishers
             last_np = None
-            for nxt_dev, owners in pending:
+            for nxt_dev, owners in fetches:
                 arr = np.asarray(nxt_dev)
                 last_np = arr
                 for i, req in enumerate(owners):
@@ -576,6 +856,7 @@ class BatchedServer:
                     req.done = True
                     self.slots[i] = None
                     self._release_slot(i)
+            clock += span
         dt = time.time() - t0
         if verbose:
             layout = (f"paged ps={self.page_size} "
@@ -594,18 +875,101 @@ class BatchedServer:
                       f"hits, {s['hit_tokens']} tokens reused, "
                       f"{self.prefill_forwards_saved} prefill forwards "
                       f"saved, {s['cow_copies']} CoW copies, "
-                      f"{s['cached_pages']} pages cached "
-                      f"({s['evictions']} evicted)")
+                      f"{s['cached_pages']} pages cached + "
+                      f"{s['host_pages']} host "
+                      f"({s['evictions']} evicted, {s['demotions']} demoted, "
+                      f"{s['promotions']} promoted)")
+            if self.host_store is not None:
+                print(f"[serve] host tier: {self.host_store.num_pages} "
+                      f"pages / {self.host_store.nbytes / 2**20:.2f} MiB "
+                      f"(peak {self.host_store.peak_pages}), "
+                      f"{self.preempt_count} preemptions, "
+                      f"{self.resume_count} resumes")
+        new_rejects = self.rejected[rejected0:]
+        if new_rejects and self.scheduler is None:
+            # legacy strict semantics: surface the first impossible request
+            # — but only AFTER the serviceable traffic drained (the old
+            # code raised immediately, stalling everything queued behind a
+            # too-large head). SLO mode records errors on the requests.
+            raise new_rejects[0].error
         return requests
 
     def release_prefix_cache(self) -> int:
         """Drop every unreferenced cached prefix page back to the free
-        list. Returns the page count the cache STILL holds — with all
-        requests completed that must be 0, anything else is a refcount
-        leak (the bench-smoke CI gate checks exactly this)."""
+        list (and every demoted page out of the host tier). Returns the
+        DEVICE page count the cache STILL holds — with all requests
+        completed that must be 0, anything else is a refcount leak (the
+        bench-smoke CI gate checks exactly this)."""
         if self.prefix_cache is None:
             return 0
         return self.prefix_cache.clear()
+
+    # -- tiered-store introspection / persistence ---------------------------
+    def kv_inventory(self) -> dict:
+        """Device/host split of the KV store (bytes per container, page
+        counts) — the two-tier generalization of ``pool_bytes``."""
+        if not self.paged:
+            return {"device_bytes": 0, "device_by_container": {},
+                    "device_pages_free": 0, "device_pages_usable": 0,
+                    "host_bytes": 0, "host_pages": 0,
+                    "host_by_container": {}}
+        dev = caches_kv_bytes(self.caches)
+        hs = self.host_store
+        return {
+            "device_bytes": sum(dev.values()),
+            "device_by_container": dev,
+            "device_pages_free": self.allocator.num_free,
+            "device_pages_usable": self.allocator.num_usable,
+            "host_bytes": hs.nbytes if hs else 0,
+            "host_pages": hs.num_pages if hs else 0,
+            "host_by_container": hs.bytes_by_container() if hs else {},
+        }
+
+    def snapshot_prefix_cache(self, path: str) -> int:
+        """Serialize every cached prefix page (resident pages read straight
+        off the device pools, demoted ones from the host tier) to ``path``.
+        The snapshot is profile-key-namespaced like the trie and carries a
+        pool-geometry signature; returns the number of pages written."""
+        if self.prefix_cache is None:
+            raise ValueError("snapshot needs --prefix-cache on")
+        entries = []
+        for key, tokens, node in self.prefix_cache.iter_chain_nodes():
+            blob = (self.host_store.get(node.host)
+                    if node.host is not None
+                    else extract_page(self.caches, node.page))
+            entries.append((key, tokens, blob))
+        return save_prefix_snapshot(path, entries, page_size=self.page_size,
+                                    geometry=cache_geometry(self.caches))
+
+    def restore_prefix_cache(self, path: str) -> int:
+        """Load a snapshot into the HOST tier: every chain page becomes a
+        host-state trie node (zero device pages consumed until a hit
+        promotes it). Chains whose profile key differs from this server's
+        stay in their own namespace — harmless, never matched. Returns the
+        pages restored (stops early when the host tier fills)."""
+        if self.prefix_cache is None:
+            raise ValueError("restore needs --prefix-cache on")
+        if self.host_store is None:
+            raise ValueError("restore lands pages in the host tier; it "
+                             "needs --kv-offload host")
+        meta, entries = load_prefix_snapshot(path)
+        if meta["page_size"] != self.page_size:
+            raise ValueError(f"snapshot page_size {meta['page_size']} != "
+                             f"server page_size {self.page_size}")
+        geo = cache_geometry(self.caches)
+        if meta["geometry"] != geo:
+            raise ValueError("snapshot pool geometry does not match this "
+                             "server's architecture/profile")
+        n = 0
+        for key, tokens, blob in entries:
+            if not self.host_store.has_room(1):
+                break
+            h = self.host_store.put(blob)
+            if self.prefix_cache.insert_host(tokens, h, key):
+                n += 1
+            else:
+                self.host_store.drop(h)   # duplicate / orphaned chain
+        return n
 
 
 def main(argv=None):
@@ -651,6 +1015,33 @@ def main(argv=None):
                          "requests (refcounted aliasing + copy-on-write; "
                          "LRU eviction of unreferenced prefixes under pool "
                          "pressure)")
+    ap.add_argument("--kv-profile-scan", choices=["group", "unroll"],
+                    default="group",
+                    help="per-layer profile forward: group contiguous "
+                         "same-container layer runs into lax.scan segments "
+                         "(default) or force the fully unrolled reference")
+    ap.add_argument("--kv-offload", choices=["none", "host"], default="none",
+                    help="host = add a host-memory page tier: pool pressure "
+                         "DEMOTES cached prefixes (packed containers ride "
+                         "along) instead of destroying them; enables "
+                         "preemption and snapshot persistence")
+    ap.add_argument("--host-pages", type=int, default=0,
+                    help="host-tier capacity in pages (0 = unbounded)")
+    ap.add_argument("--sched", choices=["fifo", "slo"], default="fifo",
+                    help="admission order: fifo = legacy arrival order "
+                         "(too-large heads are skipped, not stalled "
+                         "behind); slo = priority + earliest-deadline with "
+                         "bounded out-of-order admission and preemption")
+    ap.add_argument("--admit-window", type=int, default=4,
+                    help="SLO sched: max requests admitted past a deferred "
+                         "head per cycle")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="SLO sched: disable preemption of running "
+                         "requests")
+    ap.add_argument("--prefix-snapshot", default="",
+                    help="path: restore the prefix cache from it at start "
+                         "(if the file exists) and snapshot back at exit — "
+                         "cached prefixes survive server restarts")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -674,8 +1065,23 @@ def main(argv=None):
                         attn_impl=args.attn_impl, prefill=args.prefill,
                         prefill_bucket=args.prefill_bucket,
                         kv_profile=kv_profile, kv_scale=args.kv_scale,
-                        prefix_cache=args.prefix_cache)
+                        prefix_cache=args.prefix_cache,
+                        kv_profile_scan=args.kv_profile_scan,
+                        kv_offload=args.kv_offload,
+                        host_pages=args.host_pages or None,
+                        sched=args.sched, admit_window=args.admit_window,
+                        preempt=False if args.no_preempt else None)
+    import os
+    if args.prefix_snapshot and os.path.exists(
+            snapshot_path(args.prefix_snapshot)):
+        n = srv.restore_prefix_cache(args.prefix_snapshot)
+        print(f"[serve] restored {n} prefix pages from "
+              f"{args.prefix_snapshot} (host tier)")
     srv.run(reqs, verbose=True)
+    if args.prefix_snapshot:
+        n = srv.snapshot_prefix_cache(args.prefix_snapshot)
+        print(f"[serve] snapshotted {n} prefix pages to "
+              f"{args.prefix_snapshot}")
     for r in reqs[:4]:
         print(f"  req {r.rid}: {len(r.out)} tokens -> {r.out[:8]}...")
     return reqs

@@ -51,10 +51,14 @@ class ModelQuant:
     ``kv_container`` is the uniform storage container; ``kv_containers``
     (optional, static tuple of one container name per layer, "fp" marking an
     unquantized layer) switches the paged serving cache to **per-layer KV
-    precision profiles**: each layer's pool is built in its own container
-    and the segment scan unrolls so the static container can differ per
-    layer. ``kv_scale_mode`` ("static" | "page") picks the paged dequant
-    scale calibration (see ``core.paged_kv.paged_update``).
+    precision profiles**: contiguous same-container layer runs are grouped
+    into scanned sub-segments (``_segment_scan_grouped``) so a realistic
+    profile still compiles O(distinct runs) block bodies; only length-1
+    runs — pathological alternating profiles — unroll. ``kv_unroll=True``
+    forces the fully unrolled reference path (``_segment_unrolled``,
+    per-period pools) for debugging and identity tests. ``kv_scale_mode``
+    ("static" | "page") picks the paged dequant scale calibration (see
+    ``core.paged_kv.paged_update``).
     """
 
     w_int: Optional[jnp.ndarray] = None
@@ -66,20 +70,22 @@ class ModelQuant:
     kv_container: str = "int8"
     kv_containers: Optional[Tuple[str, ...]] = None  # per-layer (static)
     kv_scale_mode: str = "static"
+    kv_unroll: bool = False       # force the fully unrolled profile path
 
     def layer_slice(self, sl):
         """Slice all stacked arrays with ``sl`` (layer indices).
 
         Only valid on uniform-container quants: per-layer containers are
-        static python strings and cannot ride a scan — the unrolled segment
-        path slices with :meth:`layer_static` instead."""
+        static python strings and cannot ride a scan — the profile paths
+        slice with :meth:`layer_static` / ``_run_quant`` instead."""
         assert self.kv_containers is None, \
             "per-layer KV containers require the unrolled (layer_static) path"
         f = lambda a: None if a is None else a[sl]
         return ModelQuant(f(self.w_int), f(self.w_frac), f(self.a_int),
                           f(self.a_frac), f(self.kv_int), f(self.kv_frac),
                           self.kv_container,
-                          kv_scale_mode=self.kv_scale_mode)
+                          kv_scale_mode=self.kv_scale_mode,
+                          kv_unroll=self.kv_unroll)
 
     def layer_static(self, li: int) -> "ModelQuant":
         """Static single-layer view for the unrolled segment path: scalars
@@ -94,18 +100,20 @@ class ModelQuant:
             cont = self.kv_container
         return ModelQuant(f(self.w_int), f(self.w_frac), f(self.a_int),
                           f(self.a_frac), kv_i, kv_f, cont,
-                          kv_scale_mode=self.kv_scale_mode)
+                          kv_scale_mode=self.kv_scale_mode,
+                          kv_unroll=self.kv_unroll)
 
 
 def _mq_flatten(mq):
     return ((mq.w_int, mq.w_frac, mq.a_int, mq.a_frac, mq.kv_int,
              mq.kv_frac),
-            (mq.kv_container, mq.kv_containers, mq.kv_scale_mode))
+            (mq.kv_container, mq.kv_containers, mq.kv_scale_mode,
+             mq.kv_unroll))
 
 
 def _mq_unflatten(aux, children):
     return ModelQuant(*children, kv_container=aux[0], kv_containers=aux[1],
-                      kv_scale_mode=aux[2])
+                      kv_scale_mode=aux[2], kv_unroll=aux[3])
 
 
 jax.tree_util.register_pytree_node(ModelQuant, _mq_flatten, _mq_unflatten)
@@ -306,10 +314,14 @@ def init_cache(cfg, batch, max_len, quant: Optional[ModelQuant] = None,
     and stay dense.
 
     With a **per-layer precision profile** (``quant.kv_containers``), pools
-    cannot be broadcast-stacked — an int4 layer's pool has a different
-    store dtype/shape than an int8 layer's — so each (segment, position)
-    entry becomes a LIST of per-period pools and the forward unrolls the
-    segment (``_segment_unrolled``). Requires a paged cache."""
+    cannot be broadcast-stacked across the whole segment — an int4 layer's
+    pool has a different store dtype/shape than an int8 layer's — so each
+    (segment, position) entry becomes a LIST of pools per contiguous
+    same-container period RUN (each run's pools stacked ``(run_len, ...)``)
+    and the forward scans run-by-run (``_segment_scan_grouped``). With
+    ``quant.kv_unroll`` the entry degenerates to one UNSTACKED pool per
+    period and the forward fully unrolls (``_segment_unrolled``). Requires
+    a paged cache."""
     per_layer = quant is not None and quant.kv_containers is not None
     if per_layer and paged is None:
         raise ValueError("per-layer KV containers require a paged cache "
@@ -321,18 +333,30 @@ def init_cache(cfg, batch, max_len, quant: Optional[ModelQuant] = None,
     for pattern, periods, start in layer_segments(cfg):
         seg = []
         npos = len(pattern)
-        for pi, sig in enumerate(pattern):
-            if per_layer:
+        if per_layer:
+            runs, _ = _container_runs(quant.kv_containers, start, periods,
+                                      npos)
+            if quant.kv_unroll:
+                runs = [(p, p + 1) for p in range(periods)]
+            for pi, sig in enumerate(pattern):
                 pools = []
-                for p in range(periods):
-                    cont = quant.kv_containers[start + p * npos + pi]
+                for p0, p1 in runs:
+                    cont = quant.kv_containers[start + p0 * npos + pi]
                     kvq = (None if cont == "fp"
                            else KVQuantSpec(8, 0, cont))
-                    pools.append(init_block_cache(
+                    one = init_block_cache(
                         cfg, sig, batch, max_len, cfg.compute_jnp_dtype,
-                        kvq, paged))
+                        kvq, paged)
+                    if quant.kv_unroll:
+                        pools.append(one)            # per-period, unstacked
+                    else:
+                        pools.append(jax.tree_util.tree_map(
+                            lambda a: jnp.broadcast_to(
+                                a[None], (p1 - p0,) + a.shape), one))
                 seg.append(pools)
-                continue
+            caches.append(tuple(seg))
+            continue
+        for pi, sig in enumerate(pattern):
             one = init_block_cache(cfg, sig, batch, max_len,
                                    cfg.compute_jnp_dtype, kv_quant, paged)
             seg.append(jax.tree_util.tree_map(
@@ -442,6 +466,111 @@ def _segment_unrolled(seg_params, x, positions, *, cfg, pattern, start,
     return x, tuple(list(c) for c in new_caches), moe_aux
 
 
+def _container_runs(containers, start, periods, npos):
+    """Group a segment's periods into contiguous RUNS with an identical
+    per-position container signature. Each run can ride one ``lax.scan``
+    (static program structure is uniform inside it); a pathological
+    alternating profile degenerates to length-1 runs (full unroll).
+
+    Returns ``(runs, sig)`` with ``runs`` a list of ``(p0, p1)`` period
+    ranges and ``sig[p]`` the per-position container tuple of period p.
+    """
+    sig = [tuple(containers[start + p * npos + pi] for pi in range(npos))
+           for p in range(periods)]
+    runs = []
+    p0 = 0
+    for p in range(1, periods + 1):
+        if p == periods or sig[p] != sig[p0]:
+            runs.append((p0, p))
+            p0 = p
+    return runs, sig
+
+
+def _run_quant(quant, *, start, npos, p0, p1, sig):
+    """Per-position ModelQuant views for one same-container run: Q(I,F)
+    arrays stacked ``(run_len,)`` (they ride the scan), containers STATIC
+    per position ("fp" positions drop the KV quant — their pools store
+    float pages)."""
+    out = []
+    for pi in range(npos):
+        idx = jnp.asarray([start + p * npos + pi for p in range(p0, p1)])
+        cont = sig[p0][pi]
+        f = lambda a: None if a is None else a[idx]   # noqa: E731
+        kv_i, kv_f = f(quant.kv_int), f(quant.kv_frac)
+        if cont == "fp":
+            kv_i = kv_f = None
+            cont = quant.kv_container
+        out.append(ModelQuant(f(quant.w_int), f(quant.w_frac),
+                              f(quant.a_int), f(quant.a_frac), kv_i, kv_f,
+                              cont, kv_scale_mode=quant.kv_scale_mode))
+    return tuple(out)
+
+
+def _segment_scan_grouped(seg_params, x, positions, *, cfg, pattern, start,
+                          periods, caches=None, cache_pos=None, quant=None,
+                          mrope_positions=None, page_table=None,
+                          attn_impl: str = "gather", kv_valid_len=None):
+    """Scan-over-layers for **per-layer KV containers**: contiguous
+    same-container period runs are scanned (one compiled block body per
+    run, so a realistic two-regime ``core.search`` profile costs ~2 bodies
+    instead of O(layers)); length-1 runs inline. Caches arrive/leave as
+    per-position LISTS of per-run stacked pools (see ``init_cache``).
+    Token-identical to ``_segment_unrolled`` — the layer math is the same,
+    only the loop structure differs (asserted in tests/test_serve_fast)."""
+    npos = len(pattern)
+    runs, sig = _container_runs(quant.kv_containers, start, periods, npos)
+    new_caches: Tuple[list, ...] = tuple([] for _ in pattern)
+    moe_aux = jnp.zeros((), jnp.float32)
+
+    def body(carry, xs):
+        x = carry
+        seg_p, cache_p, q_p = xs
+        new_cs, auxes = [], []
+        for pi, bsig in enumerate(pattern):
+            c_i = cache_p[pi] if cache_p is not None else None
+            x, nc, aux = block_apply(
+                seg_p[pi], x, positions, cfg=cfg, sig=bsig, cache=c_i,
+                cache_pos=cache_pos, quant=q_p[pi],
+                mrope_positions=mrope_positions, page_table=page_table,
+                attn_impl=attn_impl, kv_valid_len=kv_valid_len)
+            new_cs.append(nc)
+            auxes.append(aux.get("moe_lb_loss", jnp.zeros((), jnp.float32)))
+        return x, (tuple(new_cs), jnp.stack(auxes).sum())
+
+    body_fn = body
+    if cfg.remat != "none":
+        body_fn = jax.checkpoint(body,
+                                 policy=jax.checkpoint_policies.nothing_saveable
+                                 if cfg.remat == "full" else None)
+
+    for ri, (p0, p1) in enumerate(runs):
+        q_pos = _run_quant(quant, start=start, npos=npos, p0=p0, p1=p1,
+                           sig=sig)
+        run_params = tuple(
+            jax.tree_util.tree_map(lambda a: a[p0:p1], seg_params[pi])
+            for pi in range(npos))
+        run_caches = (tuple(caches[pi][ri] for pi in range(npos))
+                      if caches is not None else None)
+        if p1 - p0 == 1:
+            # pathological alternating profile: inline the single period
+            first = lambda t: jax.tree_util.tree_map(lambda a: a[0], t)
+            x, (nc_run, aux_run) = body(
+                x, (tuple(first(p) for p in run_params),
+                    (None if run_caches is None
+                     else tuple(first(c) for c in run_caches)),
+                    tuple(first(q) for q in q_pos)))
+            nc_run = tuple(jax.tree_util.tree_map(lambda a: a[None], nc)
+                           for nc in nc_run)
+            moe_aux = moe_aux + aux_run
+        else:
+            xs = (run_params, run_caches, q_pos)
+            x, (nc_run, aux_per) = jax.lax.scan(body_fn, x, xs)
+            moe_aux = moe_aux + aux_per.sum()
+        for pi in range(npos):
+            new_caches[pi].append(nc_run[pi])
+    return x, tuple(list(c) for c in new_caches), moe_aux
+
+
 def forward_hidden(params, batch, cfg, *, quant: Optional[ModelQuant] = None,
                    caches=None, cache_pos=None, page_table=None,
                    attn_impl: str = "gather", kv_valid_len=None):
@@ -475,9 +604,13 @@ def forward_hidden(params, batch, cfg, *, quant: Optional[ModelQuant] = None,
     x = constrain(x, "dp", None, None)   # batch over ("pod","data")
 
     new_caches, moe_aux = [], jnp.zeros((), jnp.float32)
-    seg_fn = (_segment_unrolled
-              if quant is not None and quant.kv_containers is not None
-              else _segment_scan)
+    if quant is not None and quant.kv_containers is not None:
+        # per-layer KV containers: scan contiguous same-container runs
+        # (kv_unroll forces the fully unrolled reference path)
+        seg_fn = _segment_unrolled if quant.kv_unroll \
+            else _segment_scan_grouped
+    else:
+        seg_fn = _segment_scan
     for si, (pattern, periods, start) in enumerate(layer_segments(cfg)):
         seg_cache = caches[si] if caches is not None else None
         x, nc, aux = seg_fn(

@@ -33,7 +33,8 @@ def build_model_quant(policy: Optional[PrecisionPolicy], cfg,
                       quantize_activations: bool = True,
                       kv_container: str = "int8",
                       per_layer_kv: bool = False,
-                      kv_scale_mode: str = "static") -> Optional[ModelQuant]:
+                      kv_scale_mode: str = "static",
+                      kv_unroll: bool = False) -> Optional[ModelQuant]:
     """PrecisionPolicy -> ModelQuant. Policy layer i == transformer layer i.
 
     The KV/state cache inherits each layer's *data* format (the cache IS the
@@ -46,7 +47,9 @@ def build_model_quant(policy: Optional[PrecisionPolicy], cfg,
     "int8", an fp32 layer -> "fp" float pages) instead of one uniform
     container — the serving path that lets a ``core.search`` policy drive
     the at-rest KV footprint. Paged caches only (see
-    ``models.transformer.init_cache``).
+    ``models.transformer.init_cache``). Contiguous same-container layer
+    runs ride ``lax.scan``; ``kv_unroll=True`` forces the fully unrolled
+    reference path (identity tests / debugging).
     """
     if policy is None:
         return None
@@ -76,7 +79,8 @@ def build_model_quant(policy: Optional[PrecisionPolicy], cfg,
         a_int=a_i if act_on else None,
         a_frac=a_f if act_on else None,
         kv_int=kv_i, kv_frac=kv_f, kv_container=kv_container,
-        kv_containers=kv_containers, kv_scale_mode=kv_scale_mode)
+        kv_containers=kv_containers, kv_scale_mode=kv_scale_mode,
+        kv_unroll=kv_unroll)
 
 
 def kv_layer_container(data_fmt) -> str:

@@ -1,0 +1,258 @@
+"""Tiered page store tests: demote/promote byte-identity for every
+container (fp / int8 / lane-packed int4, static and per-page scales), host
+tier accounting + capacity, allocator pressure callbacks, and the snapshot
+format round trip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.page_store import (HostPageStore, PageBlob, TieredPager,
+                                   cache_geometry, extract_page, inject_page,
+                                   load_prefix_snapshot,
+                                   save_prefix_snapshot)
+from repro.core.paged_kv import (OutOfPagesError, PageAllocator,
+                                 PagedKVLayout, caches_kv_bytes,
+                                 init_paged_pool, iter_kv_pools,
+                                 paged_update)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _filled_pool(container, *, scale_mode="static", seed=0, num_pages=6,
+                 ps=4, KV=2, hd=16):
+    """One layer's pool with pages 1..2 written via the real update path
+    (so int containers hold genuine quantized grids + scales)."""
+    rng = np.random.default_rng(seed)
+    layout = PagedKVLayout(num_pages=num_pages, page_size=ps,
+                           num_kv_heads=KV, head_dim=hd, container=container)
+    pool = init_paged_pool(layout)
+    pt = jnp.asarray([[1, 2]], np.int32)
+    bits = layout.bits
+    for t in range(2 * ps):
+        k = jnp.asarray(rng.normal(size=(1, 1, KV, hd)) * (0.1 + 0.2 * t),
+                        jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, 1, KV, hd)) * 0.4, jnp.float32)
+        pool = paged_update(pool, k, v, pt, jnp.asarray([t], jnp.int32),
+                            page_size=ps, container=container,
+                            int_bits=2 if bits else None,
+                            frac_bits=(bits - 2) if bits else None,
+                            scale_mode=scale_mode)
+    return pool
+
+
+def _stacked(pool, n=3):
+    """Broadcast a pool to the stacked (layers, NP, ...) layout."""
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape) + 0, pool)
+
+
+def _page_bytes(caches, page):
+    out = []
+    for pool, axis in iter_kv_pools(caches):
+        idx = (slice(None), page) if axis == 1 else (page,)
+        out.append({k: np.asarray(pool[k][idx]) for k in pool})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# extract -> inject round trip is byte-identical, every container/layout
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("container", ["fp", "int8", "int4"])
+@pytest.mark.parametrize("scale_mode", ["static", "page"])
+def test_swap_round_trip_byte_identical(container, scale_mode):
+    """demote->promote preserves every stored byte AND the per-page dequant
+    scales, for packed int containers and dynamic per-page calibration —
+    the bitwise foundation of preemption resume and prefix persistence."""
+    if container == "fp" and scale_mode == "page":
+        pytest.skip("page-scale calibration applies to int containers")
+    # mixed structure: one stacked multi-layer entry + one per-period list
+    caches = [
+        (_stacked(_filled_pool(container, scale_mode=scale_mode, seed=1)),),
+        ([_filled_pool(container, scale_mode=scale_mode, seed=2)],),
+    ]
+    src, dst = 2, 4
+    before_src = _page_bytes(caches, src)
+    blob = extract_page(caches, src)
+    assert blob.nbytes > 0
+    # inject into a DIFFERENT page of the same pools (the promote path
+    # never gets the same physical page back)
+    caches2 = inject_page(caches, blob, dst)
+    after_dst = _page_bytes(caches2, dst)
+    for b, a in zip(before_src, after_dst):
+        for k in ("k_pages", "v_pages", "k_scale", "v_scale"):
+            np.testing.assert_array_equal(b[k], a[k])
+    # extraction was non-destructive and inject didn't disturb the source
+    for b, a in zip(before_src, _page_bytes(caches2, src)):
+        for k in b:
+            np.testing.assert_array_equal(b[k], a[k])
+
+
+def test_extract_through_host_store_survives_page_reuse():
+    """The blob is a HOST copy: freeing + rewriting the device page must not
+    corrupt a parked blob (preempted pages outlive their page ids)."""
+    caches = [(_filled_pool("int8", seed=3),)]
+    blob = extract_page(caches, 1)
+    snap = [{k: a.copy() for k, a in rec.items()} for rec in blob.arrays]
+    host = HostPageStore()
+    h = host.put(blob)
+    # overwrite the device page (simulates reuse by another request)
+    caches = inject_page(caches, extract_page(caches, 2), 1)
+    got = host.pop(h)
+    for rec, ref in zip(got.arrays, snap):
+        for k in rec:
+            np.testing.assert_array_equal(rec[k], ref[k])
+    assert host.num_pages == 0 and host.nbytes == 0
+
+
+# ---------------------------------------------------------------------------
+# Host tier accounting + capacity
+# ---------------------------------------------------------------------------
+def test_host_store_accounting_and_capacity():
+    host = HostPageStore(max_pages=2)
+    blob = extract_page([(_filled_pool("int4"),)], 1)
+    h1 = host.put(blob)
+    h2 = host.put(blob)
+    assert host.num_pages == 2 and host.nbytes == 2 * blob.nbytes
+    assert not host.has_room(1)
+    with pytest.raises(RuntimeError, match="host page tier full"):
+        host.put(blob)
+    host.drop(h1)
+    assert host.has_room(1) and host.drops == 1
+    host.pop(h2)
+    assert host.num_pages == 0 and host.nbytes == 0
+    assert host.peak_pages == 2 and host.peak_bytes == 2 * blob.nbytes
+    # int4 blobs report their packed container
+    assert set(PageBlob(blob.arrays).bytes_by_container()) == {"int4"}
+
+
+def test_caches_kv_bytes_per_container_split():
+    caches = [
+        (_stacked(_filled_pool("int8")),),
+        ([_filled_pool("int4"), _filled_pool("fp")],),
+    ]
+    split = caches_kv_bytes(caches)
+    assert set(split) == {"int8", "int4", "fp"}
+    assert all(v > 0 for v in split.values())
+    # packed int4 stores 8 values per int32 word: strictly below the int8
+    # pool of the same logical shape, even with 3 stacked int8 layers
+    assert split["int4"] < split["int8"]
+
+
+# ---------------------------------------------------------------------------
+# TieredPager demote/promote against a live allocator
+# ---------------------------------------------------------------------------
+def test_pager_demote_promote_round_trip():
+    state = {"caches": [(_filled_pool("int8", num_pages=8),)]}
+    al = PageAllocator(8)
+    host = HostPageStore()
+    pager = TieredPager(al, host, lambda: state["caches"],
+                        lambda c: state.update(caches=c))
+    page = al.alloc()
+    # write something recognizable into the page we own
+    state["caches"] = inject_page(state["caches"],
+                                  extract_page(state["caches"], 2), page)
+    ref = _page_bytes(state["caches"], page)
+    h = pager.demote(page)
+    assert al.refcount(page) == 0          # device reference released
+    assert host.num_pages == 1
+    new_page = pager.promote(h)
+    assert al.refcount(new_page) == 1      # caller owns the promoted page
+    assert host.num_pages == 0
+    for b, a in zip(ref, _page_bytes(state["caches"], new_page)):
+        for k in b:
+            np.testing.assert_array_equal(b[k], a[k])
+    assert pager.demotions == 1 and pager.promotions == 1
+
+
+# ---------------------------------------------------------------------------
+# Allocator pressure callbacks + host inventory reporting
+# ---------------------------------------------------------------------------
+def test_allocator_pressure_callbacks_fire_in_order_after_reclaim():
+    al = PageAllocator(3)                  # 2 usable
+    calls = []
+    freed_pages = []
+
+    def reclaim(n):
+        calls.append("reclaim")
+        return 0
+
+    def cb(n):
+        calls.append("pressure")
+        if freed_pages:
+            al.free([freed_pages.pop()])
+        return 1
+
+    al.reclaim = reclaim
+    al.add_pressure(cb)
+    p1, p2 = al.alloc(), al.alloc()
+    freed_pages.append(p1)
+    p3 = al.alloc()                        # empty free list -> hooks fire
+    assert calls == ["reclaim", "pressure"]
+    assert p3 == p1
+    with pytest.raises(OutOfPagesError):
+        al.alloc()                         # hooks can't help: raises
+    assert calls == ["reclaim", "pressure", "reclaim", "pressure"]
+    al.free([p2, p3])
+
+
+def test_out_of_pages_reports_host_inventory():
+    al = PageAllocator(2)                  # 1 usable
+    al.host_inventory = lambda: 7
+    al.alloc()
+    with pytest.raises(OutOfPagesError) as ei:
+        al.alloc()
+    assert ei.value.host_pages == 7
+    assert "7 host-tier" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# Snapshot format round trip
+# ---------------------------------------------------------------------------
+def test_snapshot_save_load_round_trip(tmp_path):
+    caches = [(_filled_pool("int4"),), ([_filled_pool("int8")],)]
+    geo = cache_geometry(caches)
+    entries = [
+        ("int8|scale=static", [1, 2, 3, 4], extract_page(caches, 1)),
+        ("int8|scale=static", [1, 2, 3, 4, 9], extract_page(caches, 2)),
+        ("uniform4|scale=page", [5], extract_page(caches, 2)),
+    ]
+    path = str(tmp_path / "snap.npz")
+    assert save_prefix_snapshot(path, entries, page_size=4,
+                                geometry=geo) == 3
+    meta, loaded = load_prefix_snapshot(path)
+    assert meta["page_size"] == 4 and meta["geometry"] == geo
+    assert [(k, t) for k, t, _ in loaded] == [(k, t) for k, t, _ in entries]
+    for (_, _, a), (_, _, b) in zip(entries, loaded):
+        assert len(a.arrays) == len(b.arrays)
+        for ra, rb in zip(a.arrays, b.arrays):
+            for f in ("k", "v", "ks", "vs"):
+                np.testing.assert_array_equal(ra[f], rb[f])
+                assert ra[f].dtype == rb[f].dtype
+
+
+def test_snapshot_path_without_npz_extension_round_trips(tmp_path):
+    """np.savez appends '.npz' to bare filenames; save/load normalize
+    through snapshot_path so a bare --prefix-snapshot path still restores
+    on the next run instead of silently never matching."""
+    from repro.core.page_store import snapshot_path
+    caches = [(_filled_pool("int8"),)]
+    bare = str(tmp_path / "kvsnap")       # no extension
+    save_prefix_snapshot(bare, [("k", [1, 2], extract_page(caches, 1))],
+                         page_size=4, geometry=cache_geometry(caches))
+    import os
+    assert os.path.exists(snapshot_path(bare))
+    meta, loaded = load_prefix_snapshot(bare)   # bare path loads too
+    assert len(loaded) == 1 and meta["page_size"] == 4
+
+
+def test_cache_geometry_detects_mismatch():
+    a = cache_geometry([(_filled_pool("int8"),)])
+    b = cache_geometry([(_filled_pool("int4"),)])
+    c = cache_geometry([(_filled_pool("int8", hd=8),)])
+    # page-count differences do NOT change the geometry (pools may be
+    # sized differently across restarts)...
+    d = cache_geometry([(_filled_pool("int8", num_pages=9),)])
+    assert a == d
+    # ...but container and shape differences do
+    assert a != b and a != c

@@ -16,6 +16,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent))
 from _compat import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.registry import get_smoke_config
+from repro.core.page_store import HostPageStore, TieredPager
 from repro.core.paged_kv import (OutOfPagesError, PageAllocator, PagedKVLayout,
                                  copy_pool_pages, init_paged_pool,
                                  paged_update)
@@ -24,6 +25,20 @@ from repro.launch.serve import BatchedServer, Request
 from repro.models.transformer import init_model
 
 jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk_tiered(num_pages=64, ps=2, host_pages=None):
+    """A PrefixCache wired to a real pager over a tiny single-layer pool."""
+    al = PageAllocator(num_pages)
+    layout = PagedKVLayout(num_pages=num_pages, page_size=ps, num_kv_heads=1,
+                           head_dim=8, container="int8")
+    state = {"caches": [(init_paged_pool(layout),)]}
+    host = HostPageStore(max_pages=host_pages)
+    pager = TieredPager(al, host, lambda: state["caches"],
+                        lambda c: state.update(caches=c))
+    cache = PrefixCache(al, ps, pager=pager)
+    al.reclaim = cache.evict
+    return cache, al, host
 
 
 # ---------------------------------------------------------------------------
@@ -205,6 +220,94 @@ def test_profile_key_namespacing():
     cache.insert([0, 1], [pages[0]], profile_key="int4")
     assert cache.lookup([0, 1], profile_key="int4").matched == 2
     al.free(pages)
+
+
+# ---------------------------------------------------------------------------
+# Tiered eviction: demote-instead-of-drop, host hits, host LRU drops
+# ---------------------------------------------------------------------------
+class TestHostTier:
+    def test_evict_demotes_instead_of_dropping(self):
+        cache, al, host = _mk_tiered()
+        pages = _insert_seq(cache, al, [0, 1, 2, 3])     # 2-page chain
+        al.free(pages)
+        assert cache.evict(2) == 2
+        # nothing destroyed: both pages live on the host tier
+        assert cache.num_pages == 0 and cache.host_pages == 2
+        assert cache.evictions == 0 and cache.demotions == 2
+        assert host.num_pages == 2
+        assert al.num_free == al.num_usable
+        # the chain still MATCHES through host-state nodes
+        hit = cache.lookup([0, 1, 2, 3])
+        assert hit.matched == 4
+        assert [n.resident for n in hit.nodes] == [False, False]
+        # admission's promote path brings a node back as a cache-owned page
+        page = cache.ensure_resident(hit.nodes[0])
+        assert al.refcount(page) == 1 and cache.host_pages == 1
+        assert cache.lookup([0, 1, 2, 3]).matched == 4
+        assert cache.clear() == 0 and host.num_pages == 0
+
+    def test_mid_chain_demotion_leaves_no_hole(self):
+        """Demotion is NOT leaf-first (demoted bytes survive): a chain may
+        interleave host and resident nodes and still serve full hits."""
+        cache, al, host = _mk_tiered()
+        pages = _insert_seq(cache, al, [0, 1, 2, 3, 4, 5])  # 3-page chain
+        al.free(pages[:1])               # only the FIRST page is demotable
+        assert cache.evict(1) == 1
+        nodes = [n for _, _, n in cache.iter_chain_nodes()]
+        assert sorted(n.resident for n in nodes) == [False, True, True]
+        hit = cache.lookup([0, 1, 2, 3, 4, 5])
+        assert hit.matched == 6          # no hole
+        al.free(pages[1:])
+        assert cache.clear() == 0 and host.num_pages == 0
+
+    def test_pinned_nodes_survive_eviction_pressure(self):
+        cache, al, host = _mk_tiered()
+        pages = _insert_seq(cache, al, [0, 1, 2, 3])
+        al.free(pages)
+        hit = cache.lookup([0, 1, 2, 3])
+        cache.pin(hit)
+        assert cache.evictable_pages() == 0
+        assert cache.evict(10) == 0      # pinned: neither demote nor drop
+        cache.unpin(hit)
+        assert cache.evictable_pages() == 2
+        assert cache.evict(10) == 2
+        assert cache.clear() == 0
+
+    def test_host_capacity_falls_back_to_destructive_drop(self):
+        cache, al, host = _mk_tiered(host_pages=1)
+        pages = _insert_seq(cache, al, [0, 0, 1, 1])     # 2-page chain
+        al.free(pages)
+        assert cache.evict(2) == 2
+        # one page demoted (host full), the leaf dropped destructively
+        assert cache.demotions + cache.evictions == 2
+        assert host.num_pages <= 1
+        cache.clear()
+        assert host.num_pages == 0
+
+    def test_drop_host_lru_is_leaf_only(self):
+        cache, al, host = _mk_tiered()
+        pages = _insert_seq(cache, al, [0, 1, 2, 3])
+        al.free(pages)
+        cache.evict(2)                   # both nodes now host-state
+        assert cache.drop_host_lru()     # drops the LEAF (deepest) first
+        nodes = [n for _, _, n in cache.iter_chain_nodes()]
+        assert len(nodes) == 1 and nodes[0].tokens == (0, 1)
+        assert cache.drop_host_lru()
+        assert not cache.drop_host_lru()
+        assert host.num_pages == 0
+
+    def test_insert_host_rebuilds_chains_parent_first(self):
+        cache, al, host = _mk_tiered()
+        # insert_host consumes caller-provided handles; restore order is
+        # parents-first (the snapshot serialization order)
+        assert cache.insert_host([0, 1], 10)
+        assert cache.insert_host([0, 1, 2, 3], 11)
+        assert cache.insert_host([0, 1, 2, 3, 9], 12)        # partial leaf
+        assert not cache.insert_host([0, 1], 13)             # duplicate
+        assert not cache.insert_host([5, 5, 5, 5], 14)       # orphan chain
+        hit = cache.lookup([0, 1, 2, 3, 9, 9])
+        assert hit.matched == 5 and hit.cow_valid == 1
+        assert cache.host_pages == 3 and cache.restored_pages == 3
 
 
 # ---------------------------------------------------------------------------

@@ -190,6 +190,85 @@ def test_prefix_sharing_matches_unshared():
     assert "PREFIX_IDENTITY_OK" in res.stdout
 
 
+# ---------------------------------------------------------------------------
+# Per-layer profile: grouped run-scan == fully unrolled reference
+# ---------------------------------------------------------------------------
+# Two profile shapes: contiguous (int8,int8,int4,int4 -> 2 scanned runs —
+# the realistic core.search output) and pathologically alternating
+# (int8,int4,int8,int4 -> all length-1 runs, i.e. full unroll through the
+# grouped path). Both must match the _segment_unrolled reference token for
+# token; fp layers ride along via a None-format layer.
+_PROFILE_SCAN_IDENTITY_SCRIPT = r"""
+import jax, numpy as np
+jax.config.update("jax_platform_name", "cpu")
+from repro.configs.registry import get_smoke_config
+from repro.core.fixedpoint import FixedPointFormat
+from repro.core.policy import LayerPolicy, PrecisionPolicy
+from repro.launch.serve import BatchedServer, Request
+from repro.models.transformer import init_model
+
+cfg = get_smoke_config("qwen2-72b")
+params = init_model(jax.random.PRNGKey(0), cfg)
+
+def mk():
+    r = np.random.default_rng(5)
+    return [Request(i, r.integers(0, cfg.vocab_size, 7 + i)
+                    .astype(np.int32), 5) for i in range(3)]
+
+def prof(fmt_fn):
+    return PrecisionPolicy(
+        tuple(f"layer_{i:03d}" for i in range(cfg.num_layers)),
+        tuple(LayerPolicy(None, fmt_fn(i)) for i in range(cfg.num_layers)))
+
+L = cfg.num_layers
+profiles = {
+    "contig": prof(lambda i: FixedPointFormat(2, 6 if i < L // 2 else 2)),
+    "alt": prof(lambda i: FixedPointFormat(2, 6 if i % 2 == 0 else 2)),
+    "fpmix": PrecisionPolicy(
+        tuple(f"layer_{i:03d}" for i in range(L)),
+        tuple(LayerPolicy(None, None if i == 0 else FixedPointFormat(2, 6))
+              for i in range(L))),
+}
+for name, p in profiles.items():
+    outs = {}
+    for scan in ("group", "unroll"):
+        srv = BatchedServer(cfg, params, batch_size=2, max_len=32,
+                            page_size=8, kv_profile=p, kv_profile_scan=scan)
+        outs[scan] = [r.out for r in srv.run(mk())]
+        assert srv.allocator.num_free == srv.allocator.num_usable
+    assert outs["group"] == outs["unroll"], (name, outs)
+    print(f"{name}: grouped-scan == unrolled")
+print("PROFILE_SCAN_IDENTITY_OK")
+"""
+
+
+def test_profile_grouped_scan_matches_unrolled():
+    """The grouped run-scan forward for per-layer KV containers (contiguous
+    same-container runs ride lax.scan) is token-identical to the fully
+    unrolled _segment_unrolled reference, for contiguous, alternating, and
+    fp-mixed profiles.
+
+    Runs in a subprocess with single-threaded XLA: multi-threaded XLA:CPU
+    GEMMs are not bitwise deterministic under thread contention, and exact
+    argmax token identity needs bitwise-equal logits."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_cpu_multi_thread_eigen=false "
+                        "intra_op_parallelism_threads=1 "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p]
+        + [os.path.join(os.path.dirname(__file__), "..", "src")])
+    res = subprocess.run([sys.executable, "-c",
+                          _PROFILE_SCAN_IDENTITY_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=1200)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "PROFILE_SCAN_IDENTITY_OK" in res.stdout
+
+
 def test_per_layer_profile_shrinks_at_rest_bytes(smoke_model):
     """A profile with >= 2 distinct layer bit-widths stores its paged pools
     below uniform int8 (and above uniform int4) at rest."""
