@@ -7,6 +7,7 @@ by each kernel at its BlockSpec tiling, reported as the compression ratio
 the paper's formats buy."""
 from __future__ import annotations
 
+import functools
 import time
 
 import jax
@@ -103,23 +104,82 @@ def bench_kv_attention():
     return out
 
 
-def run(*, verbose=True):
-    res = {
-        "quant_cast": bench_quant_cast(),
-        "pack": bench_pack(),
-        "quant_matmul": bench_quant_matmul(),
-        "kv_attention": bench_kv_attention(),
-    }
+def bench_paged_prefill_chunk():
+    """Prefill-chunk attention: the variable-length paged chunk kernel
+    (interpret mode) vs the jnp gather path, S in {8, 32, 128}, fragmented
+    page tables, int4/int8/fp containers, per-row starts that straddle page
+    boundaries. Errors are vs the dense-gather oracle; ``gather_s`` times a
+    jitted gather-path equivalent (the serving reference mode)."""
+    out = {}
+    B, kv, g, hd, ps = 2, 2, 2, 32, 16
+    for S in (8, 32, 128):
+        starts = np.array([3, ps - 1], np.int32)[:B]   # straddle boundaries
+        NP = -(-int(starts.max() + S) // ps)
+        for bits, cont in ((0, "fp"), (8, "int8"), (4, "int4")):
+            rng = np.random.default_rng(S * 10 + bits)
+            kq, vq, ks, vs, pt = ref.make_fragmented_pool(rng, B, NP, ps,
+                                                          kv, hd, bits)
+            q = jnp.asarray(rng.normal(size=(B, S, kv * g, hd)), jnp.float32)
+            qs = jnp.asarray(starts)
+            lens = jnp.asarray(starts + S)
+            y = ops.paged_kv_attention_chunk(q, kq, vq, ks, vs, pt, qs, lens,
+                                             bits=bits)
+            yr = ref.paged_kv_attention_chunk_ref(q, kq, vq, ks, vs, pt, qs,
+                                                  lens, bits=bits)
+            gather_fn = jax.jit(functools.partial(
+                ref.paged_kv_attention_chunk_ref, bits=bits))
+            out[f"S{S}-{cont}"] = {
+                "max_err_vs_gather": float(jnp.abs(y - yr).max()),
+                "pages": int(NP), "page_size": ps, "fragmented": True,
+                "pallas_interpret_s": _timeit(
+                    lambda q, *a: ops.paged_kv_attention_chunk(
+                        q, *a, bits=bits),
+                    q, kq, vq, ks, vs, pt, qs, lens, reps=1),
+                "gather_s": _timeit(gather_fn, q, kq, vq, ks, vs, pt, qs,
+                                    lens, reps=1),
+            }
+    return out
+
+
+_STAGES = {
+    "quant_cast": bench_quant_cast,
+    "pack": bench_pack,
+    "quant_matmul": bench_quant_matmul,
+    "kv_attention": bench_kv_attention,
+    "paged_prefill_chunk": bench_paged_prefill_chunk,
+}
+
+
+def run(*, verbose=True, only=None):
+    res = {name: fn() for name, fn in _STAGES.items()
+           if only is None or name in only}
     if verbose:
         print("[kernel_bench]")
         for kname, rows in res.items():
             for cfg, r in rows.items():
-                err = r.get("max_err_vs_ref", r.get("rel_err_vs_ref",
-                                                    r.get("roundtrip_exact")))
-                print(f"  {kname:13s} {cfg:18s} err/ok={err} ")
-    save_json("kernel_bench.json", res)
+                err = r.get("max_err_vs_ref",
+                            r.get("max_err_vs_gather",
+                                  r.get("rel_err_vs_ref",
+                                        r.get("roundtrip_exact"))))
+                print(f"  {kname:19s} {cfg:18s} err/ok={err} ")
+    save_json("kernel_bench.json" if only is None
+              else f"kernel_bench_{'_'.join(sorted(only))}.json", res)
     return res
 
 
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help=f"comma list of stages ({','.join(_STAGES)})")
+    args = ap.parse_args(argv)
+    only = [s for s in args.only.split(",") if s] or None
+    if only:
+        unknown = set(only) - set(_STAGES)
+        if unknown:
+            raise SystemExit(f"unknown kernel_bench stages: {unknown}")
+    run(only=only)
+
+
 if __name__ == "__main__":
-    run()
+    main()

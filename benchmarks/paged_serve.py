@@ -116,11 +116,12 @@ def mk_requests(vocab, n, max_new, seed=0):
 
 def bench_one(cfg, params, *, name, requests, batch, max_len, kv_bits,
               page_size, num_pages, attn_impl="gather", prefill="auto",
-              prefill_bucket=16, warmup=True):
+              prefill_bucket=16, prefill_batch=0, warmup=True):
     srv = BatchedServer(cfg, params, batch_size=batch, max_len=max_len,
                         kv_bits=kv_bits, page_size=page_size,
                         num_pages=num_pages, attn_impl=attn_impl,
-                        prefill=prefill, prefill_bucket=prefill_bucket)
+                        prefill=prefill, prefill_bucket=prefill_bucket,
+                        prefill_batch=prefill_batch)
     if warmup:
         # compile the decode step AND every power-of-two bucket program the
         # trace can hit (prompt lens 3..MAX_PROMPT -> buckets 2..16), so the
@@ -156,6 +157,73 @@ def bench_one(cfg, params, *, name, requests, batch, max_len, kv_bits,
         "token_capacity": capacity,
         "wall_s": dt,
     }
+    return res
+
+
+def run_batched_prefill(cfg, params, *, requests=8, batch=4, verbose=True,
+                        fast=False):
+    """Shared-bucket batched-prefill bench: same-length prompts arriving
+    together, so every admission cycle surfaces several same-bucket rows.
+    Sequential (--prefill-batch 1) vs batched (auto = batch size) admission
+    — the multi-request batched prefill win is FEWER prefill forwards at
+    equal tokens, which is what TTFT on a real accelerator tracks.
+
+    GATES (RAISES — the CI mixed bench-smoke step): batched must run
+    strictly fewer prefill forwards than sequential, and the generated
+    token streams must agree (bitwise identity is asserted separately in
+    the single-threaded-XLA subprocess test; multithreaded CPU GEMMs can
+    flip argmax ties here, hence agreement)."""
+    if fast:
+        requests, batch = 4, 2
+    plen, max_new, max_len, page_size = 11, 8, 64, 8
+    per_slot = -(-(plen + max_new) // page_size)
+    num_pages = 1 + batch * per_slot
+
+    def mk():
+        rng = np.random.default_rng(3)
+        return [Request(i, rng.integers(0, cfg.vocab_size, plen)
+                        .astype(np.int32), max_new) for i in range(requests)]
+
+    def serve(pb):
+        srv = BatchedServer(cfg, params, batch_size=batch, max_len=max_len,
+                            page_size=page_size, num_pages=num_pages,
+                            kv_bits=8, prefill="bucketed", prefill_bucket=16,
+                            prefill_batch=pb)
+        t0 = time.time()
+        reqs = srv.run(mk())
+        return srv, reqs, time.time() - t0
+
+    seq, reqs_seq, _ = serve(1)
+    bat, reqs_bat, _ = serve(batch)
+    agree = np.mean([np.mean(np.asarray(a.out) == np.asarray(b.out))
+                     for a, b in zip(reqs_seq, reqs_bat)])
+    if agree < 0.9:
+        raise RuntimeError(f"batched prefill broke decode: only {agree:.1%} "
+                           f"token agreement with sequential admission")
+    if bat.prefill_forwards >= seq.prefill_forwards:
+        raise RuntimeError(
+            f"batched prefill failed to reduce forwards on the shared-bucket "
+            f"trace: {seq.prefill_forwards} sequential vs "
+            f"{bat.prefill_forwards} batched")
+    res = {
+        "requests": requests, "batch": batch, "prompt_len": plen,
+        "prefill_forwards_sequential": seq.prefill_forwards,
+        "prefill_forwards_batched": bat.prefill_forwards,
+        "prefill_forwards_reduction": (seq.prefill_forwards
+                                       / max(bat.prefill_forwards, 1)),
+        "ttft_ms_sequential": 1e3 * seq.prefill_s / requests,
+        "ttft_ms_batched": 1e3 * bat.prefill_s / requests,
+        "token_agreement": float(agree),
+    }
+    if verbose:
+        print(f"[batched_prefill] {requests} same-bucket prompts "
+              f"(len {plen}, batch={batch}): "
+              f"{res['prefill_forwards_sequential']} -> "
+              f"{res['prefill_forwards_batched']} prefill forwards "
+              f"({res['prefill_forwards_reduction']:.1f}x fewer), "
+              f"TTFT {res['ttft_ms_sequential']:.1f} -> "
+              f"{res['ttft_ms_batched']:.1f} ms/req, "
+              f"agreement {agree:.1%}")
     return res
 
 
@@ -208,8 +276,11 @@ def run_prefix(*, arch="qwen2-72b", requests=8, batch=4, verbose=True,
     num_pages = 1 + batch * per_slot + 2
     mk = lambda: mk_prefix_requests(cfg.vocab_size, requests, sys_len,
                                     max_new, seed=0)
+    # prefill_batch pinned to 1: the off-vs-on comparison measures PREFIX
+    # SHARING alone (batched admission is the other forward-count axis,
+    # measured by run_batched_prefill; auto would batch only the off side)
     common = dict(batch_size=batch, max_len=max_len, page_size=page_size,
-                  num_pages=num_pages, prefill_bucket=16)
+                  num_pages=num_pages, prefill_bucket=16, prefill_batch=1)
 
     def serve(**kw):
         srv = BatchedServer(cfg, params, **common, **kw)
@@ -412,6 +483,7 @@ def run_overcommit(*, arch="qwen2-72b", verbose=True, fast=False):
         "overcommit_ratio": offered_pages / (num_pages - 1),
         "completed": len(reqs), "rejected": 0,
         "preemptions": srv.preempt_count, "resumes": srv.resume_count,
+        "realias_skipped_demotions": srv.realias_skipped,
         "ooo_admissions": srv.scheduler.ooo_admissions,
         "demotions": stats["demotions"], "promotions": stats["promotions"],
         "host_peak_pages": srv.host_store.peak_pages,
@@ -430,7 +502,9 @@ def run_overcommit(*, arch="qwen2-72b", verbose=True, fast=False):
               f"{offered_pages} pages onto a {num_pages - 1}-page pool "
               f"({res['overcommit_ratio']:.1f}x overcommit, batch={batch})")
         print(f"  {len(reqs)} completed / 0 rejected; "
-              f"{srv.preempt_count} preemptions (all resumed), "
+              f"{srv.preempt_count} preemptions (all resumed, "
+              f"{res['realias_skipped_demotions']} victim-page demotions "
+              f"skipped by re-aliasing), "
               f"{res['ooo_admissions']} out-of-order admissions")
         print(f"  tiers: device {inv['device_bytes'] / 2**10:.1f} KiB "
               f"{inv['device_by_container']} | host peak "
@@ -512,6 +586,10 @@ def run(*, arch="qwen2-72b", requests=10, batch=4, max_len=64, page_size=16,
         "kv_bytes_per_token_slot": {r["name"]: r["kv_bytes_per_token_slot"]
                                     for r in rows},
     }
+    # shared-bucket batched-prefill stage: forward counts + TTFT sequential
+    # vs batched (RAISES unless batching reduces forwards — the CI gate)
+    summary["batched_prefill"] = run_batched_prefill(
+        cfg, params, verbose=verbose, fast=fast)
     if verbose:
         print(f"[paged_serve] arch={arch} batch={batch} max_len={max_len} "
               f"page_size={page_size}")
@@ -539,7 +617,8 @@ def run(*, arch="qwen2-72b", requests=10, batch=4, max_len=64, page_size=16,
         summary["overcommit"] = {
             k: over[k] for k in
             ("overcommit_ratio", "completed", "rejected", "preemptions",
-             "resumes", "ooo_admissions", "demotions", "promotions",
+             "resumes", "realias_skipped_demotions", "ooo_admissions",
+             "demotions", "promotions",
              "host_peak_pages", "kv_inventory",
              "prefix_hit_rate_restored", "prefix_hit_rate_warm",
              "token_agreement_vs_uninterrupted")}

@@ -10,10 +10,27 @@ scale). Three levers stack here:
 * the serving hot path: **bucketed prefill** admits prompts in power-of-two
   chunks written straight into the paged pool (O(prompt/bucket) forwards
   instead of O(prompt) whole-batch steps; `prefill_bucket` caps the chunk,
-  so at most log2(bucket)+1 prefill programs ever compile), and
-  `attn_impl="pallas"` routes decode attention through the scalar-prefetch
-  Pallas kernel (`kernels.paged_kv_attention`) — interpret-mode on CPU,
-  compiled on TPU. `attn_impl="gather"` stays the bitwise-reference mode.
+  so at most log2(bucket)+1 prefill programs ever compile per row count);
+  **multi-request batched prefill** (`prefill_batch` / ``--prefill-batch``)
+  stacks same-bucket prompts admitted in one scheduler cycle into single
+  ``[n_reqs, bucket]`` forwards with per-row page tables and valid lengths
+  — fewer forwards and fewer compilations when traffic arrives in waves
+  (0 = auto: the batch size, or 1 with the prefix cache on so same-wave
+  prompts still alias each other's fresh pages); and **unified attention
+  routing** (`attn_impl="pallas"`): ONE variable-length Pallas chunk
+  kernel (`kernels.paged_kv_attention`, scalar-prefetch page tables,
+  per-row causal masking against cache positions) serves BOTH chunked
+  prefill (S > 1) and decode (S = 1 — the kernel's single-row special
+  case); interpret-mode on CPU, compiled on TPU.
+
+Which modes remain **bitwise-reference**: `attn_impl="gather"` (jnp pool
+reads, identical accumulation order to the dense cache) for every chunk
+shape, and `prefill="stepwise"` (slot-granular whole-batch steps). Batched
+prefill is bitwise-identical to sequential bucketed prefill (rows are
+independent sequences writing disjoint pages — asserted in
+tests/test_serve_fast.py), so it is NOT a reference/fast split; the pallas
+kernel's per-page online softmax reorders accumulation, so pallas ==
+gather only within float tolerance.
 
 Two further levers ride the same paged pool:
 
@@ -119,10 +136,24 @@ def main():
           f"(stepwise would take {srv_p4.prefill_tokens - 8} whole-batch "
           f"steps)")
 
-    print("=== int8 paged + Pallas decode kernel (interpret on CPU) ===")
+    print("=== int8 paged + unified Pallas attention (prefill + decode "
+          "through one chunk kernel; interpret on CPU) ===")
     srv_pl = BatchedServer(cfg, params, batch_size=4, max_len=96, kv_bits=8,
                            page_size=16, attn_impl="pallas")
     reqs_pl = srv_pl.run(mk(), verbose=True)
+
+    print("=== int8 paged + batched prefill (same-bucket prompts stacked "
+          "into one [n, bucket] forward) ===")
+    srv_bp = BatchedServer(cfg, params, batch_size=4, max_len=96, kv_bits=8,
+                           page_size=16, prefill_batch=4)
+    srv_sp = BatchedServer(cfg, params, batch_size=4, max_len=96, kv_bits=8,
+                           page_size=16, prefill_batch=1)
+    reqs_bp = srv_bp.run(mk(), verbose=True)
+    reqs_sp = srv_sp.run(mk())
+    print(f"  prefill forwards: {srv_sp.prefill_forwards} sequential -> "
+          f"{srv_bp.prefill_forwards} batched "
+          f"(token agreement {agreement(reqs_sp, reqs_bp):.1%}; "
+          f"bitwise-identical under single-threaded XLA)")
 
     fp_b, q8_b = cache_bytes(srv_fp.caches), cache_bytes(srv_q8.caches)
     p4_b = cache_bytes(srv_p4.caches)
@@ -176,7 +207,9 @@ def main():
     srv_t = BatchedServer(cfg, params, **tiered_kw)
     reqs_t = srv_t.run(mk_tiered(), verbose=True)
     print(f"  {srv_t.preempt_count} preemption(s), {srv_t.resume_count} "
-          f"resume(s); every request completed: "
+          f"resume(s), {srv_t.realias_skipped} victim-page demotion(s) "
+          f"skipped by re-aliasing still-resident prefix nodes; "
+          f"every request completed: "
           f"{all(r.done and r.error is None for r in reqs_t)}")
     print(f"  kv inventory (device/host split): {srv_t.kv_inventory()}")
     snap = os.path.join(tempfile.mkdtemp(), "prefix_pages.npz")

@@ -316,6 +316,17 @@ class PrefixCache:
             assert n.pins > 0, "unbalanced prefix-cache unpin"
             n.pins -= 1
 
+    def pin_node(self, node: "_Node") -> None:
+        """Pin ONE node across an arbitrary window (preemption re-aliasing
+        holds a victim's aliased chain resident from preempt to resume —
+        see ``launch.serve._preempt_slot``). Balanced by
+        :meth:`unpin_node`."""
+        node.pins += 1
+
+    def unpin_node(self, node: "_Node") -> None:
+        assert node.pins > 0, "unbalanced prefix-cache node unpin"
+        node.pins -= 1
+
     def host_nodes_in(self, hit: PrefixHit) -> int:
         """Host-state nodes an admission of this hit must promote — each
         costs one device page on top of the request's own demand."""

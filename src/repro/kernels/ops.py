@@ -12,6 +12,8 @@ import jax.numpy as jnp
 
 from . import ref
 from .kv_attention import kv_attention_decode
+from .paged_kv_attention import \
+    paged_kv_attention_chunk as _paged_kv_attention_chunk
 from .paged_kv_attention import paged_kv_attention_decode
 from .pack import pack_2d, unpack_2d, values_per_word
 from .quant_cast import quant_cast_2d
@@ -74,5 +76,18 @@ def paged_kv_attention(q, k_pages, v_pages, k_scale, v_scale, page_table,
                                      interpret=interpret)
 
 
+def paged_kv_attention_chunk(q, k_pages, v_pages, k_scale, v_scale,
+                             page_table, q_start, kv_len, *, bits: int = 8,
+                             block_q: int = 8, interpret=None):
+    """Variable-length (S >= 1) chunk attention over a paged quantized KV
+    pool — the prefill-chunk generalization of ``paged_kv_attention`` (see
+    kernels.paged_kv_attention for shapes). q: (B, S, H, hd); ``q_start``
+    (B,) is the absolute position of each row's first chunk query."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _paged_kv_attention_chunk(q, k_pages, v_pages, k_scale, v_scale,
+                                     page_table, q_start, kv_len, bits=bits,
+                                     block_q=block_q, interpret=interpret)
+
+
 __all__ = ["quant_cast", "pack", "unpack", "qmatmul", "kv_attention",
-           "paged_kv_attention", "ref"]
+           "paged_kv_attention", "paged_kv_attention_chunk", "ref"]

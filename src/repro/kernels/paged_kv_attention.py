@@ -1,28 +1,40 @@
-"""Pallas kernel: GQA decode attention over a paged, quantized KV cache.
+"""Pallas kernel: GQA variable-length attention over a paged, quantized KV
+cache — ONE kernel for chunked prefill (S >= 1) and decode (S == 1).
 
 Generalizes ``kv_attention.py``'s dense int8 kernel to the paged pool of
 ``repro.core.paged_kv``: KV history lives in fixed-size pages scattered
 through a shared pool, each page stored in its quantized container (int8
 grid, or a 4-bit grid lane-packed into int32 words along the head dim) with a
-per-page dequant scale. The dense kernel is now a thin wrapper that builds an
-identity page table (see ``kv_attention.py``).
+per-page dequant scale. The dense kernel is a thin wrapper that builds an
+identity page table (see ``kv_attention.py``), and the historical decode
+entry point (:func:`paged_kv_attention_decode`) is now the single-query-row
+special case of the chunk kernel below.
 
-Reachable via ``ops.paged_kv_attention`` (oracle-verified in
-tests/test_kernels.py); the serving forward currently uses the equivalent
-jnp gather path in ``core.paged_kv`` to stay bitwise-identical to the dense
-cache — see the ROADMAP item on routing TPU decode through this kernel.
+Reachable via ``ops.paged_kv_attention`` / ``ops.paged_kv_attention_chunk``
+(oracle-verified in tests/test_kernels.py); the serving forward routes BOTH
+bucketed chunk prefill and decode through here under ``--attn-impl pallas``
+(``models.attention.route_paged_attention``), with the jnp gather path kept
+as the bitwise-reference mode.
 
-The page table and per-sequence lengths ride as **scalar-prefetch** operands
-(`pltpu.PrefetchScalarGridSpec`): the BlockSpec index maps read
-``page_table[b, p]`` to pick which pool page the next DMA fetches, so the
-gather happens in the pipeline, not the kernel body — the standard TPU paged
-attention pattern. In VMEM each page is unpacked (for sub-byte containers),
-dequantized by its page scale, and folded into the online-softmax state.
+The page table, per-row chunk start positions, and per-row valid lengths
+ride as **scalar-prefetch** operands (`pltpu.PrefetchScalarGridSpec`): the
+BlockSpec index maps read ``page_table[b, p]`` to pick which pool page the
+next DMA fetches, so the gather happens in the pipeline, not the kernel body
+— the standard TPU paged attention pattern. In VMEM each page is unpacked
+(for sub-byte containers), dequantized by its page scale, and folded into
+the online-softmax state.
 
-Grid (B, KV, NP), NP innermost sequential; (m, l, acc) scratch carries
-across pages. Unused page-table entries must point at a valid pool page
-(page 0 / scratch) — their positions are masked by ``kv_len``. ``kv_len``
-must be >= 1 per row, else the masked softmax degenerates.
+Grid (B, KV, NQ, NP): NQ blocks of ``block_q`` chunk queries, NP pool pages
+innermost sequential; (m, l, acc) scratch carries across pages per query
+block. Each key position is masked **causally against its per-row absolute
+query positions** (``q_start[b] + query index``) and against the row's
+``kv_len`` — partial last pages fall out of the length mask, padded chunk
+tails (positions past the row's real tokens) produce garbage rows that no
+caller reads (their pool writes were already scratch-redirected by
+``paged_update``). Unused page-table entries must point at a valid pool
+page (page 0 / scratch) — their positions are masked the same way.
+``kv_len`` must be >= 1 per row with at least one real query, else the
+masked softmax degenerates.
 """
 from __future__ import annotations
 
@@ -51,10 +63,10 @@ def _dequant(x, scale, *, bits, head_dim):
     return x.astype(jnp.float32) * scale
 
 
-def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
-                  o_ref, m_ref, l_ref, acc_ref, *, np_, ps, bits, head_dim,
-                  sm_scale):
-    b, p = pl.program_id(0), pl.program_id(2)
+def _chunk_kernel(pt_ref, qs_ref, len_ref, q_ref, k_ref, v_ref, ks_ref,
+                  vs_ref, o_ref, m_ref, l_ref, acc_ref, *, np_, ps, bq, g,
+                  bits, head_dim, sm_scale):
+    b, qb, p = pl.program_id(0), pl.program_id(2), pl.program_id(3)
 
     @pl.when(p == 0)
     def _init():
@@ -62,20 +74,25 @@ def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32) * sm_scale               # (G, hd)
+    q = q_ref[0, 0].astype(jnp.float32)                  # (bq, G, hd)
+    q = q.reshape(bq * g, head_dim) * sm_scale
     k = _dequant(k_ref[0, :, 0], ks_ref[0, 0], bits=bits,
-                 head_dim=head_dim)                              # (ps, hd)
+                 head_dim=head_dim)                      # (ps, hd)
     v = _dequant(v_ref[0, :, 0], vs_ref[0, 0], bits=bits,
-                 head_dim=head_dim)                              # (ps, hd)
+                 head_dim=head_dim)                      # (ps, hd)
 
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)      # (G, ps)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq*G, ps)
     pos = p * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
-    s = jnp.where(pos < len_ref[b], s, NEG_INF)
+    # causal mask against the ABSOLUTE position of each query row: flattened
+    # row r is chunk query r // G, at position q_start[b] + qb*bq + r // G
+    qrow = jax.lax.broadcasted_iota(jnp.int32, (bq * g, 1), 0) // g
+    q_pos = qs_ref[b] + qb * bq + qrow                   # (bq*G, 1)
+    s = jnp.where((pos <= q_pos) & (pos < len_ref[b]), s, NEG_INF)
 
-    m_prev = m_ref[...]                                          # (G, 1)
+    m_prev = m_ref[...]                                  # (bq*G, 1)
     m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
-    pexp = jnp.exp(s - m_new)                                    # (G, ps)
-    corr = jnp.exp(m_prev - m_new)                               # (G, 1)
+    pexp = jnp.exp(s - m_new)                            # (bq*G, ps)
+    corr = jnp.exp(m_prev - m_new)                       # (bq*G, 1)
     l_ref[...] = l_ref[...] * corr + pexp.sum(axis=1, keepdims=True)
     acc_ref[...] = acc_ref[...] * corr + \
         jnp.dot(pexp, v, preferred_element_type=jnp.float32)
@@ -84,59 +101,96 @@ def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
     @pl.when(p == np_ - 1)
     def _fin():
         o_ref[0, 0] = (acc_ref[...] /
-                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+                       jnp.maximum(l_ref[...], 1e-30)
+                       ).reshape(bq, g, head_dim).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "block_q", "interpret"))
+def paged_kv_attention_chunk(q, k_pages, v_pages, k_scale, v_scale,
+                             page_table, q_start, kv_len, *, bits: int = 8,
+                             block_q: int = 8, interpret: bool = False):
+    """Variable-length chunk attention over a paged quantized KV pool.
+
+    q: (B, S, H, hd) float — S chunk queries per sequence (S == 1: decode).
+    k_pages/v_pages: (P, ps, KV, hdw) — int8 grid (bits=8), int32 lane-packed
+        words with hdw = hd * bits / 32 (bits < 8), or float (bits=0).
+    k_scale/v_scale: (P,) f32 per-page dequant scales (value = grid * scale).
+    page_table: (B, NP) int32 pool-page ids; unused entries must reference a
+        valid page (use the scratch page 0).
+    q_start: (B,) int32 absolute position of chunk token 0 per row (== the
+        row's cache write offset); query i sits at ``q_start + i`` and
+        attends keys causally up to that position.
+    kv_len: (B,) int32 valid history length per row INCLUDING the chunk's
+        real tokens (>= 1). For padded chunks, query rows past the valid
+        tail produce garbage outputs that no caller reads.
+    bits must match the page container. Returns (B, S, H, hd) float32.
+    """
+    B, S, H, hd = q.shape
+    P, ps, KV, hdw = k_pages.shape
+    NP = page_table.shape[1]
+    G = H // KV
+    bq = max(1, min(block_q, S))
+    nq = -(-S // bq)
+    sp = nq * bq
+    qg = jnp.moveaxis(q.reshape(B, S, KV, G, hd), 1, 2)  # (B, KV, S, G, hd)
+    if sp != S:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, sp - S), (0, 0), (0, 0)))
+    sm_scale = float(1.0 / np.sqrt(hd))
+    pt = jnp.asarray(page_table, jnp.int32)
+    qs = jnp.broadcast_to(jnp.asarray(q_start, jnp.int32).reshape(-1), (B,))
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (B,))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,            # page_table, q_start, kv_len
+        grid=(B, KV, nq, NP),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, G, hd),
+                         lambda b, k, qb, p, pt, qs, ln: (b, k, qb, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hdw),
+                         lambda b, k, qb, p, pt, qs, ln: (pt[b, p], 0, k, 0)),
+            pl.BlockSpec((1, ps, 1, hdw),
+                         lambda b, k, qb, p, pt, qs, ln: (pt[b, p], 0, k, 0)),
+            pl.BlockSpec((1, 1), lambda b, k, qb, p, pt, qs, ln:
+                         (pt[b, p], 0)),
+            pl.BlockSpec((1, 1), lambda b, k, qb, p, pt, qs, ln:
+                         (pt[b, p], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, G, hd),
+                               lambda b, k, qb, p, pt, qs, ln:
+                               (b, k, qb, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq * G, 1), jnp.float32),    # m
+            pltpu.VMEM((bq * G, 1), jnp.float32),    # l
+            pltpu.VMEM((bq * G, hd), jnp.float32),   # acc
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_chunk_kernel, np_=NP, ps=ps, bq=bq, g=G,
+                          bits=bits, head_dim=hd, sm_scale=sm_scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, sp, G, hd), jnp.float32),
+        interpret=interpret,
+    )(pt, qs, lens, qg, k_pages, v_pages,
+      k_scale.reshape(P, 1), v_scale.reshape(P, 1))
+    return jnp.moveaxis(out[:, :, :S], 1, 2).reshape(B, S, H, hd)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "interpret"))
 def paged_kv_attention_decode(q, k_pages, v_pages, k_scale, v_scale,
                               page_table, kv_len, *, bits: int = 8,
                               interpret: bool = False):
-    """Decode attention over a paged quantized KV pool.
+    """Decode attention over a paged quantized KV pool — the S == 1 special
+    case of :func:`paged_kv_attention_chunk` (the sole query row sits at
+    ``kv_len - 1``, so the causal bound collapses into the length mask).
 
-    q: (B, H, hd) float — one new token per sequence.
-    k_pages/v_pages: (P, ps, KV, hdw) — int8 grid (bits=8), int32 lane-packed
-        words with hdw = hd * bits / 32 (bits < 8), or float (bits=0).
-    k_scale/v_scale: (P,) f32 per-page dequant scales (value = grid * scale).
-    page_table: (B, NP) int32 pool-page ids; unused entries must reference a
-        valid page (use the scratch page 0).
-    kv_len: (B,) int32 valid history length per sequence (>= 1).
+    q: (B, H, hd) float — one new token per sequence; other shapes as in
+    the chunk kernel. kv_len: (B,) int32 valid history length (>= 1).
     Returns (B, H, hd) float32.
     """
-    B, H, hd = q.shape
-    P, ps, KV, hdw = k_pages.shape
-    NP = page_table.shape[1]
-    G = H // KV
-    qg = q.reshape(B, KV, G, hd)
-    sm_scale = float(1.0 / np.sqrt(hd))
-    pt = jnp.asarray(page_table, jnp.int32)
+    B = q.shape[0]
     lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (B,))
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,            # page_table, kv_len
-        grid=(B, KV, NP),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda b, k, p, pt, ln: (b, k, 0, 0)),
-            pl.BlockSpec((1, ps, 1, hdw),
-                         lambda b, k, p, pt, ln: (pt[b, p], 0, k, 0)),
-            pl.BlockSpec((1, ps, 1, hdw),
-                         lambda b, k, p, pt, ln: (pt[b, p], 0, k, 0)),
-            pl.BlockSpec((1, 1), lambda b, k, p, pt, ln: (pt[b, p], 0)),
-            pl.BlockSpec((1, 1), lambda b, k, p, pt, ln: (pt[b, p], 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, G, hd),
-                               lambda b, k, p, pt, ln: (b, k, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((G, 1), jnp.float32),    # m
-            pltpu.VMEM((G, 1), jnp.float32),    # l
-            pltpu.VMEM((G, hd), jnp.float32),   # acc
-        ],
-    )
-    out = pl.pallas_call(
-        functools.partial(_paged_kernel, np_=NP, ps=ps, bits=bits,
-                          head_dim=hd, sm_scale=sm_scale),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
-        interpret=interpret,
-    )(pt, lens, qg, k_pages, v_pages,
-      k_scale.reshape(P, 1), v_scale.reshape(P, 1))
-    return out.reshape(B, H, hd)
+    out = paged_kv_attention_chunk(
+        q[:, None], k_pages, v_pages, k_scale, v_scale, page_table,
+        lens - 1, lens, bits=bits, block_q=1, interpret=interpret)
+    return out[:, 0]

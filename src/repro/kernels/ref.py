@@ -106,6 +106,68 @@ def paged_kv_attention_ref(q, k_pages, v_pages, k_scale, v_scale, page_table,
     return masked_decode_attention_ref(q, k, v, kv_len)
 
 
+def make_fragmented_pool(rng, B, NP, ps, kv, hd, bits, extra_pages=3):
+    """Shared oracle-test/bench fixture: a random quantized pool plus an
+    OUT-OF-ORDER page table (non-scratch page ids shuffled across
+    sequences) — the fragmentation the paged kernels must be invariant to.
+    Returns ``(k_pages, v_pages, k_scale, v_scale, page_table)`` with the
+    page table as a numpy (B, NP) int32 array (callers jnp.asarray as
+    needed). ``bits``: 8 (int8 grid), 4 (lane-packed int32), 0 (float)."""
+    from ..core.qtensor import pack_bits
+    P = 1 + B * NP + extra_pages
+    if bits == 8:
+        kq = jnp.asarray(rng.integers(-128, 128, (P, ps, kv, hd)), jnp.int8)
+        vq = jnp.asarray(rng.integers(-128, 128, (P, ps, kv, hd)), jnp.int8)
+    elif bits == 4:
+        kq, _ = pack_bits(jnp.asarray(rng.integers(-8, 8, (P, ps, kv, hd)),
+                                      jnp.int32), 4)
+        vq, _ = pack_bits(jnp.asarray(rng.integers(-8, 8, (P, ps, kv, hd)),
+                                      jnp.int32), 4)
+    else:
+        kq = jnp.asarray(rng.normal(size=(P, ps, kv, hd)), jnp.float32)
+        vq = jnp.asarray(rng.normal(size=(P, ps, kv, hd)), jnp.float32)
+    ks = jnp.asarray(rng.uniform(0.005, 0.08, P), jnp.float32)
+    vs = jnp.asarray(rng.uniform(0.005, 0.08, P), jnp.float32)
+    ids = np.arange(1, P)
+    rng.shuffle(ids)
+    pt = ids[:B * NP].reshape(B, NP).astype(np.int32)
+    return kq, vq, ks, vs, pt
+
+
+def paged_kv_attention_chunk_ref(q, k_pages, v_pages, k_scale, v_scale,
+                                 page_table, q_start, kv_len, *,
+                                 bits: int = 8, head_dim=None):
+    """Oracle for the variable-length chunk kernel: gather pages into the
+    logical dense view, dequantize with the per-page scales, run softmax
+    attention with per-row causal masking against absolute query positions
+    (``q_start[b] + i``) and the row's ``kv_len``.
+
+    q: (B, S, H, hd); other shapes as in ``paged_kv_attention_chunk``.
+    """
+    from ..core.paged_kv import paged_gather
+    container = {0: "fp", 8: "int8", 4: "int4"}[bits]
+    pool = {"k_pages": k_pages, "v_pages": v_pages,
+            "k_scale": k_scale, "v_scale": v_scale}
+    B, S, H, _ = q.shape
+    hd = head_dim if head_dim is not None else q.shape[-1]
+    k, v = paged_gather(pool, jnp.asarray(page_table, jnp.int32),
+                        container=container, head_dim=hd)
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qs = jnp.broadcast_to(jnp.asarray(q_start, jnp.int32).reshape(-1), (B,))
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (B,))
+    qg = q.reshape(B, S, KV, G, hd).astype(jnp.float32) / np.sqrt(hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, k.astype(jnp.float32))
+    pos = jnp.arange(T)
+    q_pos = qs[:, None] + jnp.arange(S)[None, :]            # (B, S)
+    mask = (pos[None, None, :] <= q_pos[:, :, None]) & \
+        (pos[None, None, :] < lens[:, None, None])
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd)
+
+
 def kv_attention_ref(q, k_q, v_q, int_bits, frac_bits, kv_len):
     """q: (B, H, hd) float; k_q/v_q: (B, T, KV, hd) int8 grid; kv_len: int.
     GQA decode: one new token attends to the first kv_len cache entries.

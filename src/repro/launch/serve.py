@@ -29,10 +29,22 @@ The serving **hot path** is built around three ideas:
   and masked, writing straight into the paged pool — instead of O(prompt)
   whole-batch decode steps. ``--prefill stepwise`` keeps the slot-granular
   reference path (bitwise-identical results; see tests/test_serve_fast.py).
-* **Kernel-routed decode** (--attn-impl pallas): decode attention runs in
-  ``kernels.paged_kv_attention`` (scalar-prefetch DMA over the page table,
-  dequant in VMEM; interpret-mode on CPU, compiled on TPU). The default
-  ``gather`` impl stays the bitwise-reference mode.
+* **Multi-request batched prefill** (--prefill-batch): one admission cycle
+  may admit several waiting prompts (the scheduler's admit window surfaces
+  them), and their same-bucket chunks STACK into single [n_reqs, bucket]
+  prefill forwards with per-row page tables, start positions, and valid
+  lengths — amortizing both forward count and per-bucket compilations
+  across concurrent admissions. Rows are independent sequences writing
+  disjoint pages, so batched == sequential bitwise (tests assert it).
+  An ``OutOfPagesError`` mid-batch rolls back every partially admitted
+  row before surfacing.
+* **Unified kernel-routed attention** (--attn-impl pallas): decode AND
+  chunked prefill attention run through ONE variable-length
+  ``kernels.paged_kv_attention`` chunk kernel (scalar-prefetch DMA over
+  the page table, dequant in VMEM, per-row causal masking against cache
+  positions; interpret-mode on CPU, compiled on TPU) — there is no jnp
+  fallback on the S>1 path. The default ``gather`` impl stays the
+  bitwise-reference mode for every chunk shape.
 * **Batched host<->device traffic**: decode advances in "runs" between slot
   events (admission/completion, both predictable from token counts), feeding
   next-token ids device-to-device and fetching generated tokens
@@ -119,13 +131,18 @@ class PreemptedState:
     """Slot state captured at a span boundary when a request is preempted:
     everything resume needs to continue decoding bitwise-identically —
     the cache position, the next token to consume, the generated count,
-    and the host-tier handles of the slot's demoted pages (in page-table
-    order)."""
+    and one entry per slot page (in page-table order). An entry is either
+    ``("host", handle)`` — the page's bytes were demoted to the host tier —
+    or ``("alias", node)`` — the page aliases a still-resident prefix-cache
+    node (refcount > 1, so demoting it frees nothing): the victim's slot
+    reference was dropped, the node PINNED against eviction, and resume
+    re-aliases it with a fresh incref instead of paying the host round
+    trip (preemption re-aliasing)."""
 
     pos: int
     token: int
     gen: int
-    handles: List[int]
+    entries: List[tuple]
 
 
 @dataclasses.dataclass
@@ -150,6 +167,25 @@ def _pow2_bucket(n: int, cap: int) -> int:
     return min(cap, 1 << max(0, n - 1).bit_length())
 
 
+@dataclasses.dataclass
+class _PrefillJob:
+    """One planned bucketed prefill (slot already reserved/aliased): feed
+    ``req.prompt[start:-1]`` into the pool. ``done`` tracks written tokens
+    across the batched rounds; ``finished`` flips once the slot's clock and
+    token state are final (rollback on a failed batch skips finished
+    jobs)."""
+
+    slot: int
+    req: Request
+    start: int
+    done: int = 0
+    finished: bool = False
+
+    @property
+    def total(self) -> int:
+        return max(0, len(self.req.prompt) - 1 - self.start)
+
+
 def _upload(x):
     """Device-put a host-MUTABLE numpy buffer via a host-side snapshot.
 
@@ -172,15 +208,18 @@ class BatchedServer:
 
     ``prefill``: "auto" picks the bucketed chunked prefill whenever the
     layout supports it (paged + attention-only arch), "bucketed" demands it,
-    "stepwise" forces the slot-granular reference path. ``attn_impl``:
-    "gather" (jnp reference) or "pallas" (paged decode kernel; paged only).
+    "stepwise" forces the slot-granular reference path. ``prefill_batch``
+    caps how many same-bucket prompts one admission cycle stacks into a
+    single batched prefill forward (0 = auto, 1 = sequential).
+    ``attn_impl``: "gather" (jnp reference) or "pallas" (the unified
+    variable-length paged chunk kernel, decode AND prefill; paged only).
     """
 
     def __init__(self, cfg, params, *, batch_size: int, max_len: int,
                  kv_bits: int = 0, page_size: int = 0,
                  num_pages: Optional[int] = None, seed: int = 0,
                  attn_impl: str = "gather", prefill: str = "auto",
-                 prefill_bucket: int = 32,
+                 prefill_bucket: int = 32, prefill_batch: int = 0,
                  kv_profile: Optional[PrecisionPolicy] = None,
                  kv_scale: str = "static", prefix_cache: str = "off",
                  kv_profile_scan: str = "group",
@@ -224,6 +263,9 @@ class BatchedServer:
         if prefill_bucket < 1:
             raise ValueError("prefill_bucket must be >= 1")
         self.prefill_bucket = prefill_bucket
+        if prefill_batch < 0:
+            raise ValueError("prefill_batch must be >= 0 (0 = auto)")
+        self.prefill_batch = prefill_batch
         if kv_scale not in ("static", "page"):
             raise ValueError(f"kv_scale must be 'static' or 'page', "
                              f"got {kv_scale!r}")
@@ -307,7 +349,8 @@ class BatchedServer:
         self.decode = jax.jit(make_decode_step(cfg, quant=self.quant,
                                                attn_impl=attn_impl))
         self._chunk_prefill = (
-            jax.jit(make_chunk_prefill_step(cfg, quant=self.quant))
+            jax.jit(make_chunk_prefill_step(cfg, quant=self.quant,
+                                            attn_impl=attn_impl))
             if self.prefill_mode == "bucketed" else None)
 
         paged_spec = None
@@ -358,6 +401,8 @@ class BatchedServer:
         self.prefill_forwards_saved = 0   # forwards prefix hits avoided
         self.preempt_count = 0            # victim slots demoted + re-queued
         self.resume_count = 0             # preempted requests resumed
+        self.realias_skipped = 0          # preempt host-copies skipped by
+        #                                   re-aliasing resident cache nodes
         self.rejected: List[Request] = []  # never-fit requests (error set)
 
     # -- page bookkeeping ---------------------------------------------------
@@ -428,35 +473,6 @@ class BatchedServer:
             self.pos[slot] += 1
         self.tokens[slot] = int(req.prompt[-1])
 
-    def _prefill_bucketed(self, slot: int, req: Request, start: int = 0):
-        """Write prompt[start:-1] into the paged pool in O(suffix / bucket)
-        chunked forwards: each chunk is padded to a power-of-two bucket (so
-        at most log2(prefill_bucket)+1 programs ever compile), masked via
-        ``valid_len`` (padded tails scatter to the scratch page), and runs
-        as a single-sequence forward against the shared pools — other slots
-        are untouched. A prefix-cache hit (``start`` > 0) turns the
-        O(prompt/bucket) admission cost into O(suffix/bucket): fully cached
-        pages never see a forward."""
-        toks = np.asarray(req.prompt[start:-1], np.int32)
-        self.pos[slot] = start
-        done = 0
-        while done < len(toks):
-            n = len(toks) - done
-            bucket = _pow2_bucket(n, self.prefill_bucket)
-            valid = min(bucket, n)
-            self._ensure_page(slot, start + done + valid - 1)
-            chunk = np.zeros((1, bucket), np.int32)
-            chunk[0, :valid] = toks[done:done + valid]
-            self.caches = self._chunk_prefill(
-                self.params, jnp.asarray(chunk),
-                jnp.asarray([start + done], jnp.int32),
-                jnp.asarray([valid], jnp.int32),
-                self.caches, _upload(self.page_table[slot:slot + 1]))
-            self.prefill_forwards += 1
-            done += valid
-        self.pos[slot] = start + len(toks)
-        self.tokens[slot] = int(req.prompt[-1])
-
     def _n_chunks(self, n: int) -> int:
         """Bucketed-prefill forwards needed for ``n`` prompt tokens."""
         c, done = 0, 0
@@ -466,23 +482,132 @@ class BatchedServer:
         return c
 
     def _prefill_slot(self, slot: int, req: Request, start: int = 0):
-        if len(req.prompt) == 0:
-            raise ValueError(f"request {req.rid} has an empty prompt")
-        if len(req.prompt) >= self.max_len:
-            raise ValueError(f"request {req.rid} prompt length "
-                             f"{len(req.prompt)} >= max_len {self.max_len}")
+        """Slot-granular reference prefill (stepwise mode / dense caches);
+        bucketed admissions go through ``_run_prefills`` instead."""
         t0 = time.perf_counter()
-        if self.prefill_mode == "bucketed":
-            self._prefill_bucketed(slot, req, start)
-            self.prefill_forwards_saved += (
-                self._n_chunks(len(req.prompt) - 1)
-                - self._n_chunks(len(req.prompt) - 1 - start))
-        else:
-            self._prefill_stepwise(slot, req, start)
-            self.prefill_forwards_saved += start
+        self._prefill_stepwise(slot, req, start)
+        self.prefill_forwards_saved += start
         self.prefill_s += time.perf_counter() - t0
         self.prefill_tokens += len(req.prompt)
         self.slot_gen[slot] = 0
+
+    # -- batched bucketed prefill -------------------------------------------
+    def _prefill_group_cap(self) -> int:
+        """Max prompt rows stacked into one batched prefill forward.
+        ``prefill_batch=0`` is auto: the batch size — except with the
+        prefix cache on, where same-wave prompts must admit one at a time
+        so a later prompt can still alias the pages an earlier one just
+        inserted (batching would hide intra-wave hits)."""
+        if self.prefill_batch:
+            return self.prefill_batch
+        return 1 if self.prefix_cache is not None else self.B
+
+    def _prefill_group(self, rows: List[_PrefillJob], bucket: int):
+        """ONE batched prefill forward: each row's next ``bucket``-sized
+        chunk, stacked into a [n_rows, bucket] program with per-row page
+        tables, start positions, and valid lengths. Rows are independent
+        sequences writing disjoint pages, so stacking is bitwise-neutral
+        per row (asserted in tests/test_serve_fast.py)."""
+        n = len(rows)
+        chunk = np.zeros((n, bucket), np.int32)
+        starts = np.zeros((n,), np.int32)
+        valids = np.zeros((n,), np.int32)
+        pts = np.empty((n, self.np_max), np.int32)
+        for r, job in enumerate(rows):
+            off = job.start + job.done
+            toks = job.req.prompt[off:len(job.req.prompt) - 1]
+            valid = min(bucket, len(toks))
+            self._ensure_page(job.slot, off + valid - 1)
+            chunk[r, :valid] = toks[:valid]
+            starts[r], valids[r] = off, valid
+            pts[r] = self.page_table[job.slot]
+        # chunk/starts/valids/pts are private copies nobody mutates later,
+        # so plain asarray uploads are race-free (cf. _upload)
+        self.caches = self._chunk_prefill(
+            self.params, jnp.asarray(chunk), jnp.asarray(starts),
+            jnp.asarray(valids), self.caches, jnp.asarray(pts))
+        self.prefill_forwards += 1
+        for r, job in enumerate(rows):
+            job.done += int(valids[r])
+            self.pos[job.slot] = job.start + job.done
+
+    def _finish_job(self, job: _PrefillJob):
+        """Seal a prefilled slot: clock at the last prompt token (which the
+        decode loop consumes) and the fresh pages indexed into the prefix
+        cache."""
+        self.pos[job.slot] = len(job.req.prompt) - 1
+        self.tokens[job.slot] = int(job.req.prompt[-1])
+        if self.prefix_cache is not None:
+            self._cache_insert(job.slot, job.req)
+        job.finished = True
+
+    def _rollback_admission(self, job: _PrefillJob, err) -> None:
+        """Undo one partially executed admission after a failed batch:
+        release every page the row holds (aliased prefix pages just drop
+        the slot's reference), clear the reservation, and vacate the slot —
+        so an OutOfPagesError mid-batch leaves the accounting exactly as if
+        the row was never admitted."""
+        i = job.slot
+        self.slots[i] = None
+        if self.slot_pages[i]:
+            self.allocator.free(self.slot_pages[i])
+            self.slot_pages[i] = []
+        self.page_table[i, :] = SCRATCH_PAGE
+        self._pt_dirty = True
+        self.slot_reserved[i] = 0
+        self.pos[i] = 0
+        self.tokens[i] = 0
+        self.slot_gen[i] = 0
+        job.req.error = err
+
+    def _run_prefills(self, jobs: List[_PrefillJob]):
+        """Execute one admission cycle's bucketed prefills, stacking
+        same-bucket rows of different requests into single [n, bucket]
+        forwards (capped at ``_prefill_group_cap`` rows): the scheduler's
+        admit window surfaces several admissible prompts per cycle, and
+        stacking amortizes both the forward count and the per-bucket
+        compilations across them. Round-robin: every round, each unfinished
+        row contributes its next power-of-two chunk; rows sharing a bucket
+        share a forward. An ``OutOfPagesError`` mid-batch (the preflight
+        makes this unreachable; defense against accounting bugs) rolls back
+        every not-yet-finished row before re-raising."""
+        t0 = time.perf_counter()
+        cap = self._prefill_group_cap()
+        try:
+            pending = []
+            for job in jobs:
+                self.prefill_tokens += len(job.req.prompt)
+                self.prefill_forwards_saved += (
+                    self._n_chunks(len(job.req.prompt) - 1)
+                    - self._n_chunks(job.total))
+                if job.total == 0:
+                    self._finish_job(job)   # full-chain hit / 1-token prompt
+                else:
+                    pending.append(job)
+            while pending:
+                groups = {}
+                for job in pending:
+                    b = _pow2_bucket(job.total - job.done,
+                                     self.prefill_bucket)
+                    groups.setdefault(b, []).append(job)
+                for bucket in sorted(groups):
+                    grp = groups[bucket]
+                    for k in range(0, len(grp), cap):
+                        self._prefill_group(grp[k:k + cap], bucket)
+                nxt = []
+                for job in pending:
+                    if job.done >= job.total:
+                        self._finish_job(job)
+                    else:
+                        nxt.append(job)
+                pending = nxt
+        except OutOfPagesError as err:
+            for job in jobs:
+                if not job.finished:
+                    self._rollback_admission(job, err)
+            raise
+        finally:
+            self.prefill_s += time.perf_counter() - t0
 
     # -- prefix sharing -----------------------------------------------------
     def _copy_pool_pages(self, src: int, dst: int):
@@ -519,12 +644,25 @@ class BatchedServer:
         the caller must either complete the admission (``_do_admit``
         unpins) or unpin itself. "defer" means the request must wait for
         live requests' pages; "reject" means it can NEVER fit (its error
-        carries the full device/host/evictable inventory)."""
+        carries the full device/host/evictable inventory).
+
+        Malformed requests raise here, BEFORE any pin/reservation is
+        taken, so the error cannot leak cache state."""
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.rid} has an empty prompt")
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(f"request {req.rid} prompt length "
+                             f"{len(req.prompt)} >= max_len {self.max_len}")
         if not self.paged:
             return "admit", {"hit": None, "total": 0}
         total = self._pages_needed(req)
         hit = None
-        if self.prefix_cache is not None and req._paused is None:
+        if req._paused is not None:
+            # resume allocates only the host-demoted pages; re-aliased
+            # (pinned) cache nodes cost nothing
+            need_new = total - sum(1 for kind, _ in req._paused.entries
+                                   if kind == "alias")
+        elif self.prefix_cache is not None:
             # record=False: a deferred request retries this lookup every
             # span; hit-rate stats count once, on admission
             hit = self.prefix_cache.lookup(req.prompt[:-1], record=False)
@@ -558,11 +696,17 @@ class BatchedServer:
         return "defer", {"total": total, "need_new": need_new,
                          "shortfall": need_new - avail}
 
-    def _do_admit(self, i: int, req: Request, info: dict):
+    def _do_admit(self, i: int, req: Request, info: dict,
+                  jobs: List[_PrefillJob]):
         """Execute a planned admission into free slot ``i``: alias/promote
-        the pinned prefix chain, CoW-copy a mid-page divergence, prefill
-        the non-shared suffix (or promote+resume a preempted request), and
-        index the fresh prompt pages into the prefix cache."""
+        the pinned prefix chain, CoW-copy a mid-page divergence, and stage
+        the non-shared suffix's prefill (or promote+resume a preempted
+        request). Bucketed-mode prefills are only PLANNED here (appended to
+        ``jobs``); the admission cycle runs them batched at the end
+        (``_run_prefills``), so several same-cycle admissions share
+        forwards. The slot is claimed immediately — reservation accounting
+        for the rest of the cycle sees it. (Prompt validation happened in
+        ``_admission_plan``, before the hit chain was pinned.)"""
         if not self.paged:
             self._prefill_slot(i, req, 0)
             self.slots[i] = req
@@ -595,10 +739,22 @@ class BatchedServer:
             self.prefix_cache.unpin(hit)
             self.prefix_cache.note_lookup(len(req.prompt) - 1, start)
             self.prefix_hit_tokens += start
-        self._prefill_slot(i, req, start)
-        if self.prefix_cache is not None:
-            self._cache_insert(i, req)
         self.slots[i] = req
+        self.pos[i] = start
+        self.slot_gen[i] = 0
+        if self.prefill_mode == "bucketed":
+            job = _PrefillJob(i, req, start)
+            if self._prefill_group_cap() > 1:
+                jobs.append(job)     # cycle runs these batched at the end
+            else:
+                # sequential discipline: prefill AND cache-insert complete
+                # before the next admission plans, so a same-wave prompt
+                # can still alias this request's fresh pages
+                self._run_prefills([job])
+        else:
+            self._prefill_slot(i, req, start)
+            if self.prefix_cache is not None:
+                self._cache_insert(i, req)
 
     def _reject(self, queue: List[Request], idx: int, err) -> None:
         """Drop a never-fit request from the queue WITHOUT killing the run
@@ -610,7 +766,7 @@ class BatchedServer:
         req.done = True
         self.rejected.append(req)
 
-    def _admit_fifo(self, queue: List[Request]):
+    def _admit_fifo(self, queue: List[Request], jobs: List[_PrefillJob]):
         """Legacy FIFO admission: strict queue order, but a permanently
         -too-large head is SKIPPED (recorded + surfaced at end of run)
         instead of stalling the queue forever behind it."""
@@ -624,10 +780,10 @@ class BatchedServer:
                     continue              # next head, same free slot
                 if verdict == "defer":
                     return                # wait for live requests' pages
-                self._do_admit(i, queue.pop(0), info)
+                self._do_admit(i, queue.pop(0), info, jobs)
                 break
 
-    def _admit_slo(self, queue: List[Request]):
+    def _admit_slo(self, queue: List[Request], jobs: List[_PrefillJob]):
         """Priority/EDF admission with bounded out-of-order admission past
         a deferred head, and preemption of strictly less urgent running
         requests when a candidate's page shortfall can be met by demoting
@@ -659,7 +815,7 @@ class BatchedServer:
                 continue
             if verdict == "admit":
                 queue.pop(idx)
-                self._do_admit(free[0], req, info)
+                self._do_admit(free[0], req, info, jobs)
                 if deferred:
                     self.scheduler.ooo_admissions += 1
                 continue
@@ -673,12 +829,18 @@ class BatchedServer:
             idx += 1
 
     def _admit(self, queue: List[Request]):
+        """One admission cycle: plan/claim as many queued requests as slots
+        and pages allow, then execute their prefills BATCHED (same-bucket
+        rows of different requests stack into one forward)."""
         if not queue:
             return
+        jobs: List[_PrefillJob] = []
         if self.scheduler is not None:
-            self._admit_slo(queue)
+            self._admit_slo(queue, jobs)
         else:
-            self._admit_fifo(queue)
+            self._admit_fifo(queue, jobs)
+        if jobs:
+            self._run_prefills(jobs)
 
     # -- preemption ---------------------------------------------------------
     def _preempt_gain(self, i: int) -> int:
@@ -689,13 +851,43 @@ class BatchedServer:
                     if self.allocator.refcount(p) == 1)
         return freed + max(0, self.slot_reserved[i] - len(self.slot_pages[i]))
 
+    def _realias_plan(self, i: int) -> dict:
+        """Slot pages of ``i`` that alias STILL-RESIDENT prefix-cache nodes
+        (page-table index -> node). Demoting such a page at preemption
+        frees nothing (the cache's reference keeps it alive) and pays a
+        host copy + a resume promotion for bytes that never leave the
+        device — so ``_preempt_slot`` pins the node and drops only the
+        slot's reference, and resume re-aliases it (preemption
+        re-aliasing). A victim's own freshly inserted prompt pages match
+        here too (``_cache_insert`` made them chain nodes), so typically
+        only decode-tail pages take the host round trip."""
+        req = self.slots[i]
+        if self.prefix_cache is None or req is None:
+            return {}
+        hit = self.prefix_cache.lookup(req.prompt[:-1], record=False)
+        plan = {}
+        for j, node in enumerate(hit.nodes):
+            if (j < len(self.slot_pages[i]) and node.resident
+                    and node.page == self.slot_pages[i][j]):
+                plan[j] = node
+            else:
+                return plan     # private page (e.g. CoW): chain ends here
+        j = len(hit.nodes)
+        if (hit.cow_node is not None and j < len(self.slot_pages[i])
+                and hit.cow_node.resident
+                and hit.cow_node.page == self.slot_pages[i][j]):
+            plan[j] = hit.cow_node   # the victim's own partial leaf page
+        return plan
+
     def _preempt_for(self, req: Request, queue: List[Request],
                      shortfall: int, budget: int) -> int:
         """Preempt strictly-less-urgent running slots so ``req`` becomes
         admissible (``shortfall`` pages short; 0 = needs only a slot),
         spending at most ``budget`` victims (the admission cycle's
         remaining max_preempt_per_admit allowance). Victims demote to the
-        host tier and re-queue. Returns the number of slots preempted."""
+        host tier (cache-aliased pages are re-alias-pinned instead — they
+        need no host room) and re-queue. Returns the number of slots
+        preempted."""
         if self.scheduler is None or self.host_store is None or budget <= 0:
             return 0
         running = [(i, self.slots[i], 0) for i in range(self.B)
@@ -705,27 +897,44 @@ class BatchedServer:
             limit=budget)
         preempted = 0
         for i in victims:
-            need_room = len(self.slot_pages[i])
+            plan = self._realias_plan(i)
+            need_room = len(self.slot_pages[i]) - len(plan)
             while not self.host_store.has_room(need_room):
                 # make host room by dropping cold demoted prefixes
                 if (self.prefix_cache is None
                         or not self.prefix_cache.drop_host_lru()):
                     return preempted      # host tier genuinely full
-            queue.append(self._preempt_slot(i))
+            queue.append(self._preempt_slot(i, plan))
             preempted += 1
         return preempted
 
-    def _preempt_slot(self, i: int) -> Request:
+    def _preempt_slot(self, i: int, plan: Optional[dict] = None) -> Request:
         """Evict the request in slot ``i`` mid-decode (at a span boundary,
-        where host-side slot state is consistent): demote every written
-        page to the host tier in page-table order, release the device
-        pages + reservation, and capture the resume state. The request
-        re-queues; resume promotes the pages back and continues decoding
+        where host-side slot state is consistent): every written page
+        either demotes to the host tier (private pages) or stays resident
+        as a PINNED prefix-cache node with the slot's reference dropped
+        (cache-aliased pages — host-copying a refcount>1 page frees
+        nothing). Device pages + reservation are released and the resume
+        state captured. The request re-queues; resume promotes the host
+        pages back / re-increfs the pinned nodes and continues decoding
         bitwise-identically (no re-prefill)."""
+        if plan is None:
+            plan = self._realias_plan(i)
         req = self.slots[i]
-        handles = [self.host_store.put(extract_page(self.caches, p))
-                   for p in self.slot_pages[i]]
-        self.allocator.free(self.slot_pages[i])
+        entries = []
+        for j, p in enumerate(self.slot_pages[i]):
+            node = plan.get(j)
+            if node is not None:
+                # page survives via the cache's reference; pin the node so
+                # eviction (demote AND drop) cannot touch it before resume
+                self.prefix_cache.pin_node(node)
+                entries.append(("alias", node))
+                self.realias_skipped += 1
+            else:
+                entries.append(("host",
+                                self.host_store.put(
+                                    extract_page(self.caches, p))))
+            self.allocator.free([p])
         self.slot_pages[i] = []
         self.page_table[i, :] = SCRATCH_PAGE
         self._pt_dirty = True
@@ -733,7 +942,7 @@ class BatchedServer:
         req._paused = PreemptedState(pos=int(self.pos[i]),
                                      token=int(self.tokens[i]),
                                      gen=int(self.slot_gen[i]),
-                                     handles=handles)
+                                     entries=entries)
         req.preemptions += 1
         self.preempt_count += 1
         self.pos[i] = 0
@@ -745,14 +954,21 @@ class BatchedServer:
     def _resume_slot(self, i: int, req: Request, total: int):
         """Re-admit a preempted request: promote its demoted pages back
         into freshly allocated device pages (byte-identical — see
-        core.page_store), restore the slot clock/token state, and continue
-        decoding where it left off. No prefill runs."""
+        core.page_store) and re-alias its pinned cache nodes (an incref,
+        no byte movement), restore the slot clock/token state, and
+        continue decoding where it left off. No prefill runs."""
         st = req._paused
         self.slot_reserved[i] = total
-        for j, h in enumerate(st.handles):
-            page = self.allocator.alloc()  # reclaim hook may evict/demote
-            self.caches = inject_page(self.caches,
-                                      self.host_store.pop(h), page)
+        for j, (kind, val) in enumerate(st.entries):
+            if kind == "alias":
+                assert val.resident, "pinned prefix node lost residency"
+                page = val.page
+                self.allocator.incref(page)   # the slot's alias reference
+                self.prefix_cache.unpin_node(val)
+            else:
+                page = self.allocator.alloc()  # reclaim may evict/demote
+                self.caches = inject_page(self.caches,
+                                          self.host_store.pop(val), page)
             self.page_table[i, j] = page
             self.slot_pages[i].append(page)
             self._pt_dirty = True
@@ -884,7 +1100,9 @@ class BatchedServer:
                       f"pages / {self.host_store.nbytes / 2**20:.2f} MiB "
                       f"(peak {self.host_store.peak_pages}), "
                       f"{self.preempt_count} preemptions, "
-                      f"{self.resume_count} resumes")
+                      f"{self.resume_count} resumes, "
+                      f"{self.realias_skipped} demotions skipped "
+                      f"(re-aliased)")
         new_rejects = self.rejected[rejected0:]
         if new_rejects and self.scheduler is None:
             # legacy strict semantics: surface the first impossible request
@@ -999,6 +1217,12 @@ def main(argv=None):
                          "paged pool; stepwise = slot-granular reference")
     ap.add_argument("--prefill-bucket", type=int, default=32,
                     help="max power-of-two prompt chunk for bucketed prefill")
+    ap.add_argument("--prefill-batch", type=int, default=0,
+                    help="max same-bucket prompts stacked into ONE batched "
+                         "prefill forward per admission cycle (0 = auto: "
+                         "the batch size, or 1 with --prefix-cache on so "
+                         "same-wave prompts can still alias each other's "
+                         "fresh pages; 1 = sequential reference)")
     ap.add_argument("--kv-profile", default="",
                     help="path to a core.policy.PrecisionPolicy JSON (e.g. "
                          "core.search output): per-layer KV containers — "
@@ -1064,6 +1288,7 @@ def main(argv=None):
                         num_pages=args.num_pages or None,
                         attn_impl=args.attn_impl, prefill=args.prefill,
                         prefill_bucket=args.prefill_bucket,
+                        prefill_batch=args.prefill_batch,
                         kv_profile=kv_profile, kv_scale=args.kv_scale,
                         prefix_cache=args.prefix_cache,
                         kv_profile_scan=args.kv_profile_scan,

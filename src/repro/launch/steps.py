@@ -81,20 +81,28 @@ def make_prefill_step(cfg, *, max_len: int, quant=None):
     return step
 
 
-def make_chunk_prefill_step(cfg, *, quant=None):
+def make_chunk_prefill_step(cfg, *, quant=None, attn_impl: str = "gather"):
     """fn(params, tokens (Bp, S), start_pos (Bp,), valid_len (Bp,), caches,
     page_table (Bp, NP)) -> caches.
 
     One **bucketed prefill** program: runs a whole prompt chunk through the
     backbone in a single forward, quantizing K/V per layer and scattering the
-    chunk into the paged pool via the page table. ``S`` is the bucket size
-    (callers pad prompts up to a power-of-two bucket and jit retraces per
-    bucket, so a max bucket of 2^k costs at most k+1 compilations); only the
-    first ``valid_len`` tokens are real — padded tails are masked out of the
-    pool write (scratch-page redirect) and their hidden states are garbage
-    that nobody reads. Skips the LM head entirely (prefill logits are never
-    sampled; the decode step consumes the last prompt token), which is why
-    this wraps ``forward_hidden`` and not ``forward``.
+    chunk into the paged pool via the page table. ``Bp`` is the number of
+    stacked same-bucket prompt rows (multi-request batched prefill — each
+    row carries its own page table, start position, and valid length) and
+    ``S`` the bucket size (callers pad prompts up to a power-of-two bucket
+    and jit retraces per bucket, so a max bucket of 2^k costs at most k+1
+    compilations per row count); only the first ``valid_len`` tokens of a
+    row are real — padded tails are masked out of the pool write
+    (scratch-page redirect) and their hidden states are garbage that nobody
+    reads. Skips the LM head entirely (prefill logits are never sampled; the
+    decode step consumes the last prompt token), which is why this wraps
+    ``forward_hidden`` and not ``forward``.
+
+    ``attn_impl`` routes the chunk's attention reads exactly like decode
+    ("gather" = jnp bitwise reference, "pallas" = the variable-length paged
+    chunk kernel) — prefill and decode share ONE attention entry point
+    (``models.attention.route_paged_attention``).
 
     Prefix sharing composes here for free: a prefix-cache hit aliases the
     shared pages into the slot's page table and the server calls this step
@@ -106,7 +114,7 @@ def make_chunk_prefill_step(cfg, *, quant=None):
         batch = {"tokens": tokens}
         _, aux = forward_hidden(params, batch, cfg, quant=quant,
                                 caches=caches, cache_pos=start_pos,
-                                page_table=page_table,
+                                page_table=page_table, attn_impl=attn_impl,
                                 kv_valid_len=valid_len)
         return aux["caches"]
 

@@ -148,6 +148,55 @@ def paged_cache_view(cache, page_table, *, head_dim, dtype):
                         head_dim=head_dim, dtype=dtype)
 
 
+def route_paged_attention(q, cache, page_table, positions, cache_pos, *,
+                          cfg, attn_impl: str = "gather",
+                          operand_dtype=jnp.float32):
+    """Unified variable-length paged attention entry point.
+
+    ONE routing layer for every paged attention read — chunked prefill
+    (S > 1) and decode (S == 1) alike — keyed by (impl, chunk shape,
+    container):
+
+    * ``attn_impl="pallas"`` sends the chunk through
+      ``kernels.paged_kv_attention`` (scalar-prefetch DMA over the page
+      table, dequant in VMEM, per-row causal masking against absolute cache
+      positions). S == 1 takes the kernel's single-query-row special case
+      (the historical decode entry point). Per-page online softmax reorders
+      accumulation, so pallas == gather only within float tolerance.
+    * ``attn_impl="gather"`` reads the pool through the jnp gather path —
+      identical chunk accumulation order to the dense cache, which keeps
+      paged serving bitwise-equal to the dense layout (the reference mode
+      the equivalence tests rely on). Non-causal configs also land here
+      (the kernel's mask is causal by construction).
+
+    ``q``: (B, S, H, hd) post-RoPE queries; ``cache``: the pool dict AFTER
+    this chunk's ``paged_cache_update`` write; ``cache_pos``: scalar or (B,)
+    position of the chunk's first token. Padded chunk tails need no special
+    masking here: the causal bound of every REAL query is tighter than the
+    padding positions, and padded queries' outputs are garbage nobody reads
+    (their pool writes were scratch-redirected). Returns (B, S, H, hd) in
+    q.dtype.
+    """
+    B, S, H, hd = q.shape
+    base = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32).reshape(-1),
+                            (B,))
+    if attn_impl == "pallas" and cfg.causal:
+        from ..kernels.ops import paged_kv_attention, paged_kv_attention_chunk
+        bits = {"int8": 8, "int4": 4, "fp": 0}[_paged_container(cache)]
+        args = (cache["k_pages"], cache["v_pages"], cache["k_scale"],
+                cache["v_scale"], page_table)
+        if S == 1:
+            out = paged_kv_attention(q[:, 0], *args, base + 1, bits=bits)
+            return out.reshape(B, 1, H, hd).astype(q.dtype)
+        out = paged_kv_attention_chunk(q, *args, base, base + S, bits=bits)
+        return out.astype(q.dtype)
+    kd, vd = paged_cache_view(cache, page_table, head_dim=hd,
+                              dtype=operand_dtype)
+    return attend_chunked(q, kd, vd, positions, 0, causal=cfg.causal,
+                          kv_len=base + S, chunk=cfg.attn_chunk,
+                          operand_dtype=operand_dtype)
+
+
 # ---------------------------------------------------------------------------
 # Core attention math (grouped heads, online softmax over KV chunks)
 # ---------------------------------------------------------------------------
@@ -345,12 +394,13 @@ def gqa_apply(params, x, positions, *, cfg, cache=None, cache_pos=None,
     ``cache_pos`` is a scalar (shared clock) or (B,) per-row offsets. A paged
     cache (dict with "k_pages") additionally needs ``page_table`` (B, NP).
 
-    ``attn_impl`` selects the paged S=1 decode backend: "gather" reads the
-    pool through the jnp path (bitwise-reference mode, identical chunk order
-    to the dense cache), "pallas" routes through
-    ``kernels.paged_kv_attention`` (scalar-prefetch DMA; per-page online
-    softmax, so equal to gather only within float tolerance). Chunked prefill
-    (S > 1) always uses the gather path — the kernel is decode-shaped.
+    ``attn_impl`` selects the paged attention backend for EVERY chunk shape
+    (see ``route_paged_attention``): "gather" reads the pool through the jnp
+    path (bitwise-reference mode, identical chunk order to the dense cache),
+    "pallas" routes both chunked prefill (S > 1) and decode (S == 1) through
+    the variable-length ``kernels.paged_kv_attention`` chunk kernel
+    (scalar-prefetch DMA; per-page online softmax, so equal to gather only
+    within float tolerance).
     ``kv_valid_len`` (scalar or (B,)) marks only the first tokens of a padded
     prefill chunk as real; padded tails scatter to the scratch page.
     """
@@ -388,29 +438,12 @@ def gqa_apply(params, x, positions, *, cfg, cache=None, cache_pos=None,
                              f"got {attn_impl!r}")
         new_cache = paged_cache_update(cache, k, v, page_table, cache_pos,
                                        kv_quant, valid_len=kv_valid_len)
-        if attn_impl == "pallas" and S == 1:
-            # scalar-prefetch Pallas kernel: gathers pages via DMA and
-            # dequantizes in VMEM; per-page online softmax, so equal to the
-            # gather path within float tolerance (not bitwise)
-            from ..kernels.ops import paged_kv_attention
-            container = _paged_container(new_cache)
-            bits = {"int8": 8, "int4": 4, "fp": 0}[container]
-            kvl = jnp.broadcast_to(
-                jnp.asarray(cache_pos, jnp.int32).reshape(-1), (B,)) + 1
-            out = paged_kv_attention(
-                q[:, 0], new_cache["k_pages"], new_cache["v_pages"],
-                new_cache["k_scale"], new_cache["v_scale"], page_table, kvl,
-                bits=bits)
-            o = out.reshape(B, 1, H, hd).astype(q.dtype)
-        else:
-            # jnp gather path: identical chunk accumulation order keeps
-            # paged decode bitwise-equal to the dense cache (the serving
-            # equivalence contract / bitwise-reference mode)
-            kd, vd = paged_cache_view(new_cache, page_table, head_dim=hd,
-                                      dtype=odt)
-            o = attend_chunked(q, kd, vd, positions, 0, causal=cfg.causal,
-                               kv_len=cache_pos + S, chunk=cfg.attn_chunk,
-                               operand_dtype=odt)
+        # ONE entry point for chunk prefill AND decode: the routing layer
+        # picks the Pallas chunk kernel (S >= 1; per-page online softmax,
+        # float-tolerance equal) or the jnp gather path (bitwise reference)
+        o = route_paged_attention(q, new_cache, page_table, positions,
+                                  cache_pos, cfg=cfg, attn_impl=attn_impl,
+                                  operand_dtype=odt)
     elif cache is not None:
         pos = cache_pos
         new_cache = cache_update(cache, k, v, pos, kv_quant)

@@ -211,8 +211,8 @@ def block_apply(params, x, positions, *, cfg, sig, cache=None, cache_pos=None,
     """Returns (x, new_cache, aux). ``quant`` holds per-THIS-layer scalars.
 
     ``attn_impl``/``kv_valid_len`` only affect paged GQA attention: kernel
-    vs gather decode routing and padded-chunk masking (see
-    ``attention.gqa_apply``).
+    vs gather routing (one variable-length path for chunk prefill AND
+    decode) and padded-chunk masking (see ``attention.gqa_apply``).
     """
     kind, ffn = sig
     aux = {}
@@ -581,7 +581,9 @@ def forward_hidden(params, batch, cfg, *, quant: Optional[ModelQuant] = None,
     optional "positions" (B,S), "mrope_positions" (B,S,3).
     ``cache_pos`` is a scalar (shared decode clock) or (B,) per-sequence
     offsets; ``page_table`` (B, NP) activates paged KV caches;
-    ``attn_impl`` ("gather" | "pallas") picks the paged decode backend;
+    ``attn_impl`` ("gather" | "pallas") picks the paged attention backend
+    for EVERY chunk shape — decode and bucketed prefill share one routing
+    layer (``models.attention.route_paged_attention``);
     ``kv_valid_len`` masks padded bucketed-prefill chunk tails.
     """
     cd = cfg.compute_jnp_dtype

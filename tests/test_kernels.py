@@ -112,28 +112,8 @@ def test_kv_attention_matches_ref(b, kv, g, hd, t, frac):
 # ---------------------------------------------------------------------------
 # paged_kv_attention
 # ---------------------------------------------------------------------------
-def _mk_fragmented_pool(rng, B, NP, ps, kv, hd, bits, extra_pages=3):
-    """Random pool + an out-of-order page table; unused entries -> page 0."""
-    from repro.core.qtensor import pack_bits
-    P = 1 + B * NP + extra_pages
-    if bits == 8:
-        kq = jnp.asarray(rng.integers(-128, 128, (P, ps, kv, hd)), jnp.int8)
-        vq = jnp.asarray(rng.integers(-128, 128, (P, ps, kv, hd)), jnp.int8)
-    elif bits == 4:
-        kq, _ = pack_bits(jnp.asarray(rng.integers(-8, 8, (P, ps, kv, hd)),
-                                      jnp.int32), 4)
-        vq, _ = pack_bits(jnp.asarray(rng.integers(-8, 8, (P, ps, kv, hd)),
-                                      jnp.int32), 4)
-    else:
-        kq = jnp.asarray(rng.normal(size=(P, ps, kv, hd)), jnp.float32)
-        vq = jnp.asarray(rng.normal(size=(P, ps, kv, hd)), jnp.float32)
-    ks = jnp.asarray(rng.uniform(0.005, 0.08, P), jnp.float32)
-    vs = jnp.asarray(rng.uniform(0.005, 0.08, P), jnp.float32)
-    # pages allocated out of order: shuffle the non-scratch page ids
-    ids = np.arange(1, P)
-    rng.shuffle(ids)
-    pt = ids[:B * NP].reshape(B, NP).astype(np.int32)
-    return kq, vq, ks, vs, pt
+# shared with benchmarks/kernel_bench.py — one fixture, one pool layout
+_mk_fragmented_pool = ref.make_fragmented_pool
 
 
 @settings(max_examples=12, deadline=None)
@@ -207,6 +187,72 @@ def test_paged_int4_matches_int8_on_same_grid():
     v4, _ = pack_bits(jnp.asarray(grid_v, jnp.int32), 4)
     o4 = ops.paged_kv_attention(q, k4, v4, sc, sc, pt, lens, bits=4)
     np.testing.assert_array_equal(np.asarray(o8), np.asarray(o4))
+
+
+# ---------------------------------------------------------------------------
+# paged_kv_attention_chunk (variable-length prefill-chunk kernel)
+# ---------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(b=st.integers(1, 2), kv=st.sampled_from([1, 2]),
+       g=st.sampled_from([1, 2]), hd=st.sampled_from([16, 32]),
+       ps=st.sampled_from([8, 16]), s=st.sampled_from([2, 5, 8, 13]),
+       start=st.integers(0, 19), bits=st.sampled_from([0, 4, 8]))
+def test_paged_kv_attention_chunk_matches_ref(b, kv, g, hd, ps, s, start,
+                                              bits):
+    """Chunk kernel vs dense-gather oracle on fragmented page tables:
+    per-row start positions straddle page boundaries (``start`` is
+    arbitrary, so chunks begin/end mid-page → partial last pages), history
+    lengths differ per row, and every container is swept."""
+    rng = np.random.default_rng(b * 1000 + ps * 31 + s * 7 + start + bits)
+    h = kv * g
+    # per-row starts: row r begins a little earlier than `start`
+    starts = np.maximum(0, start - rng.integers(0, 4, b)).astype(np.int32)
+    np_pages = max(1, -(-int(starts.max() + s) // ps))
+    kq, vq, ks, vs, pt = _mk_fragmented_pool(rng, b, np_pages, ps, kv, hd,
+                                             bits)
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    lens = starts + s
+    out = ops.paged_kv_attention_chunk(q, kq, vq, ks, vs, jnp.asarray(pt),
+                                       jnp.asarray(starts),
+                                       jnp.asarray(lens), bits=bits,
+                                       block_q=4)
+    expect = ref.paged_kv_attention_chunk_ref(q, kq, vq, ks, vs, pt, starts,
+                                              lens, bits=bits)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_paged_chunk_block_q_invariance():
+    """The query-block size is a tiling knob, not a numerics knob: the same
+    chunk attended at block_q 1/4/8 gives the same output (page-order
+    accumulation is identical, only the grid changes)."""
+    rng = np.random.default_rng(9)
+    B, KV, G, hd, ps, NP, S = 2, 2, 2, 16, 8, 3, 7
+    kq, vq, ks, vs, pt = _mk_fragmented_pool(rng, B, NP, ps, KV, hd, 8)
+    q = jnp.asarray(rng.normal(size=(B, S, KV * G, hd)), jnp.float32)
+    starts = jnp.asarray([2, 9], jnp.int32)
+    lens = starts + S
+    outs = [np.asarray(ops.paged_kv_attention_chunk(
+        q, kq, vq, ks, vs, jnp.asarray(pt), starts, lens, bits=8,
+        block_q=bq)) for bq in (1, 4, 8)]
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-6, atol=1e-6)
+
+
+def test_paged_decode_is_chunk_special_case():
+    """The decode entry point == the chunk kernel at S=1 with the causal
+    bound collapsed into the length mask (exact: same kernel, same grid
+    accumulation)."""
+    rng = np.random.default_rng(4)
+    B, KV, G, hd, ps, NP = 2, 2, 2, 16, 8, 3
+    kq, vq, ks, vs, pt = _mk_fragmented_pool(rng, B, NP, ps, KV, hd, 8)
+    q = jnp.asarray(rng.normal(size=(B, KV * G, hd)), jnp.float32)
+    lens = jnp.asarray([13, 20], jnp.int32)
+    d = ops.paged_kv_attention(q, kq, vq, ks, vs, jnp.asarray(pt), lens,
+                               bits=8)
+    c = ops.paged_kv_attention_chunk(q[:, None], kq, vq, ks, vs,
+                                     jnp.asarray(pt), lens - 1, lens,
+                                     bits=8, block_q=1)
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(c[:, 0]))
 
 
 def test_kv_attention_masks_tail():

@@ -181,6 +181,31 @@ def test_preemption_demotes_resumes_and_completes(smoke_model):
     assert low._paused is None and low.error is None
 
 
+def test_preempt_realias_skips_host_copies(smoke_model):
+    """With the prefix cache on, a victim's prompt pages are cache nodes
+    (refcount > 1) — preempting it must RE-ALIAS them (pin the node, drop
+    the slot ref, no host copy) instead of paying offload for pages that
+    free nothing, and resume must re-incref them with the token stream
+    intact and zero leaks."""
+    cfg, params = smoke_model
+    srv = BatchedServer(cfg, params, batch_size=1, max_len=48, kv_bits=8,
+                        page_size=8, num_pages=5, kv_offload="host",
+                        sched="slo", prefix_cache="on")
+    rng = np.random.default_rng(2)
+    low = Request(0, rng.integers(0, cfg.vocab_size, 9).astype(np.int32),
+                  16, priority=0)
+    hi = Request(1, rng.integers(0, cfg.vocab_size, 9).astype(np.int32),
+                 6, priority=5, arrive_step=4, deadline_step=20)
+    srv.run([low, hi])
+    assert low.done and hi.done and low.preemptions >= 1
+    assert srv.preempt_count == srv.resume_count >= 1
+    # at least the victim's full prompt page skipped the host round trip
+    assert srv.realias_skipped >= 1
+    assert srv.host_store.num_pages == 0
+    assert srv.release_prefix_cache() == 0
+    assert srv.allocator.num_free == srv.allocator.num_usable
+
+
 def test_preempt_requires_host_offload(smoke_model):
     cfg, params = smoke_model
     with pytest.raises(ValueError, match="host"):
@@ -215,25 +240,36 @@ def mk():
     return [low, hi, mid]
 
 for kv_bits in (0, 8, 4):
-    # tight pool + slots: the high-priority latecomer must preempt
-    srv = BatchedServer(cfg, params, batch_size=1, max_len=48,
-                        kv_bits=kv_bits, page_size=8, num_pages=4,
-                        kv_offload="host", sched="slo")
-    reqs = srv.run(mk())
-    assert srv.preempt_count >= 1, "trace failed to trigger preemption"
-    assert srv.resume_count == srv.preempt_count
-    assert all(r.done and r.error is None for r in reqs)
-    # uninterrupted reference: same requests, roomy pool, no preemption
-    ref = BatchedServer(cfg, params, batch_size=3, max_len=48,
-                        kv_bits=kv_bits, page_size=8)
-    ref_reqs = ref.run(mk())
-    assert ref.preempt_count == 0
-    by_rid = {r.rid: r for r in ref_reqs}
-    for r in reqs:
-        assert r.out == by_rid[r.rid].out, (kv_bits, r.rid, r.out,
-                                            by_rid[r.rid].out)
-    n_pre = sum(r.preemptions for r in reqs)
-    print(f"kv_bits={kv_bits} bitwise-identical after {n_pre} preemption(s)")
+    for prefix in ("off", "on"):
+        # tight pool + slots: the high-priority latecomer must preempt.
+        # prefix="on" additionally routes the victim's prompt pages through
+        # PREEMPTION RE-ALIASING (pinned cache nodes, no host copy), which
+        # must be just as bitwise-invisible as the host round trip.
+        srv = BatchedServer(cfg, params, batch_size=1, max_len=48,
+                            kv_bits=kv_bits, page_size=8, num_pages=4,
+                            kv_offload="host", sched="slo",
+                            prefix_cache=prefix)
+        reqs = srv.run(mk())
+        assert srv.preempt_count >= 1, "trace failed to trigger preemption"
+        assert srv.resume_count == srv.preempt_count
+        assert all(r.done and r.error is None for r in reqs)
+        if prefix == "on":
+            assert srv.realias_skipped >= 1, "re-aliasing never fired"
+            assert srv.release_prefix_cache() == 0
+        assert srv.host_store.num_pages == 0
+        # uninterrupted reference: same requests, roomy pool, no preemption
+        ref = BatchedServer(cfg, params, batch_size=3, max_len=48,
+                            kv_bits=kv_bits, page_size=8)
+        ref_reqs = ref.run(mk())
+        assert ref.preempt_count == 0
+        by_rid = {r.rid: r for r in ref_reqs}
+        for r in reqs:
+            assert r.out == by_rid[r.rid].out, (kv_bits, prefix, r.rid,
+                                                r.out, by_rid[r.rid].out)
+        n_pre = sum(r.preemptions for r in reqs)
+        print(f"kv_bits={kv_bits} prefix={prefix} bitwise-identical "
+              f"after {n_pre} preemption(s), "
+              f"{srv.realias_skipped} demotions skipped")
 print("PREEMPT_IDENTITY_OK")
 """
 

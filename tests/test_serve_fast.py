@@ -1,13 +1,19 @@
-"""Serving hot-path tests: bucketed prefill identity, kernel-routed decode,
-and admission preflight.
+"""Serving hot-path tests: bucketed + batched prefill identity, unified
+kernel-routed attention (prefill AND decode), and admission preflight.
 
 * Bucketed chunked prefill must produce token-identical output to the
   slot-granular (token-at-a-time) reference prefill across bucket
   boundaries, at kv-bits {0, 8, 4}.
-* ``attn_impl="pallas"`` decode (kernels.paged_kv_attention, interpret mode
-  on CPU) must match the jnp gather path on fragmented page tables to float
-  tolerance (the kernel's per-page online softmax reorders accumulation, so
-  the contract is allclose, not bitwise).
+* Multi-request BATCHED prefill (same-bucket rows stacked into one
+  [n, bucket] forward) must be token-identical to one-at-a-time bucketed
+  prefill at kv-bits {0, 8, 4}, with strictly fewer forwards; an
+  OutOfPagesError mid-batch rolls back every partially admitted row.
+* ``attn_impl="pallas"`` (kernels.paged_kv_attention, interpret mode on
+  CPU) must match the jnp gather path on fragmented page tables to float
+  tolerance for BOTH chunk shapes — S=1 decode and S>1 prefill chunks
+  (partial last pages, padded tails, mixed per-layer profiles); the
+  kernel's per-page online softmax reorders accumulation, so the contract
+  is allclose, not bitwise.
 * Paged admission preflights worst-case page demand and raises
   ``OutOfPagesError`` with counts instead of dying mid-prefill.
 """
@@ -106,6 +112,115 @@ def test_bucketed_prefill_matches_stepwise():
 
 
 # ---------------------------------------------------------------------------
+# Batched prefill == one-at-a-time bucketed prefill, token for token
+# ---------------------------------------------------------------------------
+# Lens stack a same-bucket first wave (three 9s + a 5 into one admission
+# cycle at batch 4), a multi-chunk prompt (21), and a straggler — so the
+# trace exercises stacked [n, bucket] forwards, mixed-bucket cycles, AND
+# later single-row cycles, all of which must be bitwise-neutral per row.
+_BATCHED_PREFILL_IDENTITY_SCRIPT = r"""
+import jax, numpy as np
+jax.config.update("jax_platform_name", "cpu")
+from repro.configs.registry import get_smoke_config
+from repro.launch.serve import BatchedServer, Request
+from repro.models.transformer import init_model
+
+cfg = get_smoke_config("qwen2-72b")
+params = init_model(jax.random.PRNGKey(0), cfg)
+
+def mk():
+    rng = np.random.default_rng(7)
+    lens = [9, 9, 9, 5, 21, 9]
+    return [Request(i, rng.integers(0, cfg.vocab_size, L).astype(np.int32),
+                    5 + (i % 3)) for i, L in enumerate(lens)]
+
+for kv_bits in (0, 8, 4):
+    seq = BatchedServer(cfg, params, batch_size=4, max_len=32,
+                        kv_bits=kv_bits, page_size=8, prefill="bucketed",
+                        prefill_bucket=8, prefill_batch=1)
+    out_seq = seq.run(mk())
+    bat = BatchedServer(cfg, params, batch_size=4, max_len=32,
+                        kv_bits=kv_bits, page_size=8, prefill="bucketed",
+                        prefill_bucket=8, prefill_batch=4)
+    out_bat = bat.run(mk())
+    for a, b in zip(out_seq, out_bat):
+        assert a.out == b.out, (kv_bits, a.rid, a.out, b.out)
+    assert all(r.done for r in out_bat)
+    # the whole point: same-bucket rows share forwards
+    assert bat.prefill_forwards < seq.prefill_forwards, (
+        bat.prefill_forwards, seq.prefill_forwards)
+    assert bat.allocator.num_free == bat.allocator.num_usable
+    print(f"kv_bits={kv_bits} identical "
+          f"({seq.prefill_forwards} -> {bat.prefill_forwards} prefill fwd)")
+print("BATCHED_PREFILL_IDENTITY_OK")
+"""
+
+
+def test_batched_prefill_matches_sequential():
+    """Multi-request batched prefill (same-bucket prompt rows stacked into
+    one [n, bucket] forward) == one-at-a-time bucketed prefill, token for
+    token, at kv-bits {0, 8, 4} — while running strictly fewer prefill
+    forwards.
+
+    Runs in a subprocess with single-threaded XLA: multi-threaded XLA:CPU
+    GEMMs are not bitwise deterministic under thread contention, and exact
+    argmax token identity needs bitwise-equal logits."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_cpu_multi_thread_eigen=false "
+                        "intra_op_parallelism_threads=1 "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p]
+        + [os.path.join(os.path.dirname(__file__), "..", "src")])
+    res = subprocess.run([sys.executable, "-c",
+                          _BATCHED_PREFILL_IDENTITY_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=1200)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "BATCHED_PREFILL_IDENTITY_OK" in res.stdout
+
+
+def test_batched_admission_rolls_back_on_out_of_pages(smoke_model):
+    """An OutOfPagesError raised mid-batched-admission (normally
+    unreachable: the preflight reserves worst-case demand) must roll back
+    EVERY partially admitted row of the batch — pages released, page-table
+    rows re-parked on the scratch page, reservations zeroed, slots vacated
+    — before the error surfaces, so accounting stays leak-free."""
+    from repro.core.paged_kv import SCRATCH_PAGE
+    cfg, params = smoke_model
+    srv = BatchedServer(cfg, params, batch_size=2, max_len=32, kv_bits=8,
+                        page_size=8, prefill="bucketed", prefill_batch=2)
+    real_alloc = srv.allocator.alloc
+    calls = {"n": 0}
+
+    def flaky_alloc():
+        calls["n"] += 1
+        if calls["n"] > 1:   # second row of the batch fails
+            raise OutOfPagesError(needed=1, free=0,
+                                  total=srv.allocator.num_usable)
+        return real_alloc()
+
+    srv.allocator.alloc = flaky_alloc
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, 9).astype(np.int32),
+                    4) for i in range(2)]
+    with pytest.raises(OutOfPagesError):
+        srv.run(reqs)
+    srv.allocator.alloc = real_alloc
+    # every row of the failed batch rolled back: no slot claimed, no page
+    # leaked, no reservation outstanding
+    assert all(s is None for s in srv.slots)
+    assert all(r == 0 for r in srv.slot_reserved)
+    assert all(not p for p in srv.slot_pages)
+    assert (srv.page_table == SCRATCH_PAGE).all()
+    assert srv.allocator.num_free == srv.allocator.num_usable
+    assert all(isinstance(r.error, OutOfPagesError) for r in reqs)
+
+
+# ---------------------------------------------------------------------------
 # Prefix sharing on == off, token for token (incl. per-layer profile)
 # ---------------------------------------------------------------------------
 # The trace makes every sharing mechanism fire: a common system prompt whose
@@ -143,8 +258,12 @@ for tag, kw in [("kv0", dict(kv_bits=0)), ("kv8", dict(kv_bits=8)),
                 ("kv4", dict(kv_bits=4)),
                 ("profile", dict(kv_profile=profile))]:
     for prefill in ("bucketed", "stepwise"):
+        # prefill_batch=1: compare sharing on/off at EQUAL prefill
+        # discipline (auto would batch only the off side, muddying the
+        # forward-count assertion; batched-vs-sequential identity has its
+        # own test)
         base = dict(batch_size=2, max_len=32, page_size=8, prefill=prefill,
-                    prefill_bucket=8, **kw)
+                    prefill_bucket=8, prefill_batch=1, **kw)
         off = BatchedServer(cfg, params, prefix_cache="off", **base)
         out_off = off.run(mk())
         on = BatchedServer(cfg, params, prefix_cache="on", **base)
@@ -375,6 +494,105 @@ def test_pallas_attn_impl_serving_smoke(smoke_model):
     agree = np.mean([np.mean(np.asarray(x.out) == np.asarray(y.out))
                      for x, y in zip(out_a, out_b)])
     assert all(r.done for r in out_b)
+    assert agree >= 0.9, agree
+
+
+@pytest.mark.parametrize("kv_bits", [0, 8, 4])
+def test_pallas_chunk_prefill_matches_gather_fragmented(kv_bits):
+    """gqa_apply with a PREFILL CHUNK (S > 1) and attn_impl="pallas" routes
+    the variable-length chunk kernel and matches the gather path on a
+    fragmented page table with per-row start positions that straddle page
+    boundaries (partial last pages included) — the S>=1 generalization of
+    the decode oracle test above."""
+    cfg = get_smoke_config("qwen2-72b")
+    rng = np.random.default_rng(17)
+    B, ps, NP, S = 3, 8, 4, 6
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    quant = (None if kv_bits == 0 else
+             KVQuantSpec(2, kv_bits - 2, "int8" if kv_bits == 8 else "int4"))
+    cache = init_paged_kv_cache(1 + B * NP, ps, KV, hd,
+                                cfg.compute_jnp_dtype, quant)
+    ids = np.arange(1, 1 + B * NP)
+    rng.shuffle(ids)
+    pt = jnp.asarray(ids.reshape(B, NP).astype(np.int32))
+    lens = np.array([0, 5, ps * 2 + 3], np.int32)  # history before the chunk
+    for t in range(int(lens.max())):
+        k = jnp.asarray(rng.normal(size=(B, 1, KV, hd)) * 0.5, jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, 1, KV, hd)) * 0.5, jnp.float32)
+        pos = jnp.asarray(np.minimum(t, np.maximum(lens - 1, 0)), jnp.int32)
+        cache = paged_cache_update(cache, k, v, pt, pos, quant)
+
+    params = init_gqa(jax.random.PRNGKey(1), cfg)
+    x = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)) * 0.3,
+                    cfg.compute_jnp_dtype)
+    cache_pos = jnp.asarray(lens, jnp.int32)
+    positions = cache_pos[:, None] + jnp.arange(S)[None, :]
+    outs = {}
+    for impl in ("gather", "pallas"):
+        y, _ = gqa_apply(params, x, positions, cfg=cfg, cache=cache,
+                         cache_pos=cache_pos, kv_quant=quant,
+                         page_table=pt, attn_impl=impl)
+        outs[impl] = np.asarray(y, np.float32)
+    np.testing.assert_allclose(outs["pallas"], outs["gather"],
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_pallas_chunk_prefill_padded_tail_matches_gather():
+    """A padded bucketed-prefill chunk (kv_valid_len < S): the kernel and
+    gather paths agree on every REAL query row; padded rows are garbage
+    nobody reads (their pool writes go to the scratch page)."""
+    cfg = get_smoke_config("qwen2-72b")
+    rng = np.random.default_rng(23)
+    B, ps, NP, S, valid = 2, 8, 3, 8, 5
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    quant = KVQuantSpec(2, 6, "int8")
+    cache = init_paged_kv_cache(1 + B * NP, ps, KV, hd,
+                                cfg.compute_jnp_dtype, quant)
+    ids = np.arange(1, 1 + B * NP)
+    rng.shuffle(ids)
+    pt = jnp.asarray(ids.reshape(B, NP).astype(np.int32))
+    params = init_gqa(jax.random.PRNGKey(1), cfg)
+    x = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)) * 0.3,
+                    cfg.compute_jnp_dtype)
+    cache_pos = jnp.asarray([0, 3], jnp.int32)
+    positions = cache_pos[:, None] + jnp.arange(S)[None, :]
+    vl = jnp.asarray([valid, valid], jnp.int32)
+    outs = {}
+    for impl in ("gather", "pallas"):
+        y, _ = gqa_apply(params, x, positions, cfg=cfg, cache=cache,
+                         cache_pos=cache_pos, kv_quant=quant,
+                         page_table=pt, attn_impl=impl, kv_valid_len=vl)
+        outs[impl] = np.asarray(y, np.float32)
+    np.testing.assert_allclose(outs["pallas"][:, :valid],
+                               outs["gather"][:, :valid],
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_pallas_serving_with_mixed_profile(smoke_model):
+    """End-to-end --attn-impl pallas over a MIXED per-layer precision
+    profile (int8/int4/fp containers via _segment_scan_grouped): bucketed
+    chunk prefill and decode both route the kernel per-layer-bits, and the
+    server agrees with the gather reference on ~all tokens."""
+    from repro.core.fixedpoint import FixedPointFormat
+    from repro.core.policy import LayerPolicy, PrecisionPolicy
+    cfg, params = smoke_model
+    L = cfg.num_layers
+    profile = PrecisionPolicy(
+        tuple(f"layer_{i:03d}" for i in range(L)),
+        tuple(LayerPolicy(None, None if i == 0
+                          else FixedPointFormat(2, 6 if i % 2 else 2))
+              for i in range(L)))
+    mk = lambda: [Request(i, np.random.default_rng(i).integers(
+        0, cfg.vocab_size, 7 + i).astype(np.int32), 5) for i in range(3)]
+    outs = {}
+    for impl in ("gather", "pallas"):
+        srv = BatchedServer(cfg, params, batch_size=2, max_len=32,
+                            page_size=8, kv_profile=profile, attn_impl=impl,
+                            prefill="bucketed", prefill_bucket=8)
+        outs[impl] = srv.run(mk())
+        assert all(r.done for r in outs[impl])
+    agree = np.mean([np.mean(np.asarray(a.out) == np.asarray(b.out))
+                     for a, b in zip(outs["gather"], outs["pallas"])])
     assert agree >= 0.9, agree
 
 
