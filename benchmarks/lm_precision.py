@@ -43,6 +43,54 @@ def train_small_lm(cfg, dcfg, steps=300, lr=1e-3, verbose=True):
     return params
 
 
+def decode_agreement(ref_outs, test_outs):
+    """Token agreement between two decode runs of the SAME requests.
+
+    ``ref_outs``/``test_outs`` are parallel lists of generated-token
+    sequences (e.g. ``[r.out for r in requests]`` from launch.serve).
+    Returns per-request agreement plus the token-weighted overall rate —
+    the serving analogue of next-token top-1 against a reference run
+    (the paper's accuracy-vs-precision gate, §2.3, applied to online
+    requantization instead of a static policy)."""
+    per_request, hits, total = [], 0, 0
+    for ref, test in zip(ref_outs, test_outs):
+        ref, test = np.asarray(ref), np.asarray(test)
+        n = min(len(ref), len(test))
+        h = int(np.sum(ref[:n] == test[:n]))
+        per_request.append(h / max(n, 1))
+        hits += h
+        total += n
+    return {"overall": hits / max(total, 1), "per_request": per_request}
+
+
+def accuracy_gate(ref_outs, test_outs, *, min_agreement=0.9,
+                  request_floor=0.5, allowed_below_floor=0.0):
+    """Gate a reduced-precision decode run against its reference: overall
+    token agreement must reach ``min_agreement`` AND at most an
+    ``allowed_below_floor`` fraction of requests may fall below
+    ``request_floor`` (an average hiding garbled requests is not within
+    tolerance). The allowance exists because near-uniform logits — e.g. a
+    random-init smoke model — can flip an argmax tie under ANY bounded KV
+    perturbation and a short request then diverges completely; that is
+    tie chaos, not garbling, so a bounded fraction is tolerated while a
+    systematic failure still trips the gate. Returns the agreement stats
+    with a ``violations`` count — 0 means the gate passed."""
+    agg = decode_agreement(ref_outs, test_outs)
+    below = sum(1 for a in agg["per_request"] if a < request_floor)
+    allowance = int(allowed_below_floor * len(agg["per_request"]))
+    violations = max(0, below - allowance)
+    if agg["overall"] < min_agreement:
+        violations += 1
+    return {"agreement": agg["overall"],
+            "per_request": agg["per_request"],
+            "min_agreement": min_agreement,
+            "request_floor": request_floor,
+            "below_floor": below,
+            "allowed_below_floor": allowance,
+            "violations": violations,
+            "passed": violations == 0}
+
+
 def lm_topk_accuracy(params, cfg, dcfg, quant=None, batches=2):
     hits = tot = 0
     for b in lm_eval_stream(dcfg, batches):

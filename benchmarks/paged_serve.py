@@ -41,13 +41,24 @@ restart (snapshot -> fresh server -> restore). It RAISES on any rejected
 waitable request, an unresumed preemption victim, an allocator refcount
 leak, or a host-tier page leak — the CI overcommit-smoke gate.
 
+A fourth, **adaptation workload** (``run_adapt`` / ``--workload adapt``)
+serves a many-tenant overcommitted trace with --kv-adapt off vs on: with
+adaptation on, pool pressure REQUANTIZES cold cached prefix pages one
+container step narrower (fp -> int8 -> int4) into a bounded device tier
+*before* any host round trip. It gates (RAISES) on >=1 requantization
+before the first host demotion, >=2x device-held tokens before the first
+round trip vs adapt-off, the lm_precision accuracy gate (>=0.9 token
+agreement vs the byte-exact adapt-off reference, zero violations), and
+pool/host/tier leak checks — the CI adapt-smoke gate.
+
 Results land in results/paged_serve.json (+ results/prefix_serve.json,
-results/overcommit_serve.json) AND append a trajectory point to the
-repo-root BENCH_serve.json so the perf trend is tracked across PRs.
+results/overcommit_serve.json, results/adapt_serve.json) AND append a
+trajectory point to the repo-root BENCH_serve.json so the perf trend is
+tracked across PRs.
 
 Run:  PYTHONPATH=src python -m benchmarks.paged_serve [--arch qwen2-72b]
       [--page-size 16] [--requests 12] [--fast]
-      [--workload all|mixed|prefix|overcommit]
+      [--workload all|mixed|prefix|overcommit|adapt]
 (--fast = CI smoke: tiny trace, one bench iteration per config.)
 """
 from __future__ import annotations
@@ -520,6 +531,183 @@ def run_overcommit(*, arch="qwen2-72b", verbose=True, fast=False):
     return res
 
 
+def mk_adapt_requests(vocab, sys_len, *, groups, per_group, reuse_groups,
+                      seed=0):
+    """Adaptation trace: ``groups`` tenants, each sharing its OWN system
+    prompt across ``per_group`` requests — many distinct cached chains, so
+    pool pressure must park cold ones — plus a late second wave re-issuing
+    the first ``reuse_groups`` tenants' prompts verbatim (their pages are
+    parked in the quant tier by then: the re-hits exercise the LOSSY
+    promotion path, which is where the accuracy gate earns its keep)."""
+    from repro.launch.serve import Request
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, vocab, sys_len).astype(np.int32)
+                for _ in range(groups)]
+    reqs, rid = [], 0
+    wave2 = []
+    for g in range(groups):
+        for _ in range(per_group):
+            prompt = np.concatenate(
+                [prefixes[g], rng.integers(0, vocab, 5).astype(np.int32)])
+            reqs.append(Request(rid, prompt, 4))
+            rid += 1
+            if g < reuse_groups:
+                wave2.append(prompt)
+    for prompt in wave2:
+        reqs.append(Request(rid, prompt.copy(), 4, arrive_step=30))
+        rid += 1
+    return reqs
+
+
+def run_adapt(*, arch="qwen2-72b", verbose=True, fast=False):
+    """Online-precision-adaptation workload (--kv-adapt): the same
+    many-tenant overcommitted trace served twice through an identical
+    small pool + host tier, adapt OFF (byte-exact demote/drop relief
+    only) vs adapt ON (cold cached pages REQUANTIZE one container step
+    narrower into the bounded device tier before any host round trip).
+
+    Gates (RAISES — the CI adapt-smoke step):
+      * the off run must actually pressure the pool into host demotions
+        (otherwise the comparison is vacuous);
+      * the adapt run must requantize >= 1 page BEFORE its first host
+        demotion (here: absorb the whole trace with ZERO demotions);
+      * device-held tokens before the first host round trip must be
+        >= 2x the off run's (pool capacity + peak parked tier pages);
+      * the lm_precision accuracy gate must pass with ZERO violations:
+        >= 0.9 overall token agreement vs the adapt-off reference and no
+        single request below the per-request floor (requant error is
+        bounded; a garbled request would hide inside a high average)."""
+    from .lm_precision import accuracy_gate
+    cfg = get_smoke_config(arch)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    groups, per_group, reuse = (5, 2, 2) if fast else (7, 2, 2)
+    sys_len, page_size, max_len, batch = 8, 4, 64, 2
+    num_pages = 1 + 9
+    usable = num_pages - 1
+    mk = lambda: mk_adapt_requests(cfg.vocab_size, sys_len, groups=groups,
+                                   per_group=per_group, reuse_groups=reuse,
+                                   seed=0)
+    # fp pool: the requant ladder starts at fp -> int8 (deepen reaches
+    # int4), so the one-step promotion error stays small; the tier byte
+    # budget is 4x the pool, quoted in int4-page equivalents (= 2x the
+    # pool in int8-parked pages)
+    common = dict(batch_size=batch, max_len=max_len, page_size=page_size,
+                  num_pages=num_pages, prefix_cache="on",
+                  kv_offload="host", prefill_batch=1)
+
+    def serve(**kw):
+        srv = BatchedServer(cfg, params, **common, **kw)
+        t0 = time.time()
+        reqs = srv.run(mk())
+        return srv, reqs, time.time() - t0
+
+    off, reqs_off, dt_off = serve(kv_adapt="off")
+    on, reqs_on, dt_on = serve(kv_adapt="on", adapt_pages=4 * usable)
+    s_off = off.prefix_cache.stats()
+    s_on = on.prefix_cache.stats()
+
+    # --- gate: the trace genuinely overcommits the pool ---
+    if s_off["demotions"] < 1:
+        raise RuntimeError(
+            f"adapt trace failed to pressure the pool: adapt-off run paid "
+            f"{s_off['demotions']} host demotions (expected >= 1)")
+    # --- gate: requantization relieves pressure BEFORE the host tier ---
+    if s_on["requants"] < 1:
+        raise RuntimeError("adapt run performed no requantizations")
+    if s_on["demotions"] > 0 and not (s_on["requants_at_first_demotion"]
+                                      or 0) >= 1:
+        raise RuntimeError(
+            f"adapt run demoted to host before its first requantization "
+            f"(requants_at_first_demotion="
+            f"{s_on['requants_at_first_demotion']})")
+    # --- gate: >= 2x tokens held on device before the first round trip ---
+    tier_peak = on.quant_tier.peak_pages
+    tokens_off = usable * page_size
+    tokens_on = ((usable + tier_peak) * page_size
+                 if s_on["demotions"] == 0 else tokens_off)
+    token_ratio = tokens_on / tokens_off
+    if token_ratio < 2.0:
+        raise RuntimeError(
+            f"adaptation held only {token_ratio:.2f}x the off run's tokens "
+            f"before the first host round trip (expected >= 2x: pool "
+            f"{usable} pages + tier peak {tier_peak}, "
+            f"{s_on['demotions']} demotions)")
+    # --- gate: accuracy within tolerance (the off run round-trips bytes
+    # exactly, so it IS the faithful reference) ---
+    # allowed_below_floor: on a random-init smoke model one argmax tie
+    # flip fully diverges a 4-token request — a bounded fraction of those
+    # is tie chaos (see lm_precision.accuracy_gate), systematic garbling
+    # still trips the overall floor
+    gate = accuracy_gate([r.out for r in reqs_off],
+                         [r.out for r in reqs_on],
+                         min_agreement=0.9, request_floor=0.5,
+                         allowed_below_floor=0.15)
+    if not gate["passed"]:
+        raise RuntimeError(
+            f"accuracy gate: {gate['violations']} violations "
+            f"(overall agreement {gate['agreement']:.1%}, "
+            f"per-request min {min(gate['per_request']):.1%})")
+
+    inv = on.kv_inventory()
+    # --- leak gates: pool, host tier AND quant tier drain to zero ---
+    for tag, s in [("off", off), ("on", on)]:
+        leaked = s.release_prefix_cache()
+        if leaked or s.allocator.num_free != s.allocator.num_usable:
+            raise RuntimeError(
+                f"refcount leak (adapt {tag}): {leaked} cache pages, "
+                f"{s.allocator.num_usable - s.allocator.num_free} "
+                f"unreturned")
+        if s.host_store.num_pages != 0:
+            raise RuntimeError(f"host-tier leak (adapt {tag}): "
+                               f"{s.host_store.num_pages} pages parked")
+    if on.quant_tier.num_pages != 0 or on.quant_tier.nbytes != 0:
+        raise RuntimeError(
+            f"quant-tier leak: {on.quant_tier.num_pages} pages / "
+            f"{on.quant_tier.nbytes} bytes still parked after release")
+
+    res = {
+        "arch": arch, "requests": len(reqs_on), "batch": batch,
+        "page_size": page_size, "device_pages": usable,
+        "tenant_groups": groups,
+        "requants": s_on["requants"], "deepens": s_on["deepens"],
+        "tier_promotions": s_on["tier_promotions"],
+        "tier_peak_pages": tier_peak,
+        "tier_peak_bytes": on.quant_tier.peak_bytes,
+        "requants_at_first_demotion": s_on["requants_at_first_demotion"],
+        "demotions_off": s_off["demotions"],
+        "demotions_on": s_on["demotions"],
+        "evictions_off": s_off["evictions"],
+        "evictions_on": s_on["evictions"],
+        "tokens_before_host_off": tokens_off,
+        "tokens_before_host_on": tokens_on,
+        "token_ratio_vs_off": token_ratio,
+        "accuracy_gate": {k: gate[k] for k in
+                          ("agreement", "violations", "passed")},
+        "kv_inventory": inv,
+        "tokens_per_s_on": sum(len(r.out) for r in reqs_on) / max(dt_on,
+                                                                  1e-9),
+        "tokens_per_s_off": sum(len(r.out) for r in reqs_off) / max(dt_off,
+                                                                    1e-9),
+    }
+    if verbose:
+        print(f"[adapt_serve] arch={arch} {groups} tenants x {per_group} "
+              f"reqs + {reuse * per_group} re-hits onto a {usable}-page "
+              f"pool (batch={batch})")
+        print(f"  adapt off: {s_off['demotions']} host demotions, "
+              f"{s_off['evictions']} destructive evictions")
+        print(f"  adapt on: {s_on['requants']} requants "
+              f"({s_on['deepens']} deepens, {s_on['tier_promotions']} lossy "
+              f"promotions), {s_on['demotions']} host demotions; tier peak "
+              f"{tier_peak} pages / {on.quant_tier.peak_bytes / 2**10:.1f} "
+              f"KiB {inv['tier_by_container']}")
+        print(f"  tokens before first host round trip: {tokens_off} -> "
+              f"{tokens_on} ({token_ratio:.1f}x)")
+        print(f"  accuracy gate: agreement {gate['agreement']:.1%}, "
+              f"{gate['violations']} violations; no leaks")
+    save_json("adapt_serve.json", res)
+    return res
+
+
 def _append_trajectory(point):
     """BENCH_serve.json accumulates one point per bench run, so the serving
     perf trend is visible across PRs (the driver diffs it)."""
@@ -538,8 +726,9 @@ def _append_trajectory(point):
 
 def run(*, arch="qwen2-72b", requests=10, batch=4, max_len=64, page_size=16,
         verbose=True, fast=False, workload="all"):
-    if workload in ("prefix", "overcommit"):
-        fn = run_prefix if workload == "prefix" else run_overcommit
+    if workload in ("prefix", "overcommit", "adapt"):
+        fn = {"prefix": run_prefix, "overcommit": run_overcommit,
+              "adapt": run_adapt}[workload]
         res = fn(arch=arch, verbose=verbose, fast=fast)
         point = {"when": time.strftime("%Y-%m-%d %H:%M:%S"), "arch": arch,
                  "fast": fast, "summary": {workload: res}}
@@ -643,14 +832,19 @@ def main(argv=None):
     ap.add_argument("--fast", action="store_true",
                     help="CI smoke: tiny trace, single iteration per config")
     ap.add_argument("--workload",
-                    choices=["all", "mixed", "prefix", "overcommit"],
+                    choices=["all", "mixed", "prefix", "overcommit",
+                             "adapt"],
                     default="all",
                     help="mixed = the PR-2 mixed-length trace; prefix = the "
                          "shared-system-prompt trace (prefix cache on/off, "
                          "per-layer profile, refcount-leak gate); "
                          "overcommit = offered pages >> device pool through "
                          "the tiered store (offload + preemption + restart "
-                         "parity; refcount/host-leak gates)")
+                         "parity; refcount/host-leak gates); adapt = the "
+                         "online-requantization trace (--kv-adapt on vs "
+                         "off: requant-before-demote ordering, >=2x tokens "
+                         "before the first host round trip, lm_precision "
+                         "accuracy gate)")
     args = ap.parse_args(argv)
     run(arch=args.arch, requests=args.requests, batch=args.batch,
         max_len=args.max_len, page_size=args.page_size, fast=args.fast,

@@ -71,6 +71,32 @@ Since PR 4 the bounded device pool is backed by a **tiered page store**:
   rejects arch mismatches. Restored pages land in the HOST tier (zero
   device pages until a hit promotes them).
 
+Since PR 6 pool pressure can *narrow* pages before it evicts them —
+**online precision adaptation** (``kv_adapt="on"`` / ``--kv-adapt on``;
+needs the paged pool + prefix cache):
+
+* the eviction chain becomes requantize -> host-demote -> drop: a cold,
+  unreferenced cached prefix page is re-quantized one container step
+  (fp -> int8 -> int4; fresh per-page max-abs scales, stale tail slots
+  masked out of calibration) and PARKED in a device-resident quant tier
+  instead of paying a host round trip. ``--kv-adapt-pages`` bounds the
+  tier in int4-floor page-byte units (0 = auto: the pool size);
+  ``--kv-adapt-floor {4,8}`` sets the narrowing floor (8 stops at int8,
+  e.g. when accuracy headroom is thin).
+* under continued pressure parked pages *deepen* toward the floor
+  (int8 -> int4) to make byte room; only when the tier is genuinely full
+  does eviction fall back to the PR-4 host tier and then the PR-3
+  destructive drop.
+* a later hit promotes a parked page back: the narrowed grid widens
+  exactly into the pool's native container. The narrowing rounding loss
+  is permanent — ``benchmarks.lm_precision.accuracy_gate`` prices it, and
+  the ``--workload adapt`` bench gates >= 0.9 token agreement against the
+  byte-exact adapt-off reference.
+* ``OutOfPagesError.requantizable`` reports how many cold cached pages
+  could still be narrowed right now (the operator hint that --kv-adapt
+  headroom exists). With ``--kv-adapt off`` all of the above is bitwise
+  inert (asserted in tests/test_serve_fast.py).
+
 Error/failure semantics: paged admission preflights a request's WORST-CASE
 page demand (prompt + max_new; with prefix sharing, only the non-shared
 suffix plus one promotion page per matched host page is charged). A
@@ -223,6 +249,32 @@ def main():
           f"({s2['promotions']} host pages promoted on demand)")
     for s in (srv_t, srv_t2):
         assert s.release_prefix_cache() == 0 and s.host_store.num_pages == 0
+
+    print("=== online precision adaptation: requantize before demote ===")
+    rng = np.random.default_rng(9)
+    mk_adapt = lambda: [
+        Request(i, np.concatenate([
+            np.asarray(tenant, np.int32),
+            rng.integers(0, cfg.vocab_size, 3).astype(np.int32)]), 8)
+        for i, tenant in enumerate(
+            rng.integers(0, cfg.vocab_size, (4, 18)))]
+    srv_ad = BatchedServer(cfg, params, batch_size=2, max_len=96, kv_bits=8,
+                           page_size=16, num_pages=6,   # 5 usable: too small
+                           prefix_cache="on", kv_offload="host",
+                           kv_adapt="on")
+    reqs_ad = srv_ad.run(mk_adapt(), verbose=True)
+    st = srv_ad.prefix_cache.stats()
+    print(f"  eviction chain requant->demote->drop: {st['requants']} "
+          f"page(s) narrowed in place, {st['deepens']} deepened toward the "
+          f"int4 floor, {st['demotions']} host demotion(s) "
+          f"(requants before the first: {st['requants_at_first_demotion']}), "
+          f"{st['tier_promotions']} parked page(s) promoted on a later hit")
+    print(f"  kv inventory (device/host/tier): {srv_ad.kv_inventory()}")
+    print(f"  every request completed: "
+          f"{all(r.done and r.error is None for r in reqs_ad)}")
+    assert srv_ad.release_prefix_cache() == 0
+    assert srv_ad.quant_tier.num_pages == 0
+    assert srv_ad.host_store.num_pages == 0
 
     # admission preflight: a request whose prompt + max_new can never be
     # backed by the pool is rejected with counts — recorded on the request

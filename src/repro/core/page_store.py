@@ -23,6 +23,12 @@ bound can spill into and refill from:
   quantization profile key it was written under, so an int8 snapshot can
   never back an int4 server, and a geometry signature guards against arch
   mismatches.
+* :func:`requantize_page` / :class:`QuantTierStore` add the ONLINE
+  precision-adaptation tier (ROADMAP item 4): under pool pressure a cold
+  page is repacked one container step narrower (fp -> int8 -> int4) with
+  freshly calibrated per-page scales and parked on device — cheaper than
+  the host round trip, bounded in bytes, lossy only by the narrower grid's
+  rounding error (which the adapt bench's accuracy gate measures).
 """
 from __future__ import annotations
 
@@ -33,10 +39,14 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from .paged_kv import iter_kv_pools, map_kv_pools, pool_container
+from .paged_kv import (_SCALE_EPS, iter_kv_pools, map_kv_pools,
+                       pool_container)
+from .qtensor import pack_bits, unpack_bits, values_per_word
 
-__all__ = ["PageBlob", "HostPageStore", "TieredPager", "extract_page",
-           "inject_page", "cache_geometry", "save_prefix_snapshot",
+__all__ = ["PageBlob", "HostPageStore", "TieredPager", "QuantTierStore",
+           "extract_page", "inject_page", "requantize_page",
+           "requantize_blob", "widen_blob", "narrower_container",
+           "cache_geometry", "save_prefix_snapshot",
            "load_prefix_snapshot"]
 
 _FIELDS = ("k", "v", "ks", "vs")
@@ -254,6 +264,308 @@ class TieredPager:
         self._set(inject_page(self._get(), blob, page))
         self.promotions += 1
         return page
+
+
+# ---------------------------------------------------------------------------
+# Online requantization (ROADMAP item 4): fp -> int8 -> int4 in place
+# ---------------------------------------------------------------------------
+_QMAX = {"int8": 127.0, "int4": 7.0}
+_NARROWER = {"fp": "int8", "int8": "int4", "int4": "int4"}
+
+
+def _rec_container(rec) -> str:
+    """Storage container of one blob record, inferred from the k dtype
+    (float -> fp, int8 -> int8, packed int32 words -> int4)."""
+    dt = np.dtype(rec["k"].dtype)
+    if np.issubdtype(dt, np.floating):
+        return "fp"
+    return "int8" if dt == np.dtype(np.int8) else "int4"
+
+
+def _rec_head_dim(rec) -> int:
+    """Logical head dim of a record (int4 stores head_dim/8 packed words)."""
+    hd = int(rec["k"].shape[-1])
+    return hd * values_per_word(4) if _rec_container(rec) == "int4" else hd
+
+
+def narrower_container(container: str, *, head_dim: int,
+                       floor_bits: int = 4) -> str:
+    """One step down the adaptation ladder fp -> int8 -> int4.
+
+    Returns ``container`` unchanged at the floor. ``floor_bits=8`` stops
+    the descent at int8; a head dim that int4 lane-packing cannot express
+    (head_dim % 8 != 0) floors that pool at int8 regardless.
+    """
+    nxt = _NARROWER[container]
+    if nxt == "int4" and (floor_bits > 4
+                          or head_dim % values_per_word(4) != 0):
+        return "int8" if container == "fp" else container
+    return nxt
+
+
+def _bcast_scale(s: np.ndarray) -> np.ndarray:
+    """Per-(layer-)page scale broadcast over (page_size, KV, head_dim)."""
+    s = np.asarray(s, np.float32)
+    return s.reshape(s.shape + (1, 1, 1))
+
+
+def _dequant_plane(q: np.ndarray, scale: np.ndarray, container: str,
+                   head_dim: int) -> np.ndarray:
+    if container == "int4":
+        q = np.asarray(unpack_bits(jnp.asarray(q), 4, head_dim))
+    return q.astype(np.float32) * _bcast_scale(scale)
+
+
+def _quant_plane(vals: np.ndarray, container: str):
+    """Freshly calibrated per-(layer-)page max-abs quantization."""
+    qmax = _QMAX[container]
+    amax = np.max(np.abs(vals), axis=(-3, -2, -1))
+    scale = np.maximum(amax / qmax, _SCALE_EPS).astype(np.float32)
+    grid = np.clip(np.round(vals / _bcast_scale(scale)), -qmax, qmax)
+    if container == "int4":
+        packed, _ = pack_bits(jnp.asarray(grid, jnp.int32), 4)
+        return np.asarray(packed), scale
+    return grid.astype(np.int8), scale
+
+
+def requantize_blob(blob: PageBlob, *, steps: Optional[int] = 1,
+                    floor_bits: int = 4,
+                    valid_len: Optional[int] = None
+                    ) -> Tuple[PageBlob, int]:
+    """Repack every pool record of one page toward a narrower container.
+
+    Each record steps down the fp -> int8 -> int4 ladder ``steps`` times
+    (``None`` = all the way to its floor) with a freshly calibrated
+    per-(layer-)page max-abs scale. The per-page scale machinery in
+    ``paged_gather`` dequantizes the result no matter which container the
+    destination pool was built for — an fp pool legally holds int8-grid
+    values under a non-unit scale — so narrowed pages stay readable by the
+    unmodified attention path. ``valid_len`` zeroes token slots past a
+    partial page's written count before calibration, so stale garbage
+    cannot inflate the scale. Returns ``(new_blob, records_narrowed)``;
+    records already at their floor pass through untouched.
+    """
+    out: List[Dict[str, np.ndarray]] = []
+    narrowed = 0
+    for rec in blob.arrays:
+        cur = _rec_container(rec)
+        hd = _rec_head_dim(rec)
+        tgt = cur
+        for _ in range(64 if steps is None else steps):
+            nxt = narrower_container(tgt, head_dim=hd,
+                                     floor_bits=floor_bits)
+            if nxt == tgt:
+                break
+            tgt = nxt
+        if tgt == cur:
+            out.append(dict(rec))
+            continue
+        k = _dequant_plane(rec["k"], rec["ks"], cur, hd)
+        v = _dequant_plane(rec["v"], rec["vs"], cur, hd)
+        if valid_len is not None and valid_len < k.shape[-3]:
+            k[..., valid_len:, :, :] = 0.0
+            v[..., valid_len:, :, :] = 0.0
+        kq, ks = _quant_plane(k, tgt)
+        vq, vs = _quant_plane(v, tgt)
+        out.append({"k": kq, "v": vq, "ks": ks, "vs": vs})
+        narrowed += 1
+    return PageBlob(out), narrowed
+
+
+def requantize_page(caches, page: int, *, steps: Optional[int] = 1,
+                    floor_bits: int = 4,
+                    valid_len: Optional[int] = None
+                    ) -> Tuple[PageBlob, int]:
+    """Extract + requantize one logical page (see :func:`requantize_blob`).
+
+    The narrowed blob does NOT go back into its source page — the point is
+    that the source pool's container is wider. Callers park it in a
+    :class:`QuantTierStore` (freeing the device page before any host
+    demotion) or widen + inject it into a matching pool later.
+    """
+    return requantize_blob(extract_page(caches, page), steps=steps,
+                           floor_bits=floor_bits, valid_len=valid_len)
+
+
+def widen_blob(blob: PageBlob, caches) -> PageBlob:
+    """Convert a (possibly narrowed) blob into each pool's NATIVE container
+    so :func:`inject_page` can write it back.
+
+    Grid widening is exact: an int4 grid unpacks into an int8 pool with its
+    scale carried, and any grid dequantizes into an fp pool (scale folded
+    into the floats, page scale reset to 1 — fp pools rely on unit scales
+    when a recycled page takes fresh fp writes). The rounding loss of the
+    original narrowing step is NOT undone; that is the accuracy cost the
+    adapt gate measures.
+    """
+    pools = list(iter_kv_pools(caches))
+    if len(pools) != len(blob.arrays):
+        raise ValueError("blob/pool record count mismatch")
+    out: List[Dict[str, np.ndarray]] = []
+    for rec, (pool, _) in zip(blob.arrays, pools):
+        cur = _rec_container(rec)
+        tgt = pool_container(pool)
+        hd = _rec_head_dim(rec)
+        if cur == tgt:
+            out.append(dict(rec))
+        elif tgt == "fp":
+            dt = np.dtype(pool["k_pages"].dtype)
+            one = np.ones_like(np.asarray(rec["ks"], np.float32))
+            out.append({
+                "k": _dequant_plane(rec["k"], rec["ks"], cur, hd)
+                .astype(dt),
+                "v": _dequant_plane(rec["v"], rec["vs"], cur, hd)
+                .astype(dt),
+                "ks": one, "vs": one.copy()})
+        elif tgt == "int8" and cur == "int4":
+            out.append({
+                "k": np.asarray(unpack_bits(jnp.asarray(rec["k"]), 4,
+                                            hd)).astype(np.int8),
+                "v": np.asarray(unpack_bits(jnp.asarray(rec["v"]), 4,
+                                            hd)).astype(np.int8),
+                "ks": rec["ks"], "vs": rec["vs"]})
+        else:
+            raise ValueError(
+                f"cannot widen a {cur!r} record into a {tgt!r} pool")
+    return PageBlob(out)
+
+
+class QuantTierStore:
+    """Bounded DEVICE-resident requantization tier (ROADMAP item 4).
+
+    Under pool pressure the prefix cache requantizes a cold page one
+    container step narrower (freshly calibrated scales) and parks the
+    narrowed blob here — still on device, so the page never pays the host
+    round trip — then frees the original page. A parked page re-enters the
+    pool through :meth:`restore` (widen + inject into a fresh page,
+    carrying the narrower grid's rounding loss), or narrows further under
+    continued byte pressure (:meth:`deepen`, the fp -> int8 -> int4
+    progression). Capacity is bounded in BYTES — ``pages`` fully-floored
+    page equivalents — so the relief valve itself honors the paper's
+    bounded-memory contract.
+    """
+
+    def __init__(self, get_caches, set_caches, *, pages: int,
+                 floor_bits: int = 4):
+        if pages < 1:
+            raise ValueError("quant tier needs >= 1 page of capacity")
+        if floor_bits not in (4, 8):
+            raise ValueError("floor_bits must be 4 or 8")
+        self._get = get_caches
+        self._set = set_caches
+        self.floor_bits = floor_bits
+        # probe real geometry off the scratch page: bytes of one page
+        # narrowed a single step (admission size) and all the way down
+        # (the capacity unit)
+        step_blob, can_narrow = requantize_page(get_caches(), 0, steps=1,
+                                                floor_bits=floor_bits)
+        floor_blob, _ = requantize_page(get_caches(), 0, steps=None,
+                                        floor_bits=floor_bits)
+        if not can_narrow:
+            raise ValueError(
+                "quant tier has nothing to narrow: every pool is already "
+                "at its floor container")
+        self.page_bytes_step = step_blob.nbytes
+        self.page_bytes_floor = floor_blob.nbytes
+        self.max_bytes = pages * self.page_bytes_floor
+        self._recs: Dict[int, List[Dict[str, jnp.ndarray]]] = {}
+        self._nb: Dict[int, int] = {}
+        self._next = 0
+        self.nbytes = 0
+        self.puts = 0
+        self.pops = 0
+        self.drops = 0
+        self.deepens = 0
+        self.peak_pages = 0
+        self.peak_bytes = 0
+
+    @property
+    def num_pages(self) -> int:
+        return len(self._recs)
+
+    def room_pages(self) -> int:
+        """How many more one-step-narrowed pages fit before any deepening —
+        the conservative figure admission preflight reports."""
+        return max(0, (self.max_bytes - self.nbytes)
+                   // max(self.page_bytes_step, 1))
+
+    def has_room(self, blob: PageBlob) -> bool:
+        return self.nbytes + blob.nbytes <= self.max_bytes
+
+    def requantize(self, page: int,
+                   valid_len: Optional[int] = None) -> Optional[PageBlob]:
+        """One-step-narrower blob of device ``page`` (None: every pool is
+        already at its floor — nothing to gain, let the host tier take
+        it)."""
+        blob, n = requantize_page(self._get(), page, steps=1,
+                                  floor_bits=self.floor_bits,
+                                  valid_len=valid_len)
+        return blob if n else None
+
+    def put(self, blob: PageBlob) -> int:
+        if not self.has_room(blob):
+            raise RuntimeError("quant tier byte budget exhausted; deepen "
+                               "parked pages or demote to host instead")
+        h = self._next
+        self._next += 1
+        # device-resident: the narrowed bytes live in accelerator memory
+        self._recs[h] = [{f: jnp.asarray(rec[f]) for f in _FIELDS}
+                         for rec in blob.arrays]
+        self._nb[h] = blob.nbytes
+        self.nbytes += blob.nbytes
+        self.puts += 1
+        self.peak_pages = max(self.peak_pages, self.num_pages)
+        self.peak_bytes = max(self.peak_bytes, self.nbytes)
+        return h
+
+    def _host_blob(self, handle: int) -> PageBlob:
+        return PageBlob([{f: np.asarray(rec[f]) for f in _FIELDS}
+                         for rec in self._recs[handle]])
+
+    def deepen(self, handle: int,
+               valid_len: Optional[int] = None) -> int:
+        """Narrow a parked page one more step in place; returns the bytes
+        freed (0 = already at the floor)."""
+        before = self._nb[handle]
+        blob, n = requantize_blob(self._host_blob(handle), steps=1,
+                                  floor_bits=self.floor_bits,
+                                  valid_len=valid_len)
+        if n == 0 or blob.nbytes >= before:
+            return 0
+        self._recs[handle] = [{f: jnp.asarray(rec[f]) for f in _FIELDS}
+                              for rec in blob.arrays]
+        self._nb[handle] = blob.nbytes
+        self.nbytes -= before - blob.nbytes
+        self.deepens += 1
+        return before - blob.nbytes
+
+    def restore(self, handle: int, page: int) -> None:
+        """Widen the parked blob to the pools' native containers, inject it
+        into ``page`` (caller allocated it), release the slot."""
+        blob = widen_blob(self._host_blob(handle), self._get())
+        self._set(inject_page(self._get(), blob, page))
+        self._release(handle)
+        self.pops += 1
+
+    def export(self, handle: int) -> PageBlob:
+        """Pool-native copy of a parked page (the snapshot path); the slot
+        stays parked."""
+        return widen_blob(self._host_blob(handle), self._get())
+
+    def drop(self, handle: int) -> None:
+        self._release(handle)
+        self.drops += 1
+
+    def _release(self, handle: int) -> None:
+        del self._recs[handle]
+        self.nbytes -= self._nb.pop(handle)
+
+    def bytes_by_container(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for h in self._recs:
+            for cont, b in self._host_blob(h).bytes_by_container().items():
+                out[cont] = out.get(cont, 0) + b
+        return out
 
 
 # ---------------------------------------------------------------------------

@@ -58,23 +58,30 @@ class OutOfPagesError(RuntimeError):
     ``written`` pages already holding live KV — under prefix sharing a
     request's demand is suffix-only, so deferral decisions need the split,
     not just the free count. ``evictable`` counts unreferenced prefix-cache
-    pages that eviction could reclaim, ``host_pages`` the pages currently
-    parked in the host-memory tier (demoted prefixes + preempted requests)
-    — together the full device/host/evictable inventory.
+    pages that eviction could reclaim, ``requantizable`` the cold cached
+    pages the quant-adaptation tier could narrow in place (freeing their
+    device pages without a host round trip — why an adapt-enabled pool
+    admits more), ``host_pages`` the pages currently parked in the
+    host-memory tier (demoted prefixes + preempted requests) — together
+    the full device/adapt/host/evictable inventory.
     """
 
     def __init__(self, *, needed: int, free: int, total: int,
                  rid: Optional[int] = None, reserved: int = 0,
-                 written: int = 0, evictable: int = 0, host_pages: int = 0):
+                 written: int = 0, evictable: int = 0,
+                 requantizable: int = 0, host_pages: int = 0):
         self.needed, self.free, self.total, self.rid = needed, free, total, rid
         self.reserved, self.written = reserved, written
         self.evictable = evictable
+        self.requantizable = requantizable
         self.host_pages = host_pages
         who = f"request {rid}" if rid is not None else "allocation"
         extra = ""
-        if reserved or written or evictable or host_pages:
+        if reserved or written or evictable or requantizable or host_pages:
             extra = (f" [{written} written, {reserved} reserved-unwritten, "
-                     f"{evictable} evictable-cached, {host_pages} host-tier]")
+                     f"{evictable} evictable-cached, "
+                     f"{requantizable} requantizable, "
+                     f"{host_pages} host-tier]")
         super().__init__(
             f"KV page pool cannot back {who}: needs {needed} page(s), "
             f"{free} free of {total} usable (page 0 is scratch){extra}; "
@@ -180,7 +187,8 @@ class PageAllocator:
     writeback); nothing in the serving stack registers one today.
     ``host_inventory`` (optional zero-arg callable -> page count) lets
     :class:`OutOfPagesError` report the host-tier inventory alongside the
-    device counts.
+    device counts; ``requant_inventory`` does the same for the pages the
+    quant-adaptation tier could still narrow in place.
     """
 
     def __init__(self, num_pages: int):
@@ -192,6 +200,7 @@ class PageAllocator:
         self.reclaim = None  # optional: n_pages -> n_freed (LRU eviction)
         self.pressure: List = []      # further n -> n_freed callbacks
         self.host_inventory = None    # optional: () -> host-tier page count
+        self.requant_inventory = None  # optional: () -> requantizable pages
 
     @property
     def num_free(self) -> int:
@@ -216,11 +225,18 @@ class PageAllocator:
         if needed > self.num_free:
             raise OutOfPagesError(needed=needed, free=self.num_free,
                                   total=self.num_usable, rid=rid,
+                                  requantizable=self.requant_pages(),
                                   host_pages=self.host_pages())
 
     def host_pages(self) -> int:
         """Pages currently parked in the host tier (0 without a tier)."""
         return int(self.host_inventory()) if self.host_inventory else 0
+
+    def requant_pages(self) -> int:
+        """Cold cached pages the quant tier could narrow in place (0
+        without an adaptation tier)."""
+        return (int(self.requant_inventory())
+                if self.requant_inventory else 0)
 
     def add_pressure(self, fn) -> None:
         """Register an ``n_pages -> n_freed`` pressure callback (tried after
@@ -242,6 +258,7 @@ class PageAllocator:
             self._apply_pressure(1)
         if not self._free:
             raise OutOfPagesError(needed=1, free=0, total=self.num_usable,
+                                  requantizable=self.requant_pages(),
                                   host_pages=self.host_pages())
         page = self._free.pop()
         self._refs[page] = 1
@@ -382,11 +399,20 @@ def _paged_update_page_scale(pool, k_new, v_new, page_table, pos, pids,
     """Per-page max-abs calibrated write (``scale_mode="page"``).
 
     Touched pages form a contiguous block range per row (positions are
-    contiguous), so at most ``ceil((S-1)/ps) + 1`` pages per row are
+    contiguous), so at most ``ceil((S-1)/ps) + 2`` pages per row are
     gathered, requantized under the (possibly raised) new scale, scattered
     back, and only then receive the new tokens. Pages past the row's table
     span and fully-invalid slots redirect to the scratch page, whose content
     is never read un-masked — duplicate scratch scatters are don't-care.
+
+    SHARING CONTRACT: a scale raise rewrites the touched pages' existing
+    grids IN PLACE, which silently changes the dequant values any aliased
+    reader sees — so every page in the written block range must be at
+    refcount 1. The serving layer enforces this (in page-scale mode the
+    prefix cache never retains a page the owner will keep writing, and
+    ``BatchedServer._ensure_page`` asserts refcount 1 on the write-target
+    block); static-scale mode has no such hazard because old grids are
+    never rewritten.
     """
     B, S = k_new.shape[0], k_new.shape[1]
     ps, NP = page_size, page_table.shape[1]

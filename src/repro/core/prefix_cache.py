@@ -15,10 +15,16 @@ new request whose prompt starts with a cached chain can
   (:func:`repro.core.paged_kv.copy_pool_pages`) which the request then
   extends, while the cached source stays byte-identical for other readers.
 
-Nodes live in one of two states:
+Nodes live in one of three states:
 
 * **resident** — ``node.page`` is a device pool page (refcount >= 1, one
   reference owned by the cache);
+* **tier** — the page was *requantized* one container step narrower
+  (fp -> int8 -> int4, ``core.page_store.QuantTierStore``) and parked on
+  device: ``node.tier`` is a tier handle, the original page was freed. A
+  hit still matches; admission restores the node into a fresh page
+  carrying the narrower grid's rounding loss (the accuracy cost the adapt
+  gate measures);
 * **host** — the page's bytes were *demoted* to the host tier
   (``core.page_store``): ``node.host`` is a :class:`HostPageStore` handle,
   no device page is held. A hit through a host node still matches; admission
@@ -42,9 +48,11 @@ Correctness invariants:
   mid-chain node leaves no hole because its bytes survive on the host tier;
   *destroying* a node (drop) stays leaf-only.
 
-Eviction under pool pressure prefers **demotion** (LRU over unreferenced
-resident pages, any trie position) when a pager with host room is attached,
-and falls back to the destructive LRU leaf-first drop otherwise. Admission
+Eviction under pool pressure runs **requant -> demote -> drop**: first the
+LRU cold page is requantized in place onto the quant tier (no host round
+trip, lossy by one container step) when one is attached, then **demotion**
+(LRU over unreferenced resident pages, any trie position) when a pager with
+host room is attached, and the destructive LRU leaf-first drop last. Admission
 pins the nodes of a hit (``node.pins``) so reclaim triggered by its own
 promotions/allocations can never evict the chain out from under it. The
 cache registers itself as the allocator's ``reclaim`` hook: pool pressure
@@ -98,14 +106,15 @@ class _Node:
     holding this node — eviction (demote AND drop) skips pinned nodes.
     """
 
-    __slots__ = ("tokens", "page", "host", "children", "parent", "stamp",
-                 "pins")
+    __slots__ = ("tokens", "page", "host", "tier", "children", "parent",
+                 "stamp", "pins")
 
     def __init__(self, tokens: Tuple[int, ...], page: int, parent,
                  stamp: int, host: Optional[int] = None):
         self.tokens = tokens
         self.page = page
         self.host = host
+        self.tier: Optional[int] = None   # QuantTierStore handle (parked)
         self.children: Dict[Tuple[int, ...], "_Node"] = {}
         self.parent = parent
         self.stamp = stamp
@@ -142,13 +151,14 @@ class PrefixCache:
     """
 
     def __init__(self, allocator: PageAllocator, page_size: int,
-                 profile_key: str = "", pager=None):
+                 profile_key: str = "", pager=None, tier=None):
         if page_size < 1:
             raise ValueError("page_size must be >= 1")
         self.allocator = allocator
         self.page_size = page_size
         self.profile_key = profile_key
         self.pager = pager
+        self.tier = tier             # optional QuantTierStore (--kv-adapt)
         self._roots: Dict[str, _Node] = {}
         self._clock = itertools.count()
         # instrumentation (benchmarks/serve read these)
@@ -163,6 +173,12 @@ class PrefixCache:
         self.promotions = 0          # host -> resident refills
         self.host_drops = 0          # destructive drops of HOST pages
         self.restored_pages = 0      # nodes created from a snapshot
+        self.requants = 0            # resident -> quant-tier narrowings
+        self.deepens = 0             # tier pages narrowed a further step
+        self.tier_promotions = 0     # quant-tier -> resident restores
+        # requant events that happened before the FIRST host demotion —
+        # None until a demotion occurs (the adapt bench gate reads this)
+        self.requants_at_first_demotion: Optional[int] = None
 
     # -- internals ----------------------------------------------------------
     def _root(self, profile_key: Optional[str]) -> _Node:
@@ -200,6 +216,11 @@ class PrefixCache:
         """Cached pages currently demoted to the host tier."""
         return sum(1 for n in self._all_nodes() if n.host is not None)
 
+    @property
+    def tier_pages(self) -> int:
+        """Cached pages currently parked (narrowed) in the quant tier."""
+        return sum(1 for n in self._all_nodes() if n.tier is not None)
+
     def _droppable_pages(self) -> int:
         """Resident pages reclaimable by DESTRUCTIVE leaf-first eviction:
         refcount-1 unpinned nodes whose whole subtree is also reclaimable
@@ -228,16 +249,27 @@ class PrefixCache:
                 if not n.pins and self.allocator.refcount(n.page) == 1]
 
     def evictable_pages(self) -> int:
-        """Device pages reclaimable right now, by demotion (host room
-        permitting) and/or destructive leaf-first drops."""
+        """Device pages reclaimable right now — by requantization onto the
+        quant tier (byte room permitting), demotion (host room permitting),
+        and/or destructive leaf-first drops."""
         drop = self._droppable_pages()
-        if self.pager is None:
-            return drop
         demotable = len(self._demotable_nodes())
-        room = self.pager.host_room()
-        if room == float("inf"):
-            return demotable
-        return min(demotable, drop + int(room))
+        room = self.tier.room_pages() if self.tier is not None else 0
+        if self.pager is not None:
+            host_room = self.pager.host_room()
+            if host_room == float("inf"):
+                return demotable
+            room += int(host_room)
+        # every droppable node is also demotable, so with no tier and no
+        # pager this reduces to the plain droppable count
+        return min(demotable, drop + room)
+
+    def requantizable_pages(self) -> int:
+        """Cold resident pages the quant tier could narrow + park right now
+        (the ``OutOfPagesError.requantizable`` inventory)."""
+        if self.tier is None:
+            return 0
+        return min(len(self._demotable_nodes()), self.tier.room_pages())
 
     # -- lookup -------------------------------------------------------------
     def lookup(self, tokens: Sequence[int],
@@ -328,17 +360,29 @@ class PrefixCache:
         node.pins -= 1
 
     def host_nodes_in(self, hit: PrefixHit) -> int:
-        """Host-state nodes an admission of this hit must promote — each
-        costs one device page on top of the request's own demand."""
+        """Non-resident (host-state OR quant-tier) nodes an admission of
+        this hit must promote — each costs one device page on top of the
+        request's own demand."""
         return sum(1 for n in self._hit_nodes(hit) if not n.resident)
 
     def ensure_resident(self, node: _Node) -> int:
-        """Promote ``node`` from the host tier if needed; returns the device
-        page id. Promotion allocates (may trigger reclaim pressure — safe,
-        the caller pinned the chain). The promoted page's single reference
-        belongs to the cache, exactly like a freshly inserted node."""
+        """Promote ``node`` from the quant or host tier if needed; returns
+        the device page id. Promotion allocates (may trigger reclaim
+        pressure — safe, the caller pinned the chain, and pinned tier
+        blobs are never deepened mid-restore). The promoted page's single
+        reference belongs to the cache, exactly like a freshly inserted
+        node. A quant-tier restore widens the narrowed grids back into the
+        pools' native containers — the narrowing step's rounding loss is
+        permanent (the adapt accuracy gate prices it)."""
         if node.resident:
             return node.page
+        if node.tier is not None:
+            page = self.allocator.alloc()
+            self.tier.restore(node.tier, page)
+            node.tier = None
+            node.page = page
+            self.tier_promotions += 1
+            return page
         if self.pager is None:
             raise RuntimeError("host-state node without a pager")
         node.page = self.pager.promote(node.host)
@@ -440,7 +484,7 @@ class PrefixCache:
         no device effect). Returns False when none exists."""
         victim = None
         for n in self._all_nodes():
-            if n.resident or n.pins or n.children:
+            if n.resident or n.host is None or n.pins or n.children:
                 continue
             if victim is None or n.stamp < victim.stamp:
                 victim = n
@@ -483,16 +527,63 @@ class PrefixCache:
         victim.host = self.pager.demote(victim.page)
         victim.page = -1
         self.demotions += 1
+        if self.demotions == 1:
+            self.requants_at_first_demotion = self.requants
         return True
 
+    def _requant_one(self) -> bool:
+        """Requantize the LRU cold page one container step narrower and
+        park it in the quant tier, freeing its device page WITHOUT a host
+        round trip. The victim picker is age- and refcount-aware: LRU over
+        resident refcount-1 unpinned nodes (every resident page shares the
+        pools' containers, so any candidate narrows equally). Returns False
+        when no tier is attached, nothing can narrow, or the tier is out of
+        byte room even after deepening already-parked pages."""
+        if self.tier is None:
+            return False
+        cands = self._demotable_nodes()
+        if not cands:
+            return False
+        victim = min(cands, key=lambda n: n.stamp)
+        blob = self.tier.requantize(victim.page, valid_len=victim.count)
+        if blob is None:
+            return False
+        while not self.tier.has_room(blob):
+            if not self._deepen_one():
+                return False
+        handle = self.tier.put(blob)
+        self.allocator.free([victim.page])
+        victim.page = -1
+        victim.tier = handle
+        self.requants += 1
+        return True
+
+    def _deepen_one(self) -> bool:
+        """Narrow the LRU parked tier page one more container step (the
+        fp -> int8 -> int4 progression under continued byte pressure).
+        Returns False when no unpinned parked page can narrow further."""
+        parked = sorted((n for n in self._all_nodes()
+                         if n.tier is not None and not n.pins),
+                        key=lambda n: n.stamp)
+        for n in parked:
+            if self.tier.deepen(n.tier, valid_len=n.count):
+                self.deepens += 1
+                return True
+        return False
+
     def evict(self, n_pages: int) -> int:
-        """Release up to ``n_pages`` device pages held by the cache — by
-        DEMOTION to the host tier when a pager with room is attached
-        (nothing is destroyed; any chain position is eligible because
-        demoted bytes survive), falling back to the destructive LRU
-        leaf-first drop. Returns the device pages actually freed."""
+        """Release up to ``n_pages`` device pages held by the cache, in
+        REQUANT -> DEMOTE -> DROP order: first requantize cold pages one
+        container step narrower onto the on-device quant tier (lossy by
+        the narrower grid's rounding, no host traffic), then DEMOTE to the
+        host tier when a pager with room is attached (byte-exact, any
+        chain position), and destroy LRU leaves only as the last resort.
+        Returns the device pages actually freed."""
         freed = 0
         while freed < n_pages:
+            if self._requant_one():
+                freed += 1
+                continue
             if self._demote_one():
                 freed += 1
                 continue
@@ -504,10 +595,10 @@ class PrefixCache:
 
     def clear(self) -> int:
         """Tear the cache down destructively: drop every unpinned,
-        unreferenced page — resident AND host (leaf-first, cascading).
-        Returns the number of device pages the cache STILL retains (pages
-        some slot also references — nonzero after all slots released means
-        a refcount leak)."""
+        unreferenced page — resident, quant-tier AND host (leaf-first,
+        cascading). Returns the number of device pages the cache STILL
+        retains (pages some slot also references — nonzero after all slots
+        released means a refcount leak)."""
         changed = True
         while changed:
             changed = False
@@ -520,6 +611,9 @@ class PrefixCache:
                     self._detach(node)
                     self.allocator.free([node.page])
                     self.evictions += 1
+                elif node.tier is not None:
+                    self.tier.drop(node.tier)
+                    self._detach(node)
                 else:
                     self.pager.host.drop(node.host)
                     self._detach(node)
@@ -544,4 +638,10 @@ class PrefixCache:
             "promotions": self.promotions,
             "host_drops": self.host_drops,
             "restored_pages": self.restored_pages,
+            "requants": self.requants,
+            "deepens": self.deepens,
+            "tier_pages": self.tier_pages,
+            "tier_promotions": self.tier_promotions,
+            "requantizable_pages": self.requantizable_pages(),
+            "requants_at_first_demotion": self.requants_at_first_demotion,
         }

@@ -67,6 +67,18 @@ The serving **hot path** is built around three ideas:
   ``lax.scan`` (--kv-profile-scan unroll forces the unrolled reference).
   --kv-scale page additionally calibrates per-page max-abs dequant scales
   at write time instead of the static Q(I,F) grid.
+* **Online precision adaptation** (--kv-adapt on): under pool pressure,
+  cold cached prefix pages are REQUANTIZED one container step narrower
+  (fp -> int8 -> int4, freshly calibrated per-page max-abs scales) into a
+  bounded device-byte tier (``core.page_store.QuantTierStore``) *before*
+  any host demotion — the paper's within-network precision-tolerance
+  result applied temporally: a page's precision decays with coldness
+  instead of being fixed at admission. Eviction order becomes
+  requant -> host demote -> destructive drop; a re-hit widens the page
+  back into the pool (the one-step quantization error is the price of
+  having kept it on device). --kv-adapt-floor bounds the ladder (4 or 8
+  data bits; per-layer --kv-profile containers are the starting rungs),
+  --kv-adapt-pages bounds the tier's byte budget.
 * **Tiered page store** (--kv-offload host): a host-memory page tier
   (``core.page_store``) behind the bounded device pool. Pool pressure
   *demotes* unreferenced cached prefixes to host numpy (bytes stay in their
@@ -110,8 +122,8 @@ import numpy as np
 
 from ..configs.registry import get_config, get_smoke_config
 from ..core.fixedpoint import FixedPointFormat
-from ..core.page_store import (HostPageStore, TieredPager, cache_geometry,
-                               extract_page, inject_page,
+from ..core.page_store import (HostPageStore, QuantTierStore, TieredPager,
+                               cache_geometry, extract_page, inject_page,
                                load_prefix_snapshot, save_prefix_snapshot,
                                snapshot_path)
 from ..core.paged_kv import (SCRATCH_PAGE, OutOfPagesError, PageAllocator,
@@ -226,7 +238,9 @@ class BatchedServer:
                  kv_offload: str = "none",
                  host_pages: Optional[int] = None,
                  sched: str = "fifo", admit_window: int = 4,
-                 preempt: Optional[bool] = None):
+                 preempt: Optional[bool] = None,
+                 kv_adapt: str = "off", adapt_pages: int = 0,
+                 adapt_floor_bits: int = 4):
         self.cfg = cfg
         self.params = params
         self.B = batch_size
@@ -292,6 +306,16 @@ class BatchedServer:
         if kv_offload == "host" and not self.paged:
             raise ValueError("--kv-offload host demotes pool pages; it "
                              "needs --page-size > 0")
+        if kv_adapt not in ("off", "on"):
+            raise ValueError(f"kv_adapt must be 'off' or 'on', "
+                             f"got {kv_adapt!r}")
+        if kv_adapt == "on" and not (self.paged and prefix_cache == "on"):
+            raise ValueError("--kv-adapt on requantizes cold CACHED prefix "
+                             "pages under pool pressure; it needs "
+                             "--page-size > 0 and --prefix-cache on")
+        if adapt_floor_bits not in (4, 8):
+            raise ValueError(f"adapt_floor_bits must be 4 or 8, "
+                             f"got {adapt_floor_bits}")
         if sched not in ("fifo", "slo"):
             raise ValueError(f"sched must be 'fifo' or 'slo', got {sched!r}")
         if sched == "slo" and not self.paged:
@@ -388,6 +412,22 @@ class BatchedServer:
                 self.allocator.reclaim = self.prefix_cache.evict
         self.caches = init_cache(cfg, batch_size, max_len, self.quant,
                                  paged=paged_spec)
+        # online precision adaptation (--kv-adapt): a bounded device-byte
+        # tier that REQUANTIZES cold cached prefix pages one container step
+        # narrower (fp -> int8 -> int4) before any host round trip; built
+        # after the caches because it probes the pool geometry for its
+        # per-page byte quotes
+        self.quant_tier: Optional[QuantTierStore] = None
+        if kv_adapt == "on":
+            self.quant_tier = QuantTierStore(
+                lambda: self.caches,
+                lambda c: setattr(self, "caches", c),
+                pages=adapt_pages or self.allocator.num_usable,
+                floor_bits=adapt_floor_bits)
+            self.prefix_cache.tier = self.quant_tier
+            # admission preflight / OutOfPagesError inventory hook
+            self.allocator.requant_inventory = \
+                self.prefix_cache.requantizable_pages
         self.slots: List[Optional[Request]] = [None] * batch_size
         self.pos = np.zeros((batch_size,), np.int32)    # host-side lengths
         self.tokens = np.zeros((batch_size,), np.int32)  # host-side tokens
@@ -409,6 +449,14 @@ class BatchedServer:
     def _ensure_page(self, slot: int, position: int):
         """Allocate pages so logical ``position`` of ``slot`` is backed."""
         blk = position // self.page_size
+        if self.kv_scale == "page" and blk < len(self.slot_pages[slot]):
+            # SHARING CONTRACT (core.paged_kv._paged_update_page_scale): a
+            # per-page scale raise rewrites the whole page's grid in place,
+            # so a write target must be exclusively owned. _cache_insert
+            # never shares a page the owner keeps writing (page mode skips
+            # the partial tail), so any violation here is a refcount bug.
+            assert self.allocator.refcount(self.slot_pages[slot][blk]) == 1, \
+                "page-scale write into a CoW-shared page"
         while len(self.slot_pages[slot]) <= blk:
             page = self.allocator.alloc()
             self.page_table[slot, len(self.slot_pages[slot])] = page
@@ -558,6 +606,7 @@ class BatchedServer:
         self.pos[i] = 0
         self.tokens[i] = 0
         self.slot_gen[i] = 0
+        self._discard_paused(job.req)
         job.req.error = err
 
     def _run_prefills(self, jobs: List[_PrefillJob]):
@@ -621,8 +670,18 @@ class BatchedServer:
 
     def _cache_insert(self, slot: int, req: Request):
         """Index the request's freshly prefilled prompt pages (tokens
-        [0, P-1)) into the prefix cache; chunks already cached dedupe."""
+        [0, P-1)) into the prefix cache; chunks already cached dedupe.
+
+        In --kv-scale page mode the PARTIAL tail page is not inserted: the
+        owner slot keeps decoding into it, and a per-page scale raise
+        rewrites the page's grid in place — sharing it would silently
+        change dequant values under aliased readers (the page-scale
+        sharing contract; see core.paged_kv._paged_update_page_scale).
+        Static-grid mode shares the tail safely (writes touch only
+        offsets past every sharer's valid length)."""
         n_tok = len(req.prompt) - 1
+        if self.kv_scale == "page":
+            n_tok = (n_tok // self.page_size) * self.page_size
         if n_tok <= 0:
             return
         n_pages = -(-n_tok // self.page_size)
@@ -691,6 +750,7 @@ class BatchedServer:
                 total=self.allocator.num_usable, rid=req.rid,
                 reserved=self._outstanding_reservation(),
                 written=written, evictable=evictable,
+                requantizable=self.allocator.requant_pages(),
                 host_pages=self.allocator.host_pages())
             return "reject", {"err": err}
         return "defer", {"total": total, "need_new": need_new,
@@ -756,12 +816,32 @@ class BatchedServer:
             if self.prefix_cache is not None:
                 self._cache_insert(i, req)
 
+    def _discard_paused(self, req: Request) -> None:
+        """Release a preempted request's parked resources once it will
+        NEVER resume (admission reject / rollback): unpin every re-aliased
+        prefix node and drop every host-tier page its resume state holds.
+        Without this, rejecting a preempted request leaks PINNED trie
+        nodes — they survive ``clear()``, so the leak gate reports phantom
+        retained pages — and orphaned host blobs that count against
+        --host-pages forever."""
+        st = req._paused
+        if st is None:
+            return
+        for kind, val in st.entries:
+            if kind == "alias":
+                self.prefix_cache.unpin_node(val)
+            else:
+                self.host_store.drop(val)
+        req._paused = None
+
     def _reject(self, queue: List[Request], idx: int, err) -> None:
         """Drop a never-fit request from the queue WITHOUT killing the run
         (the legacy behavior stalled everything behind a too-large head):
         the error is recorded on the request; FIFO mode re-raises it after
-        the serviceable traffic drained."""
+        the serviceable traffic drained. A preempted request rejected
+        before resume releases its parked pages/pins first."""
         req = queue.pop(idx)
+        self._discard_paused(req)
         req.error = err
         req.done = True
         self.rejected.append(req)
@@ -1095,6 +1175,13 @@ class BatchedServer:
                       f"{s['host_pages']} host "
                       f"({s['evictions']} evicted, {s['demotions']} demoted, "
                       f"{s['promotions']} promoted)")
+            if self.quant_tier is not None:
+                s = self.prefix_cache.stats()
+                print(f"[serve] quant tier: {self.quant_tier.num_pages} "
+                      f"pages / {self.quant_tier.nbytes / 2**20:.2f} MiB "
+                      f"parked (peak {self.quant_tier.peak_pages}), "
+                      f"{s['requants']} requants, {s['deepens']} deepens, "
+                      f"{s['tier_promotions']} promotions")
             if self.host_store is not None:
                 print(f"[serve] host tier: {self.host_store.num_pages} "
                       f"pages / {self.host_store.nbytes / 2**20:.2f} MiB "
@@ -1130,9 +1217,12 @@ class BatchedServer:
             return {"device_bytes": 0, "device_by_container": {},
                     "device_pages_free": 0, "device_pages_usable": 0,
                     "host_bytes": 0, "host_pages": 0,
-                    "host_by_container": {}}
+                    "host_by_container": {},
+                    "tier_bytes": 0, "tier_pages": 0,
+                    "tier_by_container": {}}
         dev = caches_kv_bytes(self.caches)
         hs = self.host_store
+        qt = self.quant_tier
         return {
             "device_bytes": sum(dev.values()),
             "device_by_container": dev,
@@ -1141,6 +1231,9 @@ class BatchedServer:
             "host_bytes": hs.nbytes if hs else 0,
             "host_pages": hs.num_pages if hs else 0,
             "host_by_container": hs.bytes_by_container() if hs else {},
+            "tier_bytes": qt.nbytes if qt else 0,
+            "tier_pages": qt.num_pages if qt else 0,
+            "tier_by_container": qt.bytes_by_container() if qt else {},
         }
 
     def snapshot_prefix_cache(self, path: str) -> int:
@@ -1152,9 +1245,15 @@ class BatchedServer:
             raise ValueError("snapshot needs --prefix-cache on")
         entries = []
         for key, tokens, node in self.prefix_cache.iter_chain_nodes():
-            blob = (self.host_store.get(node.host)
-                    if node.host is not None
-                    else extract_page(self.caches, node.page))
+            if node.host is not None:
+                blob = self.host_store.get(node.host)
+            elif node.tier is not None:
+                # widened back to pool-native containers so the snapshot
+                # geometry signature matches (the requant cost is already
+                # baked into the grid values)
+                blob = self.quant_tier.export(node.tier)
+            else:
+                blob = extract_page(self.caches, node.page)
             entries.append((key, tokens, blob))
         return save_prefix_snapshot(path, entries, page_size=self.page_size,
                                     geometry=cache_geometry(self.caches))
@@ -1251,6 +1350,21 @@ def main(argv=None):
                          "preemption and snapshot persistence")
     ap.add_argument("--host-pages", type=int, default=0,
                     help="host-tier capacity in pages (0 = unbounded)")
+    ap.add_argument("--kv-adapt", choices=["off", "on"], default="off",
+                    help="on = online precision adaptation: pool pressure "
+                         "REQUANTIZES cold cached prefix pages one "
+                         "container step narrower (fp->int8->int4, fresh "
+                         "per-page max-abs scales) into a bounded device "
+                         "tier BEFORE any host demotion or drop; needs "
+                         "--prefix-cache on")
+    ap.add_argument("--kv-adapt-pages", type=int, default=0,
+                    help="adaptation-tier byte budget, quoted in "
+                         "floor-container page equivalents (0 = auto: the "
+                         "pool's usable page count)")
+    ap.add_argument("--kv-adapt-floor", type=int, choices=[4, 8], default=4,
+                    help="narrowest container requantization may reach "
+                         "(per-pool: a layer whose head_dim cannot "
+                         "lane-pack floors at int8 regardless)")
     ap.add_argument("--sched", choices=["fifo", "slo"], default="fifo",
                     help="admission order: fifo = legacy arrival order "
                          "(too-large heads are skipped, not stalled "
@@ -1295,7 +1409,10 @@ def main(argv=None):
                         kv_offload=args.kv_offload,
                         host_pages=args.host_pages or None,
                         sched=args.sched, admit_window=args.admit_window,
-                        preempt=False if args.no_preempt else None)
+                        preempt=False if args.no_preempt else None,
+                        kv_adapt=args.kv_adapt,
+                        adapt_pages=args.kv_adapt_pages,
+                        adapt_floor_bits=args.kv_adapt_floor)
     import os
     if args.prefix_snapshot and os.path.exists(
             snapshot_path(args.prefix_snapshot)):

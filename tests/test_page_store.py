@@ -20,16 +20,18 @@ jax.config.update("jax_platform_name", "cpu")
 
 
 def _filled_pool(container, *, scale_mode="static", seed=0, num_pages=6,
-                 ps=4, KV=2, hd=16):
-    """One layer's pool with pages 1..2 written via the real update path
-    (so int containers hold genuine quantized grids + scales)."""
+                 ps=4, KV=2, hd=16, pages=(1, 2), tokens=None):
+    """One layer's pool with ``pages`` written via the real update path
+    (so int containers hold genuine quantized grids + scales). ``pages``
+    may be non-monotonic (a fragmented table); ``tokens`` < len(pages)*ps
+    leaves the last page partially written."""
     rng = np.random.default_rng(seed)
     layout = PagedKVLayout(num_pages=num_pages, page_size=ps,
                            num_kv_heads=KV, head_dim=hd, container=container)
     pool = init_paged_pool(layout)
-    pt = jnp.asarray([[1, 2]], np.int32)
+    pt = jnp.asarray([list(pages)], np.int32)
     bits = layout.bits
-    for t in range(2 * ps):
+    for t in range(len(pages) * ps if tokens is None else tokens):
         k = jnp.asarray(rng.normal(size=(1, 1, KV, hd)) * (0.1 + 0.2 * t),
                         jnp.float32)
         v = jnp.asarray(rng.normal(size=(1, 1, KV, hd)) * 0.4, jnp.float32)
@@ -244,6 +246,188 @@ def test_snapshot_path_without_npz_extension_round_trips(tmp_path):
     assert os.path.exists(snapshot_path(bare))
     meta, loaded = load_prefix_snapshot(bare)   # bare path loads too
     assert len(loaded) == 1 and meta["page_size"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Online requantization (fp -> int8 -> int4) + the quant tier store
+# ---------------------------------------------------------------------------
+from repro.core.page_store import (QuantTierStore, narrower_container,
+                                   requantize_blob, requantize_page,
+                                   widen_blob)
+from repro.core.page_store import _dequant_plane, _rec_container, \
+    _rec_head_dim
+
+
+def _deq(rec):
+    """Dequantized (k, v) float planes of one blob record."""
+    c, hd = _rec_container(rec), _rec_head_dim(rec)
+    return (_dequant_plane(rec["k"], rec["ks"], c, hd),
+            _dequant_plane(rec["v"], rec["vs"], c, hd))
+
+
+def test_narrower_container_ladder_and_floors():
+    assert narrower_container("fp", head_dim=16) == "int8"
+    assert narrower_container("int8", head_dim=16) == "int4"
+    assert narrower_container("int4", head_dim=16) == "int4"   # floor
+    # floor_bits=8 stops the descent at int8
+    assert narrower_container("int8", head_dim=16, floor_bits=8) == "int8"
+    assert narrower_container("fp", head_dim=16, floor_bits=8) == "int8"
+    # a head dim int4 lane-packing cannot express floors at int8
+    assert narrower_container("int8", head_dim=12) == "int8"
+    assert narrower_container("fp", head_dim=12) == "int8"
+
+
+@pytest.mark.parametrize("container", ["fp", "int8"])
+@pytest.mark.parametrize("scale_mode", ["static", "page"])
+def test_requantize_one_step_error_bounded(container, scale_mode):
+    """One ladder step loses at most half an LSB of the freshly calibrated
+    max-abs grid, for every source container and scale mode — including a
+    FRAGMENTED page table (extraction is page-id addressed)."""
+    if container == "fp" and scale_mode == "page":
+        pytest.skip("page-scale calibration applies to int containers")
+    caches = [(_filled_pool(container, scale_mode=scale_mode, seed=5,
+                            pages=(4, 2)),)]          # fragmented table
+    blob, narrowed = requantize_page(caches, 2, steps=1)
+    assert narrowed == len(blob.arrays)
+    tgt = "int8" if container == "fp" else "int4"
+    qmax = {"int8": 127.0, "int4": 7.0}[tgt]
+    ref = extract_page(caches, 2)
+    for before, after in zip(ref.arrays, blob.arrays):
+        assert _rec_container(after) == tgt
+        for want, got in zip(_deq(before), _deq(after)):
+            amax = np.max(np.abs(want))
+            assert np.max(np.abs(want - got)) <= amax / (2 * qmax) * 1.001
+
+
+def test_requantize_int4_already_at_floor_passes_through():
+    caches = [(_filled_pool("int4", seed=6),)]
+    blob, narrowed = requantize_page(caches, 1, steps=1)
+    assert narrowed == 0
+    ref = extract_page(caches, 1)
+    for a, b in zip(ref.arrays, blob.arrays):
+        for f in ("k", "v", "ks", "vs"):
+            np.testing.assert_array_equal(a[f], b[f])
+
+
+def test_requantize_steps_none_reaches_floor_and_shrinks():
+    caches = [(_filled_pool("fp", seed=7),)]
+    one, n1 = requantize_page(caches, 1, steps=1)      # fp -> int8
+    full, n2 = requantize_page(caches, 1, steps=None)  # fp -> int4
+    assert n1 == n2 == len(one.arrays)
+    assert all(_rec_container(r) == "int8" for r in one.arrays)
+    assert all(_rec_container(r) == "int4" for r in full.arrays)
+    assert full.nbytes < one.nbytes < extract_page(caches, 1).nbytes
+    # floor_bits=8 floors the full descent at int8
+    floored, _ = requantize_page(caches, 1, steps=None, floor_bits=8)
+    assert all(_rec_container(r) == "int8" for r in floored.arrays)
+
+
+def test_requantize_partial_page_masks_stale_slots():
+    """valid_len zeroes token slots past the written count BEFORE
+    calibration: a partial last page must not let stale garbage inflate
+    the fresh max-abs scale (nor survive into the narrowed grid)."""
+    caches = [(_filled_pool("fp", seed=8, pages=(1, 2)),)]   # 2 full pages
+    # page 2 fully written; pretend only 2 of 4 tokens are valid
+    blob, _ = requantize_page(caches, 2, steps=1, valid_len=2)
+    masked, _ = requantize_page(
+        [(_filled_pool("fp", seed=8, pages=(1, 2), tokens=4 + 2),)],
+        2, steps=1)
+    for rec, ref in zip(blob.arrays, masked.arrays):
+        k, v = _deq(rec)
+        assert np.all(k[..., 2:, :, :] == 0) and np.all(v[..., 2:, :, :]
+                                                        == 0)
+        # scale calibrated over the valid slots only: identical to a pool
+        # where those slots were never written
+        np.testing.assert_allclose(rec["ks"], ref["ks"], rtol=1e-6)
+
+
+def test_widen_blob_grid_exact_and_fp_unit_scales():
+    """Widening is exact on the grid: int4 -> int8 carries the scale,
+    any grid -> fp folds the scale into the floats and RESETS the page
+    scale to 1 (a recycled fp page takes fresh fp writes that assume unit
+    scales)."""
+    int8_caches = [(_filled_pool("int8", seed=9),)]
+    narrowed, _ = requantize_page(int8_caches, 1, steps=1)   # int4 blob
+    wide = widen_blob(narrowed, int8_caches)
+    for nrec, wrec in zip(narrowed.arrays, wide.arrays):
+        assert _rec_container(wrec) == "int8"
+        for a, b in zip(_deq(nrec), _deq(wrec)):
+            np.testing.assert_allclose(a, b, atol=1e-6)
+    fp_caches = [(_filled_pool("fp", seed=9),)]
+    narrowed_fp, _ = requantize_page(fp_caches, 1, steps=1)
+    wide_fp = widen_blob(narrowed_fp, fp_caches)
+    for nrec, wrec in zip(narrowed_fp.arrays, wide_fp.arrays):
+        assert _rec_container(wrec) == "fp"
+        np.testing.assert_array_equal(wrec["ks"],
+                                      np.ones_like(wrec["ks"]))
+        for a, b in zip(_deq(nrec), _deq(wrec)):
+            np.testing.assert_allclose(a, b, atol=1e-6)
+    # injecting the widened blob round-trips through the real pool
+    caches2 = inject_page(fp_caches, wide_fp, 4)
+    got = extract_page(caches2, 4)
+    for a, b in zip(wide_fp.arrays, got.arrays):
+        for f in ("k", "v", "ks", "vs"):
+            np.testing.assert_array_equal(a[f], b[f])
+
+
+def test_quant_tier_park_deepen_restore_accounting():
+    state = {"caches": [(_filled_pool("fp", seed=10, num_pages=8),)]}
+    tier = QuantTierStore(lambda: state["caches"],
+                          lambda c: state.update(caches=c), pages=2)
+    # capacity quoted in FLOOR (int4) page equivalents; an int8-parked
+    # page costs roughly two of them
+    assert tier.page_bytes_floor < tier.page_bytes_step
+    blob = tier.requantize(1)
+    assert blob is not None and tier.has_room(blob)
+    h1 = tier.put(blob)
+    assert tier.num_pages == 1 and tier.nbytes == blob.nbytes
+    assert set(tier.bytes_by_container()) == {"int8"}
+    # deepen frees bytes (int8 -> int4)
+    nb0 = tier.nbytes
+    freed = tier.deepen(h1)
+    assert freed > 0 and tier.nbytes == nb0 - freed
+    assert tier.deepen(h1) == 0                      # already at the floor
+    assert set(tier.bytes_by_container()) == {"int4"}
+    # restore widens into a fresh page; the dequant values survive
+    want = [_deq(r) for r in tier.export(h1).arrays]
+    tier.restore(h1, 5)
+    assert tier.num_pages == 0 and tier.nbytes == 0
+    got = extract_page(state["caches"], 5)
+    for (wk, wv), rec in zip(want, got.arrays):
+        k, v = _deq(rec)
+        np.testing.assert_allclose(wk, k, atol=1e-6)
+        np.testing.assert_allclose(wv, v, atol=1e-6)
+    assert tier.puts == 1 and tier.pops == 1 and tier.deepens == 1
+
+
+def test_quant_tier_byte_budget_enforced():
+    state = {"caches": [(_filled_pool("fp", seed=11, num_pages=8),)]}
+    tier = QuantTierStore(lambda: state["caches"],
+                          lambda c: state.update(caches=c), pages=2)
+    b1 = tier.requantize(1)
+    h1 = tier.put(b1)                    # one int8 page ~ 2 int4 equivalents
+    b2 = tier.requantize(2)
+    assert not tier.has_room(b2)
+    with pytest.raises(RuntimeError, match="byte budget"):
+        tier.put(b2)
+    # deepening the parked page makes exactly enough room for an int4
+    tier.deepen(h1)
+    b2d, _ = requantize_blob(b2, steps=None)
+    assert tier.has_room(b2d)
+    h2 = tier.put(b2d)
+    tier.drop(h1)
+    tier.drop(h2)
+    assert tier.num_pages == 0 and tier.nbytes == 0 and tier.drops == 2
+
+
+def test_quant_tier_rejects_pools_with_nothing_to_narrow():
+    state = {"caches": [(_filled_pool("int4", seed=12),)]}
+    with pytest.raises(ValueError, match="nothing to narrow"):
+        QuantTierStore(lambda: state["caches"], lambda c: None, pages=2)
+    state8 = {"caches": [(_filled_pool("int8", seed=12),)]}
+    with pytest.raises(ValueError, match="nothing to narrow"):
+        QuantTierStore(lambda: state8["caches"], lambda c: None, pages=2,
+                       floor_bits=8)
 
 
 def test_cache_geometry_detects_mismatch():

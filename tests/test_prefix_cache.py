@@ -311,6 +311,103 @@ class TestHostTier:
 
 
 # ---------------------------------------------------------------------------
+# Quant-tier eviction: requant BEFORE demote BEFORE drop
+# ---------------------------------------------------------------------------
+def _mk_adaptive(num_pages=64, ps=2, tier_pages=8, host_pages=None):
+    """A PrefixCache wired to a pager AND a quant tier (int8 pool, so one
+    requant step parks int4 directly at the byte floor)."""
+    from repro.core.page_store import QuantTierStore
+    al = PageAllocator(num_pages)
+    layout = PagedKVLayout(num_pages=num_pages, page_size=ps, num_kv_heads=1,
+                           head_dim=8, container="int8")
+    state = {"caches": [(init_paged_pool(layout),)]}
+    host = HostPageStore(max_pages=host_pages)
+    pager = TieredPager(al, host, lambda: state["caches"],
+                        lambda c: state.update(caches=c))
+    tier = QuantTierStore(lambda: state["caches"],
+                          lambda c: state.update(caches=c), pages=tier_pages)
+    cache = PrefixCache(al, ps, pager=pager, tier=tier)
+    al.reclaim = cache.evict
+    return cache, al, host, tier
+
+
+class TestQuantTier:
+    def test_evict_requants_before_any_host_demotion(self):
+        cache, al, host, tier = _mk_adaptive()
+        pages = _insert_seq(cache, al, [0, 1, 2, 3])     # 2-page chain
+        al.free(pages)
+        assert cache.requantizable_pages() == 2
+        assert cache.evict(2) == 2
+        # relief came from requantization alone: nothing left the device
+        assert cache.requants == 2 and cache.demotions == 0
+        assert cache.evictions == 0 and host.num_pages == 0
+        assert tier.num_pages == 2 and cache.tier_pages == 2
+        assert al.num_free == al.num_usable
+        # the chain still MATCHES through tier-state nodes
+        hit = cache.lookup([0, 1, 2, 3])
+        assert hit.matched == 4
+        assert [n.resident for n in hit.nodes] == [False, False]
+        assert cache.host_nodes_in(hit) == 2   # each costs a promotion page
+        # a hit promotes the parked page back (lossy widen, fresh page)
+        page = cache.ensure_resident(hit.nodes[0])
+        assert al.refcount(page) == 1 and hit.nodes[0].resident
+        assert cache.tier_promotions == 1 and tier.num_pages == 1
+        assert cache.clear() == 0
+        assert tier.num_pages == 0 and tier.nbytes == 0
+
+    def test_tier_full_falls_back_to_host_demotion(self):
+        # tier holds exactly ONE parked int4 page; the second eviction must
+        # take the host round trip — and the requant counter at first
+        # demotion records that requantization fired first
+        cache, al, host, tier = _mk_adaptive(tier_pages=1)
+        pages = _insert_seq(cache, al, [0, 1, 2, 3])
+        al.free(pages)
+        assert cache.evict(2) == 2
+        assert cache.requants == 1 and cache.demotions == 1
+        assert tier.num_pages == 1 and host.num_pages == 1
+        assert cache.requants_at_first_demotion == 1
+        assert cache.lookup([0, 1, 2, 3]).matched == 4   # no hole
+        assert cache.clear() == 0
+        assert tier.num_pages == 0 and host.num_pages == 0
+
+    def test_requantizable_pages_tracks_tier_room(self):
+        cache, al, host, tier = _mk_adaptive(tier_pages=1)
+        pages = _insert_seq(cache, al, [0, 1, 2, 3, 4, 5])   # 3-page chain
+        assert cache.requantizable_pages() == 0   # slot refs pin the chain
+        al.free(pages)
+        # three demotable pages but tier room for one
+        assert cache.requantizable_pages() == 1
+        cache.evict(1)
+        assert cache.requantizable_pages() == 0   # tier full
+        assert cache.clear() == 0
+
+    def test_pinned_nodes_survive_requant_pressure(self):
+        cache, al, host, tier = _mk_adaptive()
+        pages = _insert_seq(cache, al, [0, 1, 2, 3])
+        al.free(pages)
+        hit = cache.lookup([0, 1, 2, 3])
+        cache.pin(hit)
+        assert cache.requantizable_pages() == 0
+        assert cache.evict(10) == 0
+        assert cache.requants == 0 and tier.num_pages == 0
+        cache.unpin(hit)
+        assert cache.evict(10) == 2 and cache.requants == 2
+        assert cache.clear() == 0
+
+    def test_partial_leaf_round_trips_through_tier(self):
+        """A partially filled leaf page requants with valid_len masking and
+        promotes back still serving its tokens."""
+        cache, al, host, tier = _mk_adaptive()
+        pages = _insert_seq(cache, al, [0, 1, 2])    # 2 pages, leaf half-full
+        al.free(pages)
+        assert cache.evict(2) == 2 and cache.requants == 2
+        hit = cache.lookup([0, 1, 2, 3])
+        assert hit.matched == 3 and hit.cow_valid == 1
+        assert cache.ensure_resident(hit.cow_node) >= 0
+        assert cache.clear() == 0
+
+
+# ---------------------------------------------------------------------------
 # CoW preserves source page bytes
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("container", ["int8", "int4", "fp"])

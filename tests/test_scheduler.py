@@ -206,6 +206,38 @@ def test_preempt_realias_skips_host_copies(smoke_model):
     assert srv.allocator.num_free == srv.allocator.num_usable
 
 
+def test_reject_before_resume_releases_pins_and_host_pages(smoke_model):
+    """Regression: a preempted request that is REJECTED (or rolled back)
+    before it ever resumes must release its parked resume state — unpin
+    every re-aliased prefix node and drop its host-tier blobs. The old
+    ``_reject`` path only recorded the error, leaving the nodes pinned
+    forever (phantom retained pages in the leak gate) and the host blobs
+    counting against --host-pages until process exit."""
+    cfg, params = smoke_model
+    srv = BatchedServer(cfg, params, batch_size=1, max_len=48, kv_bits=8,
+                        page_size=8, num_pages=8, kv_offload="host",
+                        sched="slo", prefix_cache="on", prefill_batch=1,
+                        kv_scale="page")
+    rng = np.random.default_rng(3)
+    req = Request(0, rng.integers(0, cfg.vocab_size, 12).astype(np.int32), 8)
+    jobs = []
+    srv._admit_slo([req], jobs)
+    assert srv.slots[0] is req and not jobs   # prefill ran inline
+    # page-scale mode: the full page is cached (-> alias-pinned on
+    # preempt), the partial tail is private (-> host blob), so BOTH parked
+    # resource flavors are exercised
+    victim = srv._preempt_slot(0)
+    kinds = {k for k, _ in victim._paused.entries}
+    assert kinds == {"alias", "host"}, victim._paused.entries
+    assert srv.host_store.num_pages >= 1
+    queue = [victim]
+    srv._reject(queue, 0, RuntimeError("cancelled before resume"))
+    assert victim.done and victim._paused is None
+    assert srv.host_store.num_pages == 0          # parked blobs dropped
+    assert srv.release_prefix_cache() == 0        # pins released, no leak
+    assert srv.allocator.num_free == srv.allocator.num_usable
+
+
 def test_preempt_requires_host_offload(smoke_model):
     cfg, params = smoke_model
     with pytest.raises(ValueError, match="host"):

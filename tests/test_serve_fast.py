@@ -662,3 +662,211 @@ def test_admission_defers_until_pages_free(smoke_model):
     srv.run(reqs)
     assert all(r.done and len(r.out) == 8 for r in reqs)
     assert srv.allocator.num_free == 3
+
+
+def test_out_of_pages_reports_requantizable_inventory():
+    """With a quant tier attached, admission rejects report how many cold
+    cached pages could be requantized in place (``requantizable``) next to
+    the evictable/host counts — the operator-facing hint that --kv-adapt
+    headroom exists. Without a tier the field stays 0."""
+    al = PageAllocator(4)           # 3 usable
+    al.requant_inventory = lambda: 2
+    with pytest.raises(OutOfPagesError) as ei:
+        al.check(9, rid=3)
+    assert ei.value.requantizable == 2
+    assert "2 requantizable" in str(ei.value)
+    al2 = PageAllocator(4)
+    with pytest.raises(OutOfPagesError) as ei2:
+        al2.check(9)
+    assert ei2.value.requantizable == 0
+
+
+# ---------------------------------------------------------------------------
+# Online precision adaptation (--kv-adapt): identity off / under no pressure,
+# requantization under pressure, page-scale sharing contract, validation
+# ---------------------------------------------------------------------------
+_ADAPT_IDENTITY_SCRIPT = r"""
+import jax, numpy as np
+jax.config.update("jax_platform_name", "cpu")
+from repro.configs.registry import get_smoke_config
+from repro.launch.serve import BatchedServer, Request
+from repro.models.transformer import init_model
+
+cfg = get_smoke_config("qwen2-72b")
+params = init_model(jax.random.PRNGKey(0), cfg)
+rng0 = np.random.default_rng(19)
+sys_prompt = rng0.integers(0, cfg.vocab_size, 9).astype(np.int32)
+
+def mk():
+    r = np.random.default_rng(29)
+    reqs = [Request(i, np.concatenate(
+                [sys_prompt, r.integers(0, cfg.vocab_size, 2 + i)
+                 .astype(np.int32)]), 4 + i % 3) for i in range(4)]
+    reqs.append(Request(4, reqs[0].prompt.copy(), 6))   # full-chain hit
+    return reqs
+
+# --kv-adapt off must be a pure no-op: bitwise-identical to a server built
+# without the flag at all, at every pool container
+for kv_bits in (0, 8, 4):
+    base = dict(batch_size=2, max_len=32, kv_bits=kv_bits, page_size=8,
+                prefill="bucketed", prefill_bucket=8, prefill_batch=1,
+                prefix_cache="on")
+    seed = BatchedServer(cfg, params, **base)
+    out_seed = seed.run(mk())
+    off = BatchedServer(cfg, params, kv_adapt="off", **base)
+    out_off = off.run(mk())
+    for a, b in zip(out_seed, out_off):
+        assert a.out == b.out, (kv_bits, a.rid, a.out, b.out)
+    assert off.quant_tier is None
+    print(f"kv_bits={kv_bits} adapt-off == seed")
+
+# adapt ON with a roomy pool: the tier attaches but pressure never fires,
+# so every token must stay bitwise-identical to adapt-off (requant only
+# ever runs under eviction pressure, never on the hot path). kv_bits=4 is
+# excluded: an int4 pool is already at the tier floor and the tier refuses
+# to attach (asserted in test_kv_adapt_validation).
+for kv_bits in (0, 8):
+    base = dict(batch_size=2, max_len=32, kv_bits=kv_bits, page_size=8,
+                prefill="bucketed", prefill_bucket=8, prefill_batch=1,
+                prefix_cache="on")
+    off = BatchedServer(cfg, params, kv_adapt="off", **base)
+    out_off = off.run(mk())
+    on = BatchedServer(cfg, params, kv_adapt="on", **base)
+    out_on = on.run(mk())
+    for a, b in zip(out_off, out_on):
+        assert a.out == b.out, (kv_bits, a.rid, a.out, b.out)
+    assert all(r.done for r in out_on)
+    st = on.prefix_cache.stats()
+    assert st["requants"] == 0 and st["tier_promotions"] == 0, st
+    assert on.quant_tier.num_pages == 0 and on.quant_tier.nbytes == 0
+    assert on.release_prefix_cache() == 0
+    assert on.allocator.num_free == on.allocator.num_usable
+    print(f"kv_bits={kv_bits} adapt-on (no pressure) == adapt-off")
+print("ADAPT_IDENTITY_OK")
+"""
+
+
+def test_kv_adapt_off_matches_seed_and_on_is_noop_without_pressure():
+    """--kv-adapt off is bitwise-identical to a server built without the
+    flag (kv-bits {0, 8, 4}); --kv-adapt on with a roomy pool is
+    bitwise-identical to off (requantization runs only under eviction
+    pressure, never on the hot path) and ends with an empty, leak-free
+    quant tier.
+
+    Runs in a subprocess with single-threaded XLA: multi-threaded XLA:CPU
+    GEMMs are not bitwise deterministic under thread contention, and exact
+    argmax token identity needs bitwise-equal logits."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_cpu_multi_thread_eigen=false "
+                        "intra_op_parallelism_threads=1 "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p]
+        + [os.path.join(os.path.dirname(__file__), "..", "src")])
+    res = subprocess.run([sys.executable, "-c", _ADAPT_IDENTITY_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=1200)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "ADAPT_IDENTITY_OK" in res.stdout
+
+
+def test_kv_adapt_requantizes_under_pressure(smoke_model):
+    """End-to-end --kv-adapt on under real pool pressure: distinct
+    per-tenant prefixes overflow a 9-page pool, so eviction must narrow
+    cold cached pages into the quant tier BEFORE any host demotion, every
+    request still completes, and pool + host + tier all drain leak-free."""
+    cfg, params = smoke_model
+    srv = BatchedServer(cfg, params, batch_size=2, max_len=64, kv_bits=8,
+                        page_size=4, num_pages=10, prefill="bucketed",
+                        prefill_bucket=8, prefill_batch=1,
+                        prefix_cache="on", kv_offload="host",
+                        kv_adapt="on", adapt_pages=36)
+    rng = np.random.default_rng(31)
+    reqs = []
+    for g in range(4):              # 4 tenants, distinct 8-token prefixes
+        sys_p = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+        sfx = rng.integers(0, cfg.vocab_size, 3).astype(np.int32)
+        reqs.append(Request(g, np.concatenate([sys_p, sfx]), 4,
+                            arrive_step=2 * g))
+    srv.run(reqs)
+    assert all(r.done and r.error is None and len(r.out) == 4 for r in reqs)
+    st = srv.prefix_cache.stats()
+    assert st["requants"] >= 1, st
+    if st["demotions"]:             # requant strictly preceded host demotion
+        assert st["requants_at_first_demotion"] >= 1, st
+    assert srv.quant_tier.peak_pages >= 1
+    # the new inventory surfaces in admission rejects while pages are cold
+    verdict, info = srv._admission_plan(
+        Request(99, rng.integers(0, cfg.vocab_size, 40).astype(np.int32),
+                20))
+    assert verdict == "reject"
+    assert info["err"].requantizable == srv.prefix_cache.requantizable_pages()
+    assert info["err"].requantizable >= 1
+    # drain: releasing the cache empties the tier too
+    assert srv.release_prefix_cache() == 0
+    assert srv.quant_tier.num_pages == 0 and srv.quant_tier.nbytes == 0
+    assert srv.host_store.num_pages == 0
+    assert srv.allocator.num_free == srv.allocator.num_usable
+
+
+def test_page_scale_sharing_preserves_sharer_bytes(smoke_model):
+    """Page-scale sharing contract (regression): in --kv-scale page mode a
+    per-page scale raise REWRITES the page's packed grid in place, so the
+    prefix cache must never index the partial tail page its owner keeps
+    writing. Only full pages are cached, and a later request that aliases
+    a cached page and decodes onward leaves the shared page's packed bytes
+    untouched."""
+    from repro.core.page_store import extract_page
+    cfg, params = smoke_model
+    srv = BatchedServer(cfg, params, batch_size=2, max_len=48, kv_bits=8,
+                        page_size=8, kv_scale="page", prefix_cache="on",
+                        prefill="bucketed", prefill_bucket=8,
+                        prefill_batch=1)
+    rng = np.random.default_rng(7)
+    base = rng.integers(0, cfg.vocab_size, 11).astype(np.int32)
+    srv.run([Request(0, base, 4)])
+    # prompt prefills 10 tokens = 1 full page + 2-token tail; page mode
+    # caches ONLY the full page (static mode would index the tail too)
+    hit = srv.prefix_cache.lookup(base)
+    assert len(hit.nodes) == 1 and hit.matched == 8
+    assert hit.cow_node is None, "partial tail leaked into the page-scale " \
+                                 "cache"
+    shared = int(hit.nodes[0].page)
+    before = extract_page(srv.caches, shared)
+    # a sharer aliases the page and decodes well past it: its scale raises
+    # must land in its OWN pages, never the aliased one
+    ext = Request(1, np.concatenate(
+        [base, rng.integers(0, cfg.vocab_size, 6).astype(np.int32)]), 8)
+    srv.run([ext])
+    assert ext.done and ext.error is None
+    assert srv.prefix_cache.stats()["hits"] >= 1
+    after = extract_page(srv.caches, shared)
+    for ra, rb in zip(before.arrays, after.arrays):
+        for key in ("k", "v", "ks", "vs"):
+            assert np.array_equal(ra[key], rb[key]), \
+                f"shared page {key!r} bytes changed under an aliased reader"
+    assert srv.release_prefix_cache() == 0
+    assert srv.allocator.num_free == srv.allocator.num_usable
+
+
+def test_kv_adapt_validation(smoke_model):
+    cfg, params = smoke_model
+    base = dict(batch_size=2, max_len=32)
+    with pytest.raises(ValueError, match="kv_adapt"):
+        BatchedServer(cfg, params, kv_adapt="maybe", **base)
+    with pytest.raises(ValueError, match="prefix-cache"):
+        BatchedServer(cfg, params, kv_bits=8, page_size=8, kv_adapt="on",
+                      **base)
+    with pytest.raises(ValueError, match="page-size"):
+        BatchedServer(cfg, params, kv_adapt="on", **base)
+    with pytest.raises(ValueError, match="floor_bits"):
+        BatchedServer(cfg, params, kv_bits=8, page_size=8,
+                      prefix_cache="on", kv_adapt="on", adapt_floor_bits=6,
+                      **base)
+    # a uniform-int4 pool is already at the tier floor: nothing to narrow
+    with pytest.raises(ValueError, match="nothing to narrow"):
+        BatchedServer(cfg, params, kv_bits=4, page_size=8,
+                      prefix_cache="on", kv_adapt="on", **base)
