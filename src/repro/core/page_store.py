@@ -391,12 +391,22 @@ def widen_blob(blob: PageBlob, caches) -> PageBlob:
     """Convert a (possibly narrowed) blob into each pool's NATIVE container
     so :func:`inject_page` can write it back.
 
-    Grid widening is exact: an int4 grid unpacks into an int8 pool with its
-    scale carried, and any grid dequantizes into an fp pool (scale folded
-    into the floats, page scale reset to 1 — fp pools rely on unit scales
-    when a recycled page takes fresh fp writes). The rounding loss of the
-    original narrowing step is NOT undone; that is the accuracy cost the
-    adapt gate measures.
+    Grid widening is exact AND recalibrates the restored page's scale to
+    the target container's granularity (the live-traffic recalibration
+    hook): an int4 grid widens into an int8 pool as ``grid * 16,
+    scale / 16`` — bit-identical dequant (|grid| <= 7 so the widened grid
+    fits int8, and a power-of-two rescale is exact in float32) while the
+    page is left with an int8-granularity scale, so later page-scale CoW
+    extensions quantize fresh tokens at int8 precision instead of being
+    pinned to the parked int4 step. Into an fp pool the grid is stored as
+    floats with its scale CARRIED rather than folded to a unit scale:
+    dequant still happens in float32 at gather time, so a low-precision fp
+    pool (bf16/fp16) never rounds the grid*scale product at rest. Recycled
+    fp pages stay safe because the fp write path resets a page's scale on
+    its first write (``paged_kv.paged_update``) and CoW copies fold scales
+    before extension (``paged_kv.copy_pool_pages``). The rounding loss of
+    the original narrowing step is NOT undone; that is the accuracy cost
+    the adapt gate measures.
     """
     pools = list(iter_kv_pools(caches))
     if len(pools) != len(blob.arrays):
@@ -410,20 +420,24 @@ def widen_blob(blob: PageBlob, caches) -> PageBlob:
             out.append(dict(rec))
         elif tgt == "fp":
             dt = np.dtype(pool["k_pages"].dtype)
-            one = np.ones_like(np.asarray(rec["ks"], np.float32))
+            k = rec["k"]
+            v = rec["v"]
+            if cur == "int4":
+                k = np.asarray(unpack_bits(jnp.asarray(k), 4, hd))
+                v = np.asarray(unpack_bits(jnp.asarray(v), 4, hd))
             out.append({
-                "k": _dequant_plane(rec["k"], rec["ks"], cur, hd)
-                .astype(dt),
-                "v": _dequant_plane(rec["v"], rec["vs"], cur, hd)
-                .astype(dt),
-                "ks": one, "vs": one.copy()})
+                "k": k.astype(dt), "v": v.astype(dt),
+                "ks": np.asarray(rec["ks"], np.float32),
+                "vs": np.asarray(rec["vs"], np.float32)})
         elif tgt == "int8" and cur == "int4":
+            up = 1 << 4   # int8/int4 grid-step ratio (exact rescale)
             out.append({
-                "k": np.asarray(unpack_bits(jnp.asarray(rec["k"]), 4,
-                                            hd)).astype(np.int8),
-                "v": np.asarray(unpack_bits(jnp.asarray(rec["v"]), 4,
-                                            hd)).astype(np.int8),
-                "ks": rec["ks"], "vs": rec["vs"]})
+                "k": (np.asarray(unpack_bits(jnp.asarray(rec["k"]), 4, hd))
+                      .astype(np.int32) * up).astype(np.int8),
+                "v": (np.asarray(unpack_bits(jnp.asarray(rec["v"]), 4, hd))
+                      .astype(np.int32) * up).astype(np.int8),
+                "ks": np.asarray(rec["ks"], np.float32) / up,
+                "vs": np.asarray(rec["vs"], np.float32) / up})
         else:
             raise ValueError(
                 f"cannot widen a {cur!r} record into a {tgt!r} pool")

@@ -358,13 +358,20 @@ def paged_update(pool, k_new, v_new, page_table, pos, *, page_size: int,
         pids = jnp.where(valid, pids, SCRATCH_PAGE)
 
     if container == "fp":
+        # fp writes store raw floats under a UNIT page scale. A recycled
+        # page can carry a stale non-unit scale from a quant-tier restore
+        # (widen_blob keeps the parked grid + scale for fp pools), so the
+        # page's first write (offset 0) resets its scale; writes at higher
+        # offsets extend a page this owner already reset (or a CoW copy,
+        # which copy_pool_pages folds to unit scale).
+        first = jnp.where(offsets == 0, pids, SCRATCH_PAGE)
         return {
             "k_pages": pool["k_pages"].at[pids, offsets].set(
                 k_new.astype(pool["k_pages"].dtype)),
             "v_pages": pool["v_pages"].at[pids, offsets].set(
                 v_new.astype(pool["v_pages"].dtype)),
-            "k_scale": pool["k_scale"],
-            "v_scale": pool["v_scale"],
+            "k_scale": pool["k_scale"].at[first].set(1.0),
+            "v_scale": pool["v_scale"].at[first].set(1.0),
         }
 
     if scale_mode == "page":
@@ -515,11 +522,32 @@ def copy_pool_pages(pool, src: int, dst: int, *, page_axis: int = 0):
     source page stays byte-identical for its other readers. ``page_axis``
     is 0 for a single layer's pool and 1 for the (periods, NP, ...) stacked
     pools the segmented scan carries.
+
+    For FP pools the source scale is folded into the copied floats and the
+    copy gets a unit scale: the copier extends the page with fresh fp
+    writes, which store raw floats under a unit page scale, while the
+    source may be a quant-tier restore whose non-unit scale must keep
+    applying to the untouched original (``page_store.widen_blob``). Int
+    pools copy bytes + scales verbatim (extension writes there recalibrate
+    against the page scale explicitly).
     """
     idx = (slice(None),) * page_axis
 
     def cp(a):
         return a.at[idx + (dst,)].set(a[idx + (src,)])
+
+    if pool_container(pool) == "fp":
+        def fold(pages, scale):
+            s = scale[idx + (src,)]
+            vals = (pages[idx + (src,)].astype(jnp.float32)
+                    * s[..., None, None, None])
+            return (pages.at[idx + (dst,)].set(vals.astype(pages.dtype)),
+                    scale.at[idx + (dst,)].set(1.0))
+
+        k_pages, k_scale = fold(pool["k_pages"], pool["k_scale"])
+        v_pages, v_scale = fold(pool["v_pages"], pool["v_scale"])
+        return {"k_pages": k_pages, "v_pages": v_pages,
+                "k_scale": k_scale, "v_scale": v_scale}
 
     return {"k_pages": cp(pool["k_pages"]), "v_pages": cp(pool["v_pages"]),
             "k_scale": cp(pool["k_scale"]), "v_scale": cp(pool["v_scale"])}

@@ -104,10 +104,12 @@ class _Node:
     descent; partial children (count < page_size) are leaves and are found
     by the best-common-prefix scan. ``pins`` counts in-flight admissions
     holding this node — eviction (demote AND drop) skips pinned nodes.
+    ``hits`` counts lookup matches and feeds the heat-aware victim score
+    (:meth:`PrefixCache._heat`).
     """
 
     __slots__ = ("tokens", "page", "host", "tier", "children", "parent",
-                 "stamp", "pins")
+                 "stamp", "pins", "hits")
 
     def __init__(self, tokens: Tuple[int, ...], page: int, parent,
                  stamp: int, host: Optional[int] = None):
@@ -119,6 +121,7 @@ class _Node:
         self.parent = parent
         self.stamp = stamp
         self.pins = 0
+        self.hits = 0
 
     @property
     def count(self) -> int:
@@ -151,7 +154,8 @@ class PrefixCache:
     """
 
     def __init__(self, allocator: PageAllocator, page_size: int,
-                 profile_key: str = "", pager=None, tier=None):
+                 profile_key: str = "", pager=None, tier=None,
+                 heat_boost: int = 16):
         if page_size < 1:
             raise ValueError("page_size must be >= 1")
         self.allocator = allocator
@@ -159,6 +163,10 @@ class PrefixCache:
         self.profile_key = profile_key
         self.pager = pager
         self.tier = tier             # optional QuantTierStore (--kv-adapt)
+        # Victim picking is heat-aware, not pure LRU: each lookup hit is
+        # worth ``heat_boost`` clock ticks of recency, so a hot old node
+        # outlives a cold young one (see _heat).
+        self.heat_boost = heat_boost
         self._roots: Dict[str, _Node] = {}
         self._clock = itertools.count()
         # instrumentation (benchmarks/serve read these)
@@ -248,6 +256,13 @@ class PrefixCache:
         return [n for n in self._nodes()
                 if not n.pins and self.allocator.refcount(n.page) == 1]
 
+    def _heat(self, n: _Node) -> int:
+        """Victim score for requant/demote/deepen order: the node's LRU
+        stamp PLUS ``heat_boost`` clock ticks per lifetime lookup hit, so a
+        frequently-reused old node scores hotter than a recently-inserted
+        never-hit one. Lowest score is picked first (coldest)."""
+        return n.stamp + self.heat_boost * n.hits
+
     def evictable_pages(self) -> int:
         """Device pages reclaimable right now — by requantization onto the
         quant tier (byte room permitting), demotion (host room permitting),
@@ -285,7 +300,9 @@ class PrefixCache:
         ``record=False`` leaves the hit-rate counters untouched (the server
         passes it during admission, which may retry the same request every
         decode span while deferred, and records once on success via
-        :meth:`note_lookup`); chain LRU stamps are refreshed either way.
+        :meth:`note_lookup`); chain LRU stamps are refreshed either way,
+        but per-node ``hits`` (the heat-score input) only count recorded
+        lookups — once per admitted request, not once per retry.
         """
         tokens = [int(t) for t in tokens]
         if record:
@@ -300,6 +317,8 @@ class PrefixCache:
             child = node.children.get(chunk) if len(chunk) == ps else None
             if child is not None and child.count == ps:
                 child.stamp = next(self._clock)
+                if record:
+                    child.hits += 1
                 hit.nodes.append(child)
                 hit.matched += ps
                 node = child
@@ -313,6 +332,8 @@ class PrefixCache:
                     best, best_len = c, n
             if best is not None:
                 best.stamp = next(self._clock)
+                if record:
+                    best.hits += 1
                 hit.cow_node = best
                 hit.cow_valid = best_len
                 hit.matched += best_len
@@ -513,8 +534,9 @@ class PrefixCache:
         return True
 
     def _demote_one(self) -> bool:
-        """Spill the LRU demotable resident page to the host tier (making
-        host room first by dropping host LRU leaves if needed)."""
+        """Spill the coldest (heat-scored) demotable resident page to the
+        host tier (making host room first by dropping host LRU leaves if
+        needed)."""
         if self.pager is None:
             return False
         cands = self._demotable_nodes()
@@ -523,7 +545,7 @@ class PrefixCache:
         while not self.pager.host.has_room(1):
             if not self.drop_host_lru():
                 return False
-        victim = min(cands, key=lambda n: n.stamp)
+        victim = min(cands, key=self._heat)
         victim.host = self.pager.demote(victim.page)
         victim.page = -1
         self.demotions += 1
@@ -532,19 +554,20 @@ class PrefixCache:
         return True
 
     def _requant_one(self) -> bool:
-        """Requantize the LRU cold page one container step narrower and
+        """Requantize the coldest page one container step narrower and
         park it in the quant tier, freeing its device page WITHOUT a host
-        round trip. The victim picker is age- and refcount-aware: LRU over
-        resident refcount-1 unpinned nodes (every resident page shares the
-        pools' containers, so any candidate narrows equally). Returns False
-        when no tier is attached, nothing can narrow, or the tier is out of
-        byte room even after deepening already-parked pages."""
+        round trip. The victim picker is heat-, age- and refcount-aware:
+        lowest age+hit-count score (:meth:`_heat`) over resident refcount-1
+        unpinned nodes (every resident page shares the pools' containers,
+        so any candidate narrows equally). Returns False when no tier is
+        attached, nothing can narrow, or the tier is out of byte room even
+        after deepening already-parked pages."""
         if self.tier is None:
             return False
         cands = self._demotable_nodes()
         if not cands:
             return False
-        victim = min(cands, key=lambda n: n.stamp)
+        victim = min(cands, key=self._heat)
         blob = self.tier.requantize(victim.page, valid_len=victim.count)
         if blob is None:
             return False
@@ -559,12 +582,13 @@ class PrefixCache:
         return True
 
     def _deepen_one(self) -> bool:
-        """Narrow the LRU parked tier page one more container step (the
-        fp -> int8 -> int4 progression under continued byte pressure).
-        Returns False when no unpinned parked page can narrow further."""
+        """Narrow the coldest (heat-scored) parked tier page one more
+        container step (the fp -> int8 -> int4 progression under continued
+        byte pressure). Returns False when no unpinned parked page can
+        narrow further."""
         parked = sorted((n for n in self._all_nodes()
                          if n.tier is not None and not n.pins),
-                        key=lambda n: n.stamp)
+                        key=self._heat)
         for n in parked:
             if self.tier.deepen(n.tier, valid_len=n.count):
                 self.deepens += 1

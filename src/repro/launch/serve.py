@@ -38,6 +38,22 @@ The serving **hot path** is built around three ideas:
   disjoint pages, so batched == sequential bitwise (tests assert it).
   An ``OutOfPagesError`` mid-batch rolls back every partially admitted
   row before surfacing.
+* **One fused ragged forward per scheduler cycle** (--fused on): prefill
+  chunks and decode tokens ride ONE `[batch, bucket]` variable-length
+  program (``launch.steps.make_fused_step``) — each row carries its own
+  query length, start position, and page table (decode rows S=1 padded into
+  the shared bucket, prefill rows S=bucket), the LM head gathers only the
+  rows that emit a token this cycle, and steady-state serving runs exactly
+  one jitted program per cycle with zero prefill/decode program switches
+  (``cycles == program_launches``, asserted in tests). Fused output is
+  bitwise-identical to the separate-program reference at every kv-bits
+  setting (single-threaded XLA; see tests/test_serve_fast.py).
+* **Prefix-aware batched prefill** (wave dedupe): inside one admission
+  wave, a prompt sharing page-aligned full chunks with an earlier same-wave
+  prompt WAITS until that leader has written through the shared span, then
+  increfs the leader's pages into its own table instead of re-running their
+  forwards — so --prefill-batch composes with --prefix-cache (auto batching
+  no longer falls back to sequential admission under the prefix cache).
 * **Unified kernel-routed attention** (--attn-impl pallas): decode AND
   chunked prefill attention run through ONE variable-length
   ``kernels.paged_kv_attention`` chunk kernel (scalar-prefetch DMA over
@@ -135,7 +151,7 @@ from ..models.transformer import init_cache, init_model
 from ..quant.apply import (build_model_quant, kv_profile_key,
                            transformer_layer_names)
 from .scheduler import SchedPolicy, SLOScheduler
-from .steps import make_chunk_prefill_step, make_decode_step
+from .steps import make_chunk_prefill_step, make_decode_step, make_fused_step
 
 
 @dataclasses.dataclass
@@ -179,19 +195,38 @@ def _pow2_bucket(n: int, cap: int) -> int:
     return min(cap, 1 << max(0, n - 1).bit_length())
 
 
+def _shared_page_tokens(a: np.ndarray, b: np.ndarray, ps: int) -> int:
+    """Length of the common prompt prefix of ``a`` and ``b`` that both
+    requests actually CACHE (each writes prompt[:-1]; the last token is
+    consumed by decode), rounded down to full ``ps``-token pages — the span
+    one admission-wave prompt can alias off another's freshly written
+    pages."""
+    n = min(len(a), len(b)) - 1
+    if n <= 0:
+        return 0
+    eq = a[:n] == b[:n]
+    common = n if eq.all() else int(np.argmin(eq))
+    return (common // ps) * ps
+
+
 @dataclasses.dataclass
 class _PrefillJob:
     """One planned bucketed prefill (slot already reserved/aliased): feed
     ``req.prompt[start:-1]`` into the pool. ``done`` tracks written tokens
     across the batched rounds; ``finished`` flips once the slot's clock and
     token state are final (rollback on a failed batch skips finished
-    jobs)."""
+    jobs). ``wait_for = (leader_job, shared)`` marks a wave-dedupe
+    follower: it sits out prefill rounds until ``leader_job`` has written
+    through token ``shared``, then aliases the leader's pages for
+    [start, shared) instead of re-running their forwards (see
+    ``_plan_wave_dedupe``). ``start`` is mutable for exactly that jump."""
 
     slot: int
     req: Request
     start: int
     done: int = 0
     finished: bool = False
+    wait_for: Optional[tuple] = None
 
     @property
     def total(self) -> int:
@@ -240,7 +275,7 @@ class BatchedServer:
                  sched: str = "fifo", admit_window: int = 4,
                  preempt: Optional[bool] = None,
                  kv_adapt: str = "off", adapt_pages: int = 0,
-                 adapt_floor_bits: int = 4):
+                 adapt_floor_bits: int = 4, fused: str = "off"):
         self.cfg = cfg
         self.params = params
         self.B = batch_size
@@ -376,6 +411,23 @@ class BatchedServer:
             jax.jit(make_chunk_prefill_step(cfg, quant=self.quant,
                                             attn_impl=attn_impl))
             if self.prefill_mode == "bucketed" else None)
+        if fused not in ("on", "off"):
+            raise ValueError(f"fused must be 'on' or 'off', got {fused!r}")
+        if fused == "on" and self.prefill_mode != "bucketed":
+            raise ValueError("--fused on runs ONE ragged prefill+decode "
+                             "program per scheduler cycle; it needs the "
+                             "bucketed prefill path (paged cache, "
+                             "attention-only arch, exact MoE routing)")
+        self.fused = fused == "on"
+        self._fused = (jax.jit(make_fused_step(cfg, quant=self.quant,
+                                               attn_impl=attn_impl))
+                       if self.fused else None)
+        if self.fused:
+            # steady-state span constants: every row decodes (valid_len 1)
+            # and every row emits — reused across steps so the only retrace
+            # axis anywhere in fused serving is the prefill bucket
+            self._ones_dev = jnp.ones((batch_size,), jnp.int32)
+            self._arange_dev = jnp.arange(batch_size, dtype=jnp.int32)
 
         paged_spec = None
         self.prefix_cache: Optional[PrefixCache] = None
@@ -437,6 +489,11 @@ class BatchedServer:
         self.prefill_tokens = 0     # prompt tokens consumed by prefill
         self.prefill_s = 0.0
         self.decode_steps = 0
+        self.program_launches = 0   # every jitted forward executed
+        self.cycles = 0             # scheduler cycles (fused rounds + span
+        #                             steps); fused == program_launches
+        self.wave_dedup_pages = 0   # pages aliased off a same-wave leader
+        self._gen_tokens = 0        # generated tokens (all run() calls)
         self.prefix_hit_tokens = 0        # prompt tokens served from cache
         self.prefill_forwards_saved = 0   # forwards prefix hits avoided
         self.preempt_count = 0            # victim slots demoted + re-queued
@@ -503,6 +560,7 @@ class BatchedServer:
             self.params, _upload(self.tokens), _upload(self.pos),
             self.caches, pt)
         self.prefill_forwards += 1
+        self.program_launches += 1
 
     def _prefill_stepwise(self, slot: int, req: Request, start: int = 0):
         """Feed prompt[start:-1] through shared decode steps, leaving the
@@ -542,13 +600,81 @@ class BatchedServer:
     # -- batched bucketed prefill -------------------------------------------
     def _prefill_group_cap(self) -> int:
         """Max prompt rows stacked into one batched prefill forward.
-        ``prefill_batch=0`` is auto: the batch size — except with the
-        prefix cache on, where same-wave prompts must admit one at a time
-        so a later prompt can still alias the pages an earlier one just
-        inserted (batching would hide intra-wave hits)."""
+        ``prefill_batch=0`` is auto: the batch size. Intra-wave prefix
+        sharing no longer forces sequential admission — same-wave prompts
+        sharing page-aligned chunks are deduped inside the batched wave by
+        ``_plan_wave_dedupe`` (followers alias the leader's fresh pages),
+        so --prefill-batch composes with --prefix-cache."""
         if self.prefill_batch:
             return self.prefill_batch
-        return 1 if self.prefix_cache is not None else self.B
+        return self.B
+
+    def _plan_wave_dedupe(self, pending: List[_PrefillJob]) -> None:
+        """Prefix-AWARE batched prefill: pair each wave job with the
+        earlier same-wave job (leader) whose prompt shares the most
+        page-aligned full chunks beyond the follower's own prefix-cache
+        hit. The follower sits out rounds (``wait_for``) until the leader
+        has written through the shared span, then ``_apply_wave_aliases``
+        increfs the leader's pages into its table — the forwards for those
+        chunks run ONCE per wave instead of once per request.
+
+        A follower must start page-aligned (a CoW divergence means its own
+        content already differs mid-page) with a leader starting at or
+        below it (so the leader's slot holds every needed page), and only
+        FULLY-written pages are ever aliased — the leader's later writes
+        (including page-scale rescales, which touch only blocks of the
+        chunk being written) never revisit them, honoring the page-scale
+        sharing contract."""
+        ps = self.page_size
+        leaders: List[_PrefillJob] = []
+        for job in pending:
+            best, best_shared = None, job.start
+            if job.done == 0 and job.start % ps == 0:
+                for lead in leaders:
+                    if lead.start > job.start:
+                        continue
+                    shared = _shared_page_tokens(lead.req.prompt,
+                                                 job.req.prompt, ps)
+                    if shared > best_shared:
+                        best, best_shared = lead, shared
+            if best is not None:
+                job.wait_for = (best, best_shared)
+            else:
+                leaders.append(job)
+
+    def _apply_wave_aliases(self, pending: List[_PrefillJob]) -> None:
+        """Unblock wave-dedupe followers whose leader has written through
+        the shared span: alias the leader's pages for [start, shared) into
+        the follower's table (one incref per page, no forwards) and jump
+        the follower's start to ``shared``. Runs at every round boundary —
+        a leader that just finished its prefill unblocks its followers
+        BEFORE it can retire from decode, so the increfs always land on
+        live pages."""
+        for job in pending:
+            if job.wait_for is None or job.finished:
+                continue
+            lead, shared = job.wait_for
+            if lead.start + lead.done < shared:
+                continue
+            ps = self.page_size
+            b0, b1 = job.start // ps, shared // ps
+            assert len(self.slot_pages[job.slot]) == b0, \
+                "wave-dedupe follower holds pages past its start"
+            chunks_before = self._n_chunks(job.total)
+            for b in range(b0, b1):
+                page = self.slot_pages[lead.slot][b]
+                self.allocator.incref(page)   # the follower's reference
+                self.page_table[job.slot, b] = page
+                self.slot_pages[job.slot].append(page)
+            self._pt_dirty = True
+            job.start = shared
+            job.wait_for = None
+            self.pos[job.slot] = shared
+            self.wave_dedup_pages += b1 - b0
+            self.prefill_forwards_saved += (chunks_before
+                                            - self._n_chunks(job.total))
+            if job.total == 0:
+                self._finish_job(job)
 
     def _prefill_group(self, rows: List[_PrefillJob], bucket: int):
         """ONE batched prefill forward: each row's next ``bucket``-sized
@@ -575,6 +701,7 @@ class BatchedServer:
             self.params, jnp.asarray(chunk), jnp.asarray(starts),
             jnp.asarray(valids), self.caches, jnp.asarray(pts))
         self.prefill_forwards += 1
+        self.program_launches += 1
         for r, job in enumerate(rows):
             job.done += int(valids[r])
             self.pos[job.slot] = job.start + job.done
@@ -633,9 +760,15 @@ class BatchedServer:
                     self._finish_job(job)   # full-chain hit / 1-token prompt
                 else:
                     pending.append(job)
+            if self.prefix_cache is not None and cap > 1:
+                # intra-wave sharing: followers alias a leader's fresh
+                # pages instead of forcing sequential admission
+                self._plan_wave_dedupe(pending)
             while pending:
                 groups = {}
                 for job in pending:
+                    if job.wait_for is not None:
+                        continue        # follower: leader still writing
                     b = _pow2_bucket(job.total - job.done,
                                      self.prefill_bucket)
                     groups.setdefault(b, []).append(job)
@@ -643,13 +776,118 @@ class BatchedServer:
                     grp = groups[bucket]
                     for k in range(0, len(grp), cap):
                         self._prefill_group(grp[k:k + cap], bucket)
+                self._apply_wave_aliases(pending)
                 nxt = []
                 for job in pending:
-                    if job.done >= job.total:
+                    if job.finished:
+                        continue        # alias jump covered the whole job
+                    if job.wait_for is None and job.done >= job.total:
                         self._finish_job(job)
                     else:
                         nxt.append(job)
                 pending = nxt
+        except OutOfPagesError as err:
+            for job in jobs:
+                if not job.finished:
+                    self._rollback_admission(job, err)
+            raise
+        finally:
+            self.prefill_s += time.perf_counter() - t0
+
+    # -- fused ragged cycles (--fused on) -----------------------------------
+    def _fused_round(self, pending: List[_PrefillJob]) -> List[_PrefillJob]:
+        """ONE ragged [B, bucket] program: every unfinished prefill job
+        contributes its next prompt chunk (padded to the round's shared
+        bucket, tail masked via valid_len) and every OTHER live slot
+        decodes one token in the same launch — prefill piggybacks on the
+        decode cycle instead of dispatching its own programs. Returns the
+        jobs still pending after the round."""
+        ready = [j for j in pending if j.wait_for is None]
+        bucket = max(_pow2_bucket(j.total - j.done, self.prefill_bucket)
+                     for j in ready)
+        prefilling = {j.slot for j in pending}
+        decode = [i for i in range(self.B) if self.slots[i] is not None
+                  and i not in prefilling]
+        tokens = np.zeros((self.B, bucket), np.int32)
+        starts = np.zeros((self.B,), np.int32)
+        valids = np.ones((self.B,), np.int32)
+        emit = np.zeros((self.B,), np.int32)   # fixed shape; host
+        #                                        discards padding entries
+        for j in ready:
+            off = j.start + j.done
+            toks = j.req.prompt[off:len(j.req.prompt) - 1]
+            valid = min(bucket, len(toks))
+            self._ensure_page(j.slot, off + valid - 1)
+            tokens[j.slot, :valid] = toks[:valid]
+            starts[j.slot] = off
+            valids[j.slot] = valid
+        for k, i in enumerate(decode):
+            self._ensure_page(i, int(self.pos[i]))
+            tokens[i, 0] = self.tokens[i]
+            starts[i] = self.pos[i]
+            emit[k] = i
+        pt = self._page_table_dev()
+        # private host copies nobody mutates later: plain asarray uploads
+        nxt, _, self.caches = self._fused(
+            self.params, jnp.asarray(tokens), jnp.asarray(starts),
+            jnp.asarray(valids), self.caches, pt, jnp.asarray(emit))
+        self.program_launches += 1
+        self.cycles += 1
+        self.prefill_forwards += 1
+        for j in ready:
+            j.done += int(valids[j.slot])
+            self.pos[j.slot] = j.start + j.done
+        still = []
+        for j in pending:
+            if j.wait_for is None and j.done >= j.total:
+                self._finish_job(j)     # decode-eligible next round
+            else:
+                still.append(j)
+        # unblock followers BEFORE retirement can free a leader's pages
+        self._apply_wave_aliases(still)
+        still = [j for j in still if not j.finished]
+        if decode:
+            arr = np.asarray(nxt)
+            self.decode_steps += 1
+            self._gen_tokens += len(decode)
+            for k, i in enumerate(decode):
+                tok = int(arr[k])
+                req = self.slots[i]
+                req.out.append(tok)
+                self.tokens[i] = tok
+                self.pos[i] += 1
+                self.slot_gen[i] += 1
+                if (self.slot_gen[i] >= req.max_new
+                        or self.pos[i] >= self.max_len - 1):
+                    req.done = True
+                    self.slots[i] = None
+                    self._release_slot(i)
+        return still
+
+    def _run_fused_rounds(self, jobs: List[_PrefillJob]):
+        """Fused-mode admission: same accounting/rollback contract as
+        ``_run_prefills``, but every round is one ragged fused program that
+        also advances all non-prefilling decode slots — so admitting new
+        prompts costs ZERO extra program launches per cycle. Per-request
+        token streams are unchanged vs the separate-program path (each
+        row's math depends only on its own cache/position; the subprocess
+        identity test asserts bitwise equality)."""
+        t0 = time.perf_counter()
+        try:
+            pending = []
+            for job in jobs:
+                self.prefill_tokens += len(job.req.prompt)
+                self.prefill_forwards_saved += (
+                    self._n_chunks(len(job.req.prompt) - 1)
+                    - self._n_chunks(job.total))
+                if job.total == 0:
+                    self._finish_job(job)
+                else:
+                    pending.append(job)
+            if self.prefix_cache is not None:
+                self._plan_wave_dedupe(pending)
+            while pending:
+                pending = self._fused_round(pending)
         except OutOfPagesError as err:
             for job in jobs:
                 if not job.finished:
@@ -804,12 +1042,13 @@ class BatchedServer:
         self.slot_gen[i] = 0
         if self.prefill_mode == "bucketed":
             job = _PrefillJob(i, req, start)
-            if self._prefill_group_cap() > 1:
+            if self.fused or self._prefill_group_cap() > 1:
                 jobs.append(job)     # cycle runs these batched at the end
             else:
-                # sequential discipline: prefill AND cache-insert complete
-                # before the next admission plans, so a same-wave prompt
-                # can still alias this request's fresh pages
+                # sequential discipline (explicit --prefill-batch 1):
+                # prefill AND cache-insert complete before the next
+                # admission plans, so a same-wave prompt can still alias
+                # this request's fresh pages through the trie
                 self._run_prefills([job])
         else:
             self._prefill_slot(i, req, start)
@@ -920,7 +1159,10 @@ class BatchedServer:
         else:
             self._admit_fifo(queue, jobs)
         if jobs:
-            self._run_prefills(jobs)
+            if self.fused:
+                self._run_fused_rounds(jobs)
+            else:
+                self._run_prefills(jobs)
 
     # -- preemption ---------------------------------------------------------
     def _preempt_gain(self, i: int) -> int:
@@ -1082,7 +1324,7 @@ class BatchedServer:
         queue: List[Request] = []
         clock = 0
         t0 = time.time()
-        gen_tokens = 0
+        gen0 = self._gen_tokens
         # instance counters are cumulative across run() calls (benchmarks
         # zero them between warmup and measurement); the verbose print
         # reports THIS run's deltas
@@ -1122,8 +1364,19 @@ class BatchedServer:
                     for i in live:
                         self._ensure_page(i, int(self.pos[i]))
                 pt = self._page_table_dev() if self.paged else None
-                nxt, _, self.caches = self.decode(
-                    self.params, tokens_dev, pos_dev, self.caches, pt)
+                if self.fused:
+                    # steady state: the SAME fused program as admission
+                    # rounds at S=1 — every row decodes, every row emits.
+                    # Bitwise-identical to self.decode (the gathers are
+                    # identity copies; see make_fused_step).
+                    nxt, _, self.caches = self._fused(
+                        self.params, tokens_dev[:, None], pos_dev,
+                        self._ones_dev, self.caches, pt, self._arange_dev)
+                else:
+                    nxt, _, self.caches = self.decode(
+                        self.params, tokens_dev, pos_dev, self.caches, pt)
+                self.program_launches += 1
+                self.cycles += 1
                 nxt.copy_to_host_async()
                 fetches.append((nxt, tuple(self.slots)))
                 # idle slots hold their token (keeps runs reproducible
@@ -1135,7 +1388,7 @@ class BatchedServer:
                     self.pos[i] += 1
                     self.slot_gen[i] += 1
                 self.decode_steps += 1
-                gen_tokens += len(live)
+                self._gen_tokens += len(live)
             # span boundary: materialize generated tokens, retire finishers
             last_np = None
             for nxt_dev, owners in fetches:
@@ -1154,17 +1407,21 @@ class BatchedServer:
                     self._release_slot(i)
             clock += span
         dt = time.time() - t0
+        gen_tokens = self._gen_tokens - gen0
         if verbose:
             layout = (f"paged ps={self.page_size} "
                       f"free={self.allocator.num_free}"
                       if self.paged else "dense")
             steps = self.decode_steps - steps0
+            mode = "fused" if self.fused else self.prefill_mode
             print(f"[serve] {steps} decode steps, "
                   f"{self.prefill_forwards - pf0} prefill forwards "
-                  f"({self.prefill_mode}), {len(requests)} requests, "
+                  f"({mode}), {len(requests)} requests, "
                   f"{gen_tokens / max(dt, 1e-9):,.1f} tok/s "
                   f"({steps * self.B / max(dt, 1e-9):,.1f} "
-                  f"tok-slots/s, {layout}, attn={self.attn_impl})")
+                  f"tok-slots/s, {layout}, attn={self.attn_impl}, "
+                  f"{self.program_launches} programs / "
+                  f"{self.cycles} cycles)")
             if self.prefix_cache is not None:
                 s = self.prefix_cache.stats()
                 print(f"[serve] prefix cache: {s['hits']}/{s['lookups']} "
@@ -1319,9 +1576,18 @@ def main(argv=None):
     ap.add_argument("--prefill-batch", type=int, default=0,
                     help="max same-bucket prompts stacked into ONE batched "
                          "prefill forward per admission cycle (0 = auto: "
-                         "the batch size, or 1 with --prefix-cache on so "
-                         "same-wave prompts can still alias each other's "
-                         "fresh pages; 1 = sequential reference)")
+                         "the batch size — intra-wave prefix sharing is "
+                         "handled by wave dedupe, so this composes with "
+                         "--prefix-cache; 1 = sequential reference)")
+    ap.add_argument("--fused", choices=["on", "off"], default="off",
+                    help="on = ONE ragged [batch, bucket] program per "
+                         "scheduler cycle: prefill chunks and decode "
+                         "tokens share a single variable-length forward "
+                         "(per-row start/length/page-table, LM head only "
+                         "on emitting rows), bitwise-identical to the "
+                         "separate-program path; needs bucketed prefill. "
+                         "--prefill-batch is ignored in fused mode (every "
+                         "cycle is already one program)")
     ap.add_argument("--kv-profile", default="",
                     help="path to a core.policy.PrecisionPolicy JSON (e.g. "
                          "core.search output): per-layer KV containers — "
@@ -1412,7 +1678,8 @@ def main(argv=None):
                         preempt=False if args.no_preempt else None,
                         kv_adapt=args.kv_adapt,
                         adapt_pages=args.kv_adapt_pages,
-                        adapt_floor_bits=args.kv_adapt_floor)
+                        adapt_floor_bits=args.kv_adapt_floor,
+                        fused=args.fused)
     import os
     if args.prefix_snapshot and os.path.exists(
             snapshot_path(args.prefix_snapshot)):

@@ -341,25 +341,30 @@ def test_requantize_partial_page_masks_stale_slots():
         np.testing.assert_allclose(rec["ks"], ref["ks"], rtol=1e-6)
 
 
-def test_widen_blob_grid_exact_and_fp_unit_scales():
-    """Widening is exact on the grid: int4 -> int8 carries the scale,
-    any grid -> fp folds the scale into the floats and RESETS the page
-    scale to 1 (a recycled fp page takes fresh fp writes that assume unit
-    scales)."""
+def test_widen_blob_recalibrates_scales():
+    """Widening is exact on the grid AND recalibrates the page scale to
+    the target container's granularity: int4 -> int8 rescales the grid by
+    16 and the scale by 1/16 (bit-identical dequant, int8-step scale for
+    later page-scale extensions); any grid -> fp keeps the grid as floats
+    with its scale CARRIED (dequant stays a float32 gather-time multiply,
+    never folded at rest)."""
     int8_caches = [(_filled_pool("int8", seed=9),)]
     narrowed, _ = requantize_page(int8_caches, 1, steps=1)   # int4 blob
     wide = widen_blob(narrowed, int8_caches)
     for nrec, wrec in zip(narrowed.arrays, wide.arrays):
         assert _rec_container(wrec) == "int8"
+        np.testing.assert_array_equal(wrec["ks"],
+                                      np.asarray(nrec["ks"]) / 16)
+        assert np.max(np.abs(wrec["k"])) <= 112    # 7 * 16 fits int8
         for a, b in zip(_deq(nrec), _deq(wrec)):
-            np.testing.assert_allclose(a, b, atol=1e-6)
+            np.testing.assert_array_equal(a, b)    # power-of-2: bitwise
     fp_caches = [(_filled_pool("fp", seed=9),)]
     narrowed_fp, _ = requantize_page(fp_caches, 1, steps=1)
     wide_fp = widen_blob(narrowed_fp, fp_caches)
     for nrec, wrec in zip(narrowed_fp.arrays, wide_fp.arrays):
         assert _rec_container(wrec) == "fp"
-        np.testing.assert_array_equal(wrec["ks"],
-                                      np.ones_like(wrec["ks"]))
+        np.testing.assert_array_equal(wrec["ks"], nrec["ks"])
+        np.testing.assert_array_equal(wrec["vs"], nrec["vs"])
         for a, b in zip(_deq(nrec), _deq(wrec)):
             np.testing.assert_allclose(a, b, atol=1e-6)
     # injecting the widened blob round-trips through the real pool
@@ -368,6 +373,41 @@ def test_widen_blob_grid_exact_and_fp_unit_scales():
     for a, b in zip(wide_fp.arrays, got.arrays):
         for f in ("k", "v", "ks", "vs"):
             np.testing.assert_array_equal(a[f], b[f])
+
+
+def test_fp_restore_scale_roundtrip_recycle_and_cow():
+    """A quant-tier restore into an fp pool carries a NON-unit page scale;
+    the read path dequantizes it correctly, a CoW copy folds it into unit
+    scale for the extender, and recycling the page with fresh fp writes
+    resets the stale scale at the page's first write."""
+    from repro.core.paged_kv import copy_pool_pages, paged_gather
+    ps, KV, hd = 4, 2, 16
+    pool = _filled_pool("fp", seed=13, num_pages=8, ps=ps, KV=KV, hd=hd)
+    caches = [(pool,)]
+    narrowed, _ = requantize_page(caches, 1, steps=1)        # int8 blob
+    want = [_deq(r) for r in narrowed.arrays]
+    caches = inject_page(caches, widen_blob(narrowed, caches), 5)
+    rec = extract_page(caches, 5).arrays[0]
+    assert not np.allclose(rec["ks"], 1.0)                   # scale carried
+    pool = caches[0][0]
+    pt = jnp.asarray([[5]], np.int32)
+    k, v = paged_gather(pool, pt, container="fp")            # read path
+    np.testing.assert_allclose(np.asarray(k)[0], want[0][0], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v)[0], want[0][1], atol=1e-6)
+    # CoW: the copy folds to unit scale, values preserved
+    pool2 = copy_pool_pages(pool, 5, 6)
+    np.testing.assert_array_equal(np.asarray(pool2["k_scale"][6]), 1.0)
+    k2, _ = paged_gather(pool2, jnp.asarray([[6]], np.int32), container="fp")
+    np.testing.assert_allclose(np.asarray(k2), np.asarray(k), atol=1e-6)
+    # recycle: a fresh fp write at offset 0 resets the stale scale
+    rng = np.random.default_rng(14)
+    knew = jnp.asarray(rng.normal(size=(1, 1, KV, hd)), jnp.float32)
+    pool3 = paged_update(pool, knew, knew, pt,
+                         jnp.asarray([0], jnp.int32), page_size=ps,
+                         container="fp")
+    np.testing.assert_array_equal(np.asarray(pool3["k_scale"][5]), 1.0)
+    k3, _ = paged_gather(pool3, pt, container="fp")
+    np.testing.assert_array_equal(np.asarray(k3)[0, 0], np.asarray(knew)[0, 0])
 
 
 def test_quant_tier_park_deepen_restore_accounting():

@@ -195,6 +195,28 @@ def test_evict_lru_leaf_first_and_respects_references():
     assert cache.clear() == 0
 
 
+def test_heat_aware_victim_hot_old_outlives_cold_young():
+    """Victim picking is age+hit-count scored, not pure LRU: a node that is
+    OLDER by stamp but frequently hit outlives a younger never-hit node
+    under demotion pressure."""
+    cache, al, host = _mk_tiered()
+    pages_hot = _insert_seq(cache, al, [0, 0])       # inserted FIRST
+    for _ in range(8):                               # ...but hot: 8 hits
+        assert cache.lookup([0, 0]).matched == 2
+    pages_cold = _insert_seq(cache, al, [1, 1])      # younger stamp, 0 hits
+    hot = cache.lookup([0, 0], record=False).nodes[0]
+    cold = cache.lookup([1, 1], record=False).nodes[0]
+    assert cold.stamp > hot.stamp                    # cold is LRU-younger
+    assert cache._heat(hot) > cache._heat(cold)      # ...but heat-colder
+    al.free(pages_hot)
+    al.free(pages_cold)
+    assert cache.evict(1) == 1
+    assert cache.demotions == 1
+    assert hot.resident and not cold.resident        # cold young one spilled
+    # under pure LRU the hot (stamp-older) node would have been the victim
+    assert cache.clear() == 0
+
+
 def test_evict_keeps_ancestors_of_referenced_pages():
     """A referenced child pins its ancestors: evicting them would leave a
     chain with a hole while a reader still aliases the child."""
