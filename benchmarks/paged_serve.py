@@ -86,7 +86,7 @@ from repro.configs.registry import get_smoke_config
 from repro.launch.serve import BatchedServer, Request
 from repro.models.transformer import init_model
 
-from .common import save_json
+from .common import RESULTS, save_json
 
 BENCH_TRAJECTORY = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
@@ -154,9 +154,10 @@ def bench_one(cfg, params, *, name, requests, batch, max_len, kv_bits,
                         2)
                 for i, L in enumerate([2, 3, 5, 9, min(13, max_len // 2)])]
         srv.run(reqs)
-        srv.prefill_forwards = srv.prefill_tokens = 0
-        srv.prefill_s = 0.0
-        srv.decode_steps = 0
+        # registry-wide zero at the warmup boundary: every serve counter is
+        # registry-backed now, so one reset() replaces the old per-counter
+        # hand-zeroing (and can't silently miss a newly added counter)
+        srv.metrics.reset()
     reqs = mk_requests(cfg.vocab_size, requests,
                        max_new=srv.max_len // 2, seed=0)
     t0 = time.time()
@@ -416,7 +417,9 @@ def run_overcommit(*, arch="qwen2-72b", verbose=True, fast=False):
     and no host-tier page leaks after release."""
     cfg = get_smoke_config(arch)
     params = init_model(jax.random.PRNGKey(0), cfg)
-    waves = (3, 1, 2) if fast else (4, 2, 3)
+    # fast needs 4 long decodes: 3 no longer oversubscribe the pool since
+    # re-aliasing + requant relief landed, so preemption would never fire
+    waves = (4, 1, 2) if fast else (4, 2, 3)
     sys_len, page_size, max_len, batch = 21, 8, 64, 3
     # pool sized to ~2 concurrent long requests; the OFFERED demand
     # (waves[0] alone needs waves[0]*5 pages) oversubscribes it ~2.5x
@@ -425,13 +428,21 @@ def run_overcommit(*, arch="qwen2-72b", verbose=True, fast=False):
                                         waves=waves, seed=0)
     common = dict(batch_size=batch, max_len=max_len, page_size=page_size,
                   num_pages=num_pages, kv_bits=8, prefix_cache="on",
-                  kv_offload="host", sched="slo")
+                  kv_offload="host", sched="slo", metrics="on")
 
     srv = BatchedServer(cfg, params, **common)
     t0 = time.time()
     reqs = srv.run(mk())
     dt = time.time() - t0
     offered_pages = sum(srv._pages_needed(r) for r in reqs)
+    # SLO fields + trace artifact come from the COLD run only: the warm
+    # restart pass below re-issues the same rids, which would fold a second
+    # incarnation of every request into the goodput denominator
+    slo = srv.tracer.slo_summary()
+    os.makedirs(RESULTS, exist_ok=True)
+    trace_path = srv.tracer.export_chrome(
+        os.path.join(RESULTS, "trace_overcommit.json"))
+    n_events = len(srv.tracer.events)
 
     # --- gate: a bounded pool served an overcommitted offered load ---
     rejected = [r for r in reqs if r.error is not None]
@@ -518,6 +529,12 @@ def run_overcommit(*, arch="qwen2-72b", verbose=True, fast=False):
         "token_agreement_vs_uninterrupted": float(agree),
         "tokens_per_s": sum(len(r.out) for r in reqs) / max(dt, 1e-9),
         "wall_s": dt,
+        # SLO fields computed from the request-lifecycle trace (cold run)
+        "goodput": slo["goodput"],
+        "deadline_misses": slo["deadline_misses"],
+        "ttft_p50_s": slo["ttft_p50_s"], "ttft_p99_s": slo["ttft_p99_s"],
+        "tpot_p50_s": slo["tpot_p50_s"], "tpot_p99_s": slo["tpot_p99_s"],
+        "trace_path": trace_path, "trace_events": n_events,
     }
     if verbose:
         print(f"[overcommit_serve] arch={arch} offered "
@@ -538,6 +555,12 @@ def run_overcommit(*, arch="qwen2-72b", verbose=True, fast=False):
               f"restored; hit rate cold {res['prefix_hit_rate_cold']:.0%} "
               f"-> warm {warm_rate:.0%} -> restored {s2['hit_rate']:.0%}")
         print(f"  agreement vs uninterrupted run {agree:.1%}; no leaks")
+        print(f"  slo: goodput {res['goodput']:.2f} "
+              f"({res['deadline_misses']} deadline misses), ttft p50 "
+              f"{1e3 * (res['ttft_p50_s'] or 0):.1f} ms / p99 "
+              f"{1e3 * (res['ttft_p99_s'] or 0):.1f} ms, tpot p50 "
+              f"{1e3 * (res['tpot_p50_s'] or 0):.2f} ms; {n_events} trace "
+              f"events -> {os.path.basename(trace_path)}")
     save_json("overcommit_serve.json", res)
     return res
 
@@ -760,7 +783,8 @@ def run_ragged(*, arch="qwen2-72b", requests=12, batch=4, verbose=True,
         srv = BatchedServer(cfg, params, batch_size=batch, max_len=max_len,
                             page_size=page_size, num_pages=num_pages,
                             kv_bits=8, prefill="bucketed",
-                            prefill_bucket=16, prefix_cache="on", **kw)
+                            prefill_bucket=16, prefix_cache="on",
+                            metrics="on", **kw)
         t0 = time.time()
         reqs = srv.run(mk())
         dt = time.time() - t0
@@ -797,6 +821,15 @@ def run_ragged(*, arch="qwen2-72b", requests=12, batch=4, verbose=True,
             f"prefix-aware wave dedupe failed to reduce prefill forwards: "
             f"{seq.prefill_forwards} sequential vs "
             f"{bat.prefill_forwards} batched under the prefix cache")
+    # SLO reduction from the fused run's lifecycle trace + Chrome artifact;
+    # the registry double-checks the one-launch-per-cycle contract through
+    # the same counters the gate above read via legacy attributes
+    slo = fus.tracer.slo_summary()
+    assert (fus.metrics.counter("serve.program_launches").value
+            == fus.metrics.counter("serve.cycles").value)
+    os.makedirs(RESULTS, exist_ok=True)
+    trace_path = fus.tracer.export_chrome(
+        os.path.join(RESULTS, "trace_ragged.json"))
     res = {
         "requests": requests, "batch": batch, "sys_len": sys_len,
         "max_new": max_new,
@@ -812,6 +845,11 @@ def run_ragged(*, arch="qwen2-72b", requests=12, batch=4, verbose=True,
         "token_agreement_fused": agree_fus,
         "token_agreement_batched": agree_bat,
         "wall_s_separate": t_seq, "wall_s_fused": t_fus,
+        # SLO fields computed from the fused run's lifecycle trace
+        "goodput": slo["goodput"],
+        "ttft_p50_s": slo["ttft_p50_s"], "ttft_p99_s": slo["ttft_p99_s"],
+        "tpot_p50_s": slo["tpot_p50_s"], "tpot_p99_s": slo["tpot_p99_s"],
+        "trace_path": trace_path, "trace_events": len(fus.tracer.events),
     }
     if verbose:
         print(f"[ragged] {requests} queued shared-prefix requests "
@@ -821,6 +859,12 @@ def run_ragged(*, arch="qwen2-72b", requests=12, batch=4, verbose=True,
               f"prefill fwd {res['prefill_forwards_sequential']} -> "
               f"{res['prefill_forwards_batched']} (wave dedupe), "
               f"agreement fused {agree_fus:.1%} / batched {agree_bat:.1%}")
+        print(f"  slo (fused): goodput {res['goodput']:.2f}, ttft p50 "
+              f"{1e3 * (res['ttft_p50_s'] or 0):.1f} ms / p99 "
+              f"{1e3 * (res['ttft_p99_s'] or 0):.1f} ms, tpot p50 "
+              f"{1e3 * (res['tpot_p50_s'] or 0):.2f} ms; "
+              f"{res['trace_events']} trace events -> "
+              f"{os.path.basename(trace_path)}")
     save_json("ragged_serve.json", res)
     return res
 
@@ -927,7 +971,9 @@ def run(*, arch="qwen2-72b", requests=10, batch=4, max_len=64, page_size=16,
              "demotions", "promotions",
              "host_peak_pages", "kv_inventory",
              "prefix_hit_rate_restored", "prefix_hit_rate_warm",
-             "token_agreement_vs_uninterrupted")}
+             "token_agreement_vs_uninterrupted",
+             "goodput", "deadline_misses", "ttft_p50_s", "ttft_p99_s",
+             "tpot_p50_s", "tpot_p99_s")}
     out = {"arch": arch, "batch": batch, "max_len": max_len,
            "page_size": page_size, "rows": rows, "summary": summary}
     save_json("paged_serve.json", out)

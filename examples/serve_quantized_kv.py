@@ -125,6 +125,34 @@ bucketed prefill):
   prefill forwards 13 -> 9 and fused cuts total program launches 61 -> 52
   at equal decode steps and 100% token agreement.
 
+Since PR 8 the whole serving path is **observable** (``--metrics on``;
+``runtime.telemetry``):
+
+* one injectable :class:`~repro.runtime.telemetry.MetricsRegistry` per
+  server threads through allocator, scheduler, prefix cache and host/quant
+  tiers — every legacy counter attribute (``prefill_forwards``,
+  ``preempt_count``, ``prefix_cache.hits``, …) is now registry-backed
+  (``serve.*`` / ``sched.*`` / ``prefix.*`` / ``alloc.*`` / ``kv.*``
+  names), with live ``kv.*`` gauges mirroring ``kv_inventory()`` exactly.
+  ``registry.reset()`` / ``checkpoint()`` / ``since()`` are the sanctioned
+  warmup/measurement boundary (benchmarks no longer hand-zero attributes).
+* a span :class:`~repro.runtime.telemetry.Tracer` records the request
+  lifecycle — arrive -> admit/defer/reject -> prefill chunks -> decode
+  spans -> preempt/offload/resume -> finish — on a monotonic clock and
+  exports **Chrome trace-event JSON** via ``--trace-out trace.json``: load
+  it at https://ui.perfetto.dev (drag-and-drop) or chrome://tracing; tid 0
+  is the engine track, tid 1+rid one track per request. The same records
+  reduce to SLO metrics (``tracer.slo_summary()``): exact p50/p99 **TTFT**
+  and **TPOT**, and **goodput** — the fraction of offered requests that
+  finished by their ``deadline_step`` (printed after every ``--metrics
+  on`` run; the ragged/overcommit benches append them to BENCH_serve.json).
+* ``--metrics-out metrics.jsonl`` streams a ``registry.snapshot()`` JSONL
+  line every ``--metrics-every`` scheduler cycles (counters + gauges +
+  histogram summaries) for dashboard scraping.
+* ``--metrics off`` (default) is the NullTracer path: telemetry lives
+  entirely outside jitted code, so off is bitwise-identical to the
+  pre-telemetry server (asserted in tests/test_telemetry.py).
+
 Error/failure semantics: paged admission preflights a request's WORST-CASE
 page demand (prompt + max_new; with prefix sharing, only the non-shared
 suffix plus one promotion page per matched host page is charged). A
@@ -321,6 +349,32 @@ def main():
     assert srv_ad.release_prefix_cache() == 0
     assert srv_ad.quant_tier.num_pages == 0
     assert srv_ad.host_store.num_pages == 0
+
+    print("=== telemetry: lifecycle trace + SLO goodput (--metrics on) ===")
+    srv_tm = BatchedServer(cfg, params, batch_size=1, max_len=96, kv_bits=8,
+                           page_size=16, num_pages=5, prefix_cache="on",
+                           kv_offload="host", sched="slo", metrics="on")
+    srv_tm.run(mk_tiered(), verbose=True)
+    slo = srv_tm.tracer.slo_summary()
+    print(f"  slo_summary: goodput {slo['goodput']:.2f} "
+          f"({slo['finished']}/{slo['requests']} finished, "
+          f"{slo['deadline_misses']} deadline misses, "
+          f"{slo['preemptions']} preemptions)")
+    print(f"  ttft p50 {1e3 * slo['ttft_p50_s']:.1f} ms / p99 "
+          f"{1e3 * slo['ttft_p99_s']:.1f} ms; "
+          f"tpot p50 {1e3 * (slo['tpot_p50_s'] or 0):.2f} ms")
+    m = srv_tm.metrics
+    print(f"  registry: serve.decode_steps="
+          f"{m.counter('serve.decode_steps').value} "
+          f"serve.preempt_count={m.counter('serve.preempt_count').value} "
+          f"prefix.hits={m.counter('prefix.hits').value} "
+          f"kv.device_bytes={m.gauge('kv.device_bytes').value} "
+          f"kv.host_pages={m.gauge('kv.host_pages').value}")
+    trace_out = os.path.join(tempfile.mkdtemp(), "serve_trace.json")
+    srv_tm.tracer.export_chrome(trace_out)
+    print(f"  {len(srv_tm.tracer.events)} trace events -> {trace_out} "
+          f"(load at https://ui.perfetto.dev or chrome://tracing)")
+    assert srv_tm.release_prefix_cache() == 0
 
     # admission preflight: a request whose prompt + max_new can never be
     # backed by the pool is rejected with counts — recorded on the request

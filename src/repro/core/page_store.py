@@ -34,11 +34,13 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
+from ..runtime.telemetry import MetricsRegistry, metric_attr
 from .paged_kv import (_SCALE_EPS, iter_kv_pools, map_kv_pools,
                        pool_container)
 from .qtensor import pack_bits, unpack_bits, values_per_word
@@ -155,7 +157,8 @@ class HostPageStore:
     on a full store raises; callers check :meth:`has_room` first.
     """
 
-    def __init__(self, max_pages: Optional[int] = None):
+    def __init__(self, max_pages: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         if max_pages is not None and max_pages < 1:
             raise ValueError("max_pages must be >= 1 (or None = unbounded)")
         self.max_pages = max_pages
@@ -168,6 +171,9 @@ class HostPageStore:
         self.drops = 0
         self.peak_pages = 0
         self.peak_bytes = 0
+        if metrics is not None:
+            metrics.register_gauge("host.bytes", lambda: self.nbytes)
+            metrics.register_gauge("host.pages", lambda: self.num_pages)
 
     @property
     def num_pages(self) -> int:
@@ -226,14 +232,22 @@ class TieredPager:
     never touches pinned or non-resident nodes.
     """
 
+    # registry-backed legacy counters (see runtime.telemetry.metric_attr)
+    demotions = metric_attr("pager.demotions")
+    promotions = metric_attr("pager.promotions")
+
     def __init__(self, allocator, host: HostPageStore, get_caches,
-                 set_caches):
+                 set_caches, metrics: Optional[MetricsRegistry] = None):
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.allocator = allocator
         self.host = host
         self._get = get_caches
         self._set = set_caches
         self.demotions = 0
         self.promotions = 0
+        # demote/promote wall latencies (exact p50/p99 via the registry)
+        self._h_demote = self.metrics.histogram("pager.demote_s")
+        self._h_promote = self.metrics.histogram("pager.promote_s")
 
     def host_room(self) -> float:
         """Host pages still available (inf when unbounded)."""
@@ -249,20 +263,24 @@ class TieredPager:
         reference, return the host handle. The caller must hold the ONLY
         reference (refcount 1) or the page content could keep changing
         under other owners after the snapshot."""
+        t0 = time.perf_counter()
         blob = extract_page(self._get(), page)
         h = self.host.put(blob)
         self.allocator.free([page])
         self.demotions += 1
+        self._h_demote.observe(time.perf_counter() - t0)
         return h
 
     def promote(self, handle: int) -> int:
         """Allocate a device page (may trigger reclaim pressure), inject the
         host blob into it, release the host copy; returns the page id (at
         refcount 1, owned by the caller)."""
+        t0 = time.perf_counter()
         page = self.allocator.alloc()
         blob = self.host.pop(handle)
         self._set(inject_page(self._get(), blob, page))
         self.promotions += 1
+        self._h_promote.observe(time.perf_counter() - t0)
         return page
 
 
@@ -460,9 +478,13 @@ class QuantTierStore:
     """
 
     def __init__(self, get_caches, set_caches, *, pages: int,
-                 floor_bits: int = 4):
+                 floor_bits: int = 4,
+                 metrics: Optional[MetricsRegistry] = None):
         if pages < 1:
             raise ValueError("quant tier needs >= 1 page of capacity")
+        if metrics is not None:
+            metrics.register_gauge("tier.bytes", lambda: self.nbytes)
+            metrics.register_gauge("tier.pages", lambda: self.num_pages)
         if floor_bits not in (4, 8):
             raise ValueError("floor_bits must be 4 or 8")
         self._get = get_caches

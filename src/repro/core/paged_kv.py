@@ -189,9 +189,14 @@ class PageAllocator:
     :class:`OutOfPagesError` report the host-tier inventory alongside the
     device counts; ``requant_inventory`` does the same for the pages the
     quant-adaptation tier could still narrow in place.
+
+    ``metrics`` (optional :class:`repro.runtime.telemetry.MetricsRegistry`)
+    counts allocations ("alloc.allocs") and pressure invocations
+    ("alloc.reclaims"), and registers a live "alloc.free_pages" gauge —
+    free-list occupancy readable from any snapshot.
     """
 
-    def __init__(self, num_pages: int):
+    def __init__(self, num_pages: int, *, metrics=None):
         if num_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is scratch)")
         self.num_pages = num_pages
@@ -201,6 +206,13 @@ class PageAllocator:
         self.pressure: List = []      # further n -> n_freed callbacks
         self.host_inventory = None    # optional: () -> host-tier page count
         self.requant_inventory = None  # optional: () -> requantizable pages
+        if metrics is None:
+            from ..runtime.telemetry import MetricsRegistry
+            metrics = MetricsRegistry()
+        self.metrics = metrics
+        self._c_allocs = metrics.counter("alloc.allocs")
+        self._c_reclaims = metrics.counter("alloc.reclaims")
+        metrics.register_gauge("alloc.free_pages", lambda: len(self._free))
 
     @property
     def num_free(self) -> int:
@@ -246,6 +258,7 @@ class PageAllocator:
     def _apply_pressure(self, needed: int) -> None:
         if self._free:
             return
+        self._c_reclaims.inc()
         if self.reclaim is not None:
             self.reclaim(needed)
         for fn in self.pressure:
@@ -262,6 +275,7 @@ class PageAllocator:
                                   host_pages=self.host_pages())
         page = self._free.pop()
         self._refs[page] = 1
+        self._c_allocs.inc()
         return page
 
     def incref(self, page: int) -> None:

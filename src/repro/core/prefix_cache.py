@@ -65,6 +65,7 @@ import dataclasses
 import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from ..runtime.telemetry import MetricsRegistry, NullTracer, metric_attr
 from .paged_kv import PageAllocator
 
 __all__ = ["PrefixCache", "PrefixHit"]
@@ -153,11 +154,33 @@ class PrefixCache:
     resident-only nodes).
     """
 
+    # registry-backed legacy counter attributes (telemetry.metric_attr):
+    # ``cache.stats()`` and every historical reader keep working, but the
+    # values live in ``self.metrics`` under "prefix.*"
+    lookups = metric_attr("prefix.lookups")
+    hits = metric_attr("prefix.hits")
+    hit_tokens = metric_attr("prefix.hit_tokens")
+    lookup_tokens = metric_attr("prefix.lookup_tokens")
+    inserted_pages = metric_attr("prefix.inserted_pages")
+    cow_copies = metric_attr("prefix.cow_copies")
+    evictions = metric_attr("prefix.evictions")
+    demotions = metric_attr("prefix.demotions")
+    promotions = metric_attr("prefix.promotions")
+    host_drops = metric_attr("prefix.host_drops")
+    restored_pages = metric_attr("prefix.restored_pages")
+    requants = metric_attr("prefix.requants")
+    deepens = metric_attr("prefix.deepens")
+    tier_promotions = metric_attr("prefix.tier_promotions")
+
     def __init__(self, allocator: PageAllocator, page_size: int,
                  profile_key: str = "", pager=None, tier=None,
-                 heat_boost: int = 16):
+                 heat_boost: int = 16, metrics: Optional[MetricsRegistry]
+                 = None, tracer=None):
         if page_size < 1:
             raise ValueError("page_size must be >= 1")
+        # telemetry first: counter attributes below are registry-backed
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NullTracer()
         self.allocator = allocator
         self.page_size = page_size
         self.profile_key = profile_key
@@ -169,7 +192,8 @@ class PrefixCache:
         self.heat_boost = heat_boost
         self._roots: Dict[str, _Node] = {}
         self._clock = itertools.count()
-        # instrumentation (benchmarks/serve read these)
+        # instrumentation (benchmarks/serve read these; the zeroing here
+        # initializes the "prefix.*" registry counters)
         self.lookups = 0
         self.hits = 0
         self.hit_tokens = 0
@@ -403,12 +427,14 @@ class PrefixCache:
             node.tier = None
             node.page = page
             self.tier_promotions += 1
+            self.tracer.instant("prefix.tier_promote", args={"page": page})
             return page
         if self.pager is None:
             raise RuntimeError("host-state node without a pager")
         node.page = self.pager.promote(node.host)
         node.host = None
         self.promotions += 1
+        self.tracer.instant("prefix.promote", args={"page": node.page})
         return node.page
 
     # -- insert -------------------------------------------------------------
@@ -514,6 +540,7 @@ class PrefixCache:
         self.pager.host.drop(victim.host)
         self._detach(victim)
         self.host_drops += 1
+        self.tracer.instant("prefix.host_drop")
         return True
 
     def _drop_one(self) -> bool:
@@ -531,6 +558,7 @@ class PrefixCache:
         self._detach(victim)
         self.allocator.free([victim.page])
         self.evictions += 1
+        self.tracer.instant("prefix.drop")
         return True
 
     def _demote_one(self) -> bool:
@@ -549,6 +577,7 @@ class PrefixCache:
         victim.host = self.pager.demote(victim.page)
         victim.page = -1
         self.demotions += 1
+        self.tracer.instant("prefix.demote")
         if self.demotions == 1:
             self.requants_at_first_demotion = self.requants
         return True
@@ -579,6 +608,7 @@ class PrefixCache:
         victim.page = -1
         victim.tier = handle
         self.requants += 1
+        self.tracer.instant("prefix.requant")
         return True
 
     def _deepen_one(self) -> bool:
@@ -592,6 +622,7 @@ class PrefixCache:
         for n in parked:
             if self.tier.deepen(n.tier, valid_len=n.count):
                 self.deepens += 1
+                self.tracer.instant("prefix.deepen")
                 return True
         return False
 

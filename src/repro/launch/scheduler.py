@@ -30,6 +30,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, List, Optional, Tuple
 
+from ..runtime.telemetry import MetricsRegistry, metric_attr
+
 _NO_DEADLINE = float("inf")
 
 
@@ -60,8 +62,13 @@ def request_key(req) -> Tuple[int, float, int, int]:
 class SLOScheduler:
     """Stateless-ish policy object (holds only the knobs + counters)."""
 
-    def __init__(self, policy: Optional[SchedPolicy] = None):
+    # registry-backed legacy attribute (see runtime.telemetry.metric_attr)
+    ooo_admissions = metric_attr("sched.ooo_admissions")
+
+    def __init__(self, policy: Optional[SchedPolicy] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.policy = policy or SchedPolicy()
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.ooo_admissions = 0   # admissions past a deferred head
 
     def sort_queue(self, queue: List) -> None:

@@ -150,6 +150,8 @@ from ..core.prefix_cache import PrefixCache
 from ..models.transformer import init_cache, init_model
 from ..quant.apply import (build_model_quant, kv_profile_key,
                            transformer_layer_names)
+from ..runtime.telemetry import (MetricsRegistry, MetricsSnapshotter,
+                                 make_tracer, metric_attr)
 from .scheduler import SchedPolicy, SLOScheduler
 from .steps import make_chunk_prefill_step, make_decode_step, make_fused_step
 
@@ -260,7 +262,34 @@ class BatchedServer:
     single batched prefill forward (0 = auto, 1 = sequential).
     ``attn_impl``: "gather" (jnp reference) or "pallas" (the unified
     variable-length paged chunk kernel, decode AND prefill; paged only).
+
+    ``metrics``: "on" records request-lifecycle spans on ``self.tracer``
+    (Chrome-trace exportable) and enables the JSONL snapshot stream;
+    "off" (default) installs the no-op ``NullTracer``. The
+    ``MetricsRegistry`` itself is ALWAYS live — counters are pure host
+    bookkeeping outside every jitted program, so tokens are identical
+    either way (subprocess-asserted, like ``--kv-adapt off``).
+    ``registry`` injects a shared registry; the default is per-server so
+    A/B benches comparing two servers in one process never mix counters.
     """
+
+    # Legacy counter attributes, registry-backed via telemetry.metric_attr:
+    # every historical call site (`srv.prefill_forwards += 1`, test/bench
+    # reads, hand-zeroing) works unchanged, but the value lives in
+    # `self.metrics` — serve, tests and benches read one source of truth.
+    prefill_forwards = metric_attr("serve.prefill_forwards")
+    prefill_tokens = metric_attr("serve.prefill_tokens")
+    prefill_s = metric_attr("serve.prefill_s")
+    decode_steps = metric_attr("serve.decode_steps")
+    program_launches = metric_attr("serve.program_launches")
+    cycles = metric_attr("serve.cycles")
+    wave_dedup_pages = metric_attr("serve.wave_dedup_pages")
+    _gen_tokens = metric_attr("serve.gen_tokens")
+    prefix_hit_tokens = metric_attr("serve.prefix_hit_tokens")
+    prefill_forwards_saved = metric_attr("serve.prefill_forwards_saved")
+    preempt_count = metric_attr("serve.preempt_count")
+    resume_count = metric_attr("serve.resume_count")
+    realias_skipped = metric_attr("serve.realias_skipped")
 
     def __init__(self, cfg, params, *, batch_size: int, max_len: int,
                  kv_bits: int = 0, page_size: int = 0,
@@ -275,7 +304,19 @@ class BatchedServer:
                  sched: str = "fifo", admit_window: int = 4,
                  preempt: Optional[bool] = None,
                  kv_adapt: str = "off", adapt_pages: int = 0,
-                 adapt_floor_bits: int = 4, fused: str = "off"):
+                 adapt_floor_bits: int = 4, fused: str = "off",
+                 metrics: str = "off",
+                 registry: Optional[MetricsRegistry] = None,
+                 snapshot_out: Optional[str] = None,
+                 snapshot_every: int = 50):
+        # telemetry first: counter attributes below are registry-backed
+        # descriptors, so `self.metrics` must exist before any assignment
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self.tracer = make_tracer(metrics)
+        self._snapshotter = (MetricsSnapshotter(self.metrics, snapshot_out,
+                                                every=snapshot_every)
+                             if snapshot_out else None)
+        self._clock = 0         # decode-step clock of the current run()
         self.cfg = cfg
         self.params = params
         self.B = batch_size
@@ -366,7 +407,8 @@ class BatchedServer:
                              "it needs --sched slo")
         self.sched = sched
         self.scheduler = (SLOScheduler(SchedPolicy(admit_window=admit_window,
-                                                   preempt=preempt))
+                                                   preempt=preempt),
+                                       metrics=self.metrics)
                           if sched == "slo" else None)
         if kv_profile_scan not in ("group", "unroll"):
             raise ValueError(f"kv_profile_scan must be 'group' or 'unroll', "
@@ -439,7 +481,7 @@ class BatchedServer:
                 num_pages = 1 + batch_size * self.np_max  # full capacity
             paged_spec = PagedCacheSpec(page_size=page_size,
                                         num_pages=num_pages)
-            self.allocator = PageAllocator(num_pages)
+            self.allocator = PageAllocator(num_pages, metrics=self.metrics)
             self.page_size = page_size
             self.page_table = np.full((batch_size, self.np_max),
                                       SCRATCH_PAGE, np.int32)
@@ -448,17 +490,21 @@ class BatchedServer:
             self._pt_dev = _upload(self.page_table)
             self._pt_dirty = False
             if kv_offload == "host":
-                self.host_store = HostPageStore(max_pages=host_pages)
+                self.host_store = HostPageStore(max_pages=host_pages,
+                                                metrics=self.metrics)
                 self.pager = TieredPager(
                     self.allocator, self.host_store,
                     lambda: self.caches,
-                    lambda c: setattr(self, "caches", c))
+                    lambda c: setattr(self, "caches", c),
+                    metrics=self.metrics)
                 self.allocator.host_inventory = \
                     lambda: self.host_store.num_pages
             if prefix_cache == "on":
                 self.prefix_cache = PrefixCache(self.allocator, page_size,
                                                 self.profile_key,
-                                                pager=self.pager)
+                                                pager=self.pager,
+                                                metrics=self.metrics,
+                                                tracer=self.tracer)
                 # pool pressure demotes (host tier) or evicts cold cached
                 # prefixes before failing the allocation
                 self.allocator.reclaim = self.prefix_cache.evict
@@ -475,7 +521,7 @@ class BatchedServer:
                 lambda: self.caches,
                 lambda c: setattr(self, "caches", c),
                 pages=adapt_pages or self.allocator.num_usable,
-                floor_bits=adapt_floor_bits)
+                floor_bits=adapt_floor_bits, metrics=self.metrics)
             self.prefix_cache.tier = self.quant_tier
             # admission preflight / OutOfPagesError inventory hook
             self.allocator.requant_inventory = \
@@ -484,7 +530,8 @@ class BatchedServer:
         self.pos = np.zeros((batch_size,), np.int32)    # host-side lengths
         self.tokens = np.zeros((batch_size,), np.int32)  # host-side tokens
         self.slot_gen = [0] * batch_size                 # generated counts
-        # hot-path instrumentation (benchmarks/paged_serve.py reads these)
+        # hot-path instrumentation: registry-backed class descriptors (see
+        # above); zeroing them here just initializes the "serve.*" counters
         self.prefill_forwards = 0   # forward-program executions in prefill
         self.prefill_tokens = 0     # prompt tokens consumed by prefill
         self.prefill_s = 0.0
@@ -501,6 +548,22 @@ class BatchedServer:
         self.realias_skipped = 0          # preempt host-copies skipped by
         #                                   re-aliasing resident cache nodes
         self.rejected: List[Request] = []  # never-fit requests (error set)
+        # one shared KV-inventory gauge schema (``kv_inventory`` and the
+        # snapshot stream read the SAME callbacks; satellite of ISSUE 8)
+        if self.paged:
+            reg = self.metrics.register_gauge
+            reg("kv.device_bytes",
+                lambda: sum(caches_kv_bytes(self.caches).values()))
+            reg("kv.device_pages_free", lambda: self.allocator.num_free)
+            reg("kv.device_pages_usable", lambda: self.allocator.num_usable)
+            reg("kv.host_bytes",
+                lambda: self.host_store.nbytes if self.host_store else 0)
+            reg("kv.host_pages",
+                lambda: self.host_store.num_pages if self.host_store else 0)
+            reg("kv.tier_bytes",
+                lambda: self.quant_tier.nbytes if self.quant_tier else 0)
+            reg("kv.tier_pages",
+                lambda: self.quant_tier.num_pages if self.quant_tier else 0)
 
     # -- page bookkeeping ---------------------------------------------------
     def _ensure_page(self, slot: int, position: int):
@@ -697,9 +760,12 @@ class BatchedServer:
             pts[r] = self.page_table[job.slot]
         # chunk/starts/valids/pts are private copies nobody mutates later,
         # so plain asarray uploads are race-free (cf. _upload)
-        self.caches = self._chunk_prefill(
-            self.params, jnp.asarray(chunk), jnp.asarray(starts),
-            jnp.asarray(valids), self.caches, jnp.asarray(pts))
+        with self.tracer.span("prefill_chunk",
+                              args={"rows": n, "bucket": bucket,
+                                    "step": self._clock}):
+            self.caches = self._chunk_prefill(
+                self.params, jnp.asarray(chunk), jnp.asarray(starts),
+                jnp.asarray(valids), self.caches, jnp.asarray(pts))
         self.prefill_forwards += 1
         self.program_launches += 1
         for r, job in enumerate(rows):
@@ -828,9 +894,14 @@ class BatchedServer:
             emit[k] = i
         pt = self._page_table_dev()
         # private host copies nobody mutates later: plain asarray uploads
-        nxt, _, self.caches = self._fused(
-            self.params, jnp.asarray(tokens), jnp.asarray(starts),
-            jnp.asarray(valids), self.caches, pt, jnp.asarray(emit))
+        with self.tracer.span("fused_round",
+                              args={"bucket": bucket,
+                                    "prefill_rows": len(ready),
+                                    "decode_rows": len(decode),
+                                    "step": self._clock}):
+            nxt, _, self.caches = self._fused(
+                self.params, jnp.asarray(tokens), jnp.asarray(starts),
+                jnp.asarray(valids), self.caches, pt, jnp.asarray(emit))
         self.program_launches += 1
         self.cycles += 1
         self.prefill_forwards += 1
@@ -853,6 +924,8 @@ class BatchedServer:
             for k, i in enumerate(decode):
                 tok = int(arr[k])
                 req = self.slots[i]
+                if not req.out:
+                    self.tracer.req_first_token(req.rid)
                 req.out.append(tok)
                 self.tokens[i] = tok
                 self.pos[i] += 1
@@ -862,6 +935,9 @@ class BatchedServer:
                     req.done = True
                     self.slots[i] = None
                     self._release_slot(i)
+                    # fused admission rounds decode without advancing the
+                    # run clock; the cycle's clock is the finish step
+                    self._note_finish(req, self._clock)
         return still
 
     def _run_fused_rounds(self, jobs: List[_PrefillJob]):
@@ -1006,12 +1082,14 @@ class BatchedServer:
         for the rest of the cycle sees it. (Prompt validation happened in
         ``_admission_plan``, before the hit chain was pinned.)"""
         if not self.paged:
+            self.tracer.req_admit(req.rid, self._clock)
             self._prefill_slot(i, req, 0)
             self.slots[i] = req
             return
         if req._paused is not None:
             self._resume_slot(i, req, info["total"])
             return
+        self.tracer.req_admit(req.rid, self._clock)
         hit = info["hit"]
         self.slot_reserved[i] = info["total"]
         start = 0
@@ -1084,6 +1162,9 @@ class BatchedServer:
         req.error = err
         req.done = True
         self.rejected.append(req)
+        self.metrics.counter("sched.rejects").inc()
+        self.tracer.req_reject(req.rid, self._clock,
+                               reason=type(err).__name__)
 
     def _admit_fifo(self, queue: List[Request], jobs: List[_PrefillJob]):
         """Legacy FIFO admission: strict queue order, but a permanently
@@ -1098,6 +1179,8 @@ class BatchedServer:
                     self._reject(queue, 0, info["err"])
                     continue              # next head, same free slot
                 if verdict == "defer":
+                    self.metrics.counter("sched.defers").inc()
+                    self.tracer.req_defer(queue[0].rid, self._clock)
                     return                # wait for live requests' pages
                 self._do_admit(i, queue.pop(0), info, jobs)
                 break
@@ -1144,6 +1227,8 @@ class BatchedServer:
             if n:
                 preempts_left -= n
                 continue                  # re-plan the same request
+            self.metrics.counter("sched.defers").inc()
+            self.tracer.req_defer(req.rid, self._clock)
             deferred = True
             idx += 1
 
@@ -1153,16 +1238,19 @@ class BatchedServer:
         rows of different requests stack into one forward)."""
         if not queue:
             return
-        jobs: List[_PrefillJob] = []
-        if self.scheduler is not None:
-            self._admit_slo(queue, jobs)
-        else:
-            self._admit_fifo(queue, jobs)
-        if jobs:
-            if self.fused:
-                self._run_fused_rounds(jobs)
+        self.metrics.histogram("sched.queue_depth").observe(len(queue))
+        with self.tracer.span("admission", args={"queued": len(queue),
+                                                 "step": self._clock}):
+            jobs: List[_PrefillJob] = []
+            if self.scheduler is not None:
+                self._admit_slo(queue, jobs)
             else:
-                self._run_prefills(jobs)
+                self._admit_fifo(queue, jobs)
+            if jobs:
+                if self.fused:
+                    self._run_fused_rounds(jobs)
+                else:
+                    self._run_prefills(jobs)
 
     # -- preemption ---------------------------------------------------------
     def _preempt_gain(self, i: int) -> int:
@@ -1243,20 +1331,25 @@ class BatchedServer:
         if plan is None:
             plan = self._realias_plan(i)
         req = self.slots[i]
+        self.tracer.req_preempt(req.rid, self._clock)
         entries = []
-        for j, p in enumerate(self.slot_pages[i]):
-            node = plan.get(j)
-            if node is not None:
-                # page survives via the cache's reference; pin the node so
-                # eviction (demote AND drop) cannot touch it before resume
-                self.prefix_cache.pin_node(node)
-                entries.append(("alias", node))
-                self.realias_skipped += 1
-            else:
-                entries.append(("host",
-                                self.host_store.put(
-                                    extract_page(self.caches, p))))
-            self.allocator.free([p])
+        with self.tracer.req_span(req.rid, "offload",
+                                  args={"pages": len(self.slot_pages[i]),
+                                        "step": self._clock}):
+            for j, p in enumerate(self.slot_pages[i]):
+                node = plan.get(j)
+                if node is not None:
+                    # page survives via the cache's reference; pin the node
+                    # so eviction (demote AND drop) cannot touch it before
+                    # resume
+                    self.prefix_cache.pin_node(node)
+                    entries.append(("alias", node))
+                    self.realias_skipped += 1
+                else:
+                    entries.append(("host",
+                                    self.host_store.put(
+                                        extract_page(self.caches, p))))
+                self.allocator.free([p])
         self.slot_pages[i] = []
         self.page_table[i, :] = SCRATCH_PAGE
         self._pt_dirty = True
@@ -1281,24 +1374,28 @@ class BatchedServer:
         continue decoding where it left off. No prefill runs."""
         st = req._paused
         self.slot_reserved[i] = total
-        for j, (kind, val) in enumerate(st.entries):
-            if kind == "alias":
-                assert val.resident, "pinned prefix node lost residency"
-                page = val.page
-                self.allocator.incref(page)   # the slot's alias reference
-                self.prefix_cache.unpin_node(val)
-            else:
-                page = self.allocator.alloc()  # reclaim may evict/demote
-                self.caches = inject_page(self.caches,
-                                          self.host_store.pop(val), page)
-            self.page_table[i, j] = page
-            self.slot_pages[i].append(page)
-            self._pt_dirty = True
+        with self.tracer.req_span(req.rid, "resume",
+                                  args={"pages": len(st.entries),
+                                        "step": self._clock}):
+            for j, (kind, val) in enumerate(st.entries):
+                if kind == "alias":
+                    assert val.resident, "pinned prefix node lost residency"
+                    page = val.page
+                    self.allocator.incref(page)  # the slot's alias reference
+                    self.prefix_cache.unpin_node(val)
+                else:
+                    page = self.allocator.alloc()  # reclaim may evict/demote
+                    self.caches = inject_page(self.caches,
+                                              self.host_store.pop(val), page)
+                self.page_table[i, j] = page
+                self.slot_pages[i].append(page)
+                self._pt_dirty = True
         self.pos[i] = st.pos
         self.tokens[i] = st.token
         self.slot_gen[i] = st.gen
         req._paused = None
         self.resume_count += 1
+        self.tracer.req_admit(req.rid, self._clock, resumed=True)
         self.slots[i] = req
 
     # -- decode -------------------------------------------------------------
@@ -1314,6 +1411,14 @@ class BatchedServer:
             spans.append(min(req.max_new - self.slot_gen[i],
                              (self.max_len - 1) - int(self.pos[i])))
         return max(1, min(spans))
+
+    def _note_finish(self, req: Request, step: int) -> None:
+        """Retirement bookkeeping shared by the span-boundary and fused
+        paths: the deadline-miss counter is measured on the decode-step
+        clock (deterministic), the tracer closes the request's record."""
+        if req.deadline_step is not None and step > req.deadline_step:
+            self.metrics.counter("sched.deadline_misses").inc()
+        self.tracer.req_finish(req.rid, step, len(req.out))
 
     def run(self, requests: List[Request], *, verbose: bool = False):
         # arrivals are measured on a per-run decode-step clock
@@ -1332,8 +1437,12 @@ class BatchedServer:
         rejected0 = len(self.rejected)
         while (pending or queue
                or any(s is not None for s in self.slots)):
+            self._clock = clock
             while pending and pending[0].arrive_step <= clock:
-                queue.append(pending.pop(0))
+                req = pending.pop(0)
+                self.tracer.req_arrive(req.rid, req.arrive_step,
+                                       req.deadline_step)
+                queue.append(req)
             self._admit(queue)
             live = [i for i in range(self.B) if self.slots[i] is not None]
             if not live:
@@ -1359,44 +1468,52 @@ class BatchedServer:
             live_mask_dev = jnp.asarray(live_mask)
             live_inc = jnp.asarray(live_mask.astype(np.int32))
             fetches = []                       # (nxt_dev, owner snapshot)
-            for _ in range(span):
-                if self.paged:
+            with self.tracer.span("decode_span",
+                                  args={"steps": span, "rows": len(live),
+                                        "step": clock}):
+                for _ in range(span):
+                    if self.paged:
+                        for i in live:
+                            self._ensure_page(i, int(self.pos[i]))
+                    pt = self._page_table_dev() if self.paged else None
+                    if self.fused:
+                        # steady state: the SAME fused program as admission
+                        # rounds at S=1 — every row decodes, every row
+                        # emits. Bitwise-identical to self.decode (the
+                        # gathers are identity copies; see make_fused_step).
+                        nxt, _, self.caches = self._fused(
+                            self.params, tokens_dev[:, None], pos_dev,
+                            self._ones_dev, self.caches, pt,
+                            self._arange_dev)
+                    else:
+                        nxt, _, self.caches = self.decode(
+                            self.params, tokens_dev, pos_dev, self.caches,
+                            pt)
+                    self.program_launches += 1
+                    self.cycles += 1
+                    nxt.copy_to_host_async()
+                    fetches.append((nxt, tuple(self.slots)))
+                    # idle slots hold their token (keeps runs reproducible
+                    # across layouts even when idle rows share MoE capacity)
+                    tokens_dev = (nxt if all_live
+                                  else jnp.where(live_mask_dev, nxt,
+                                                 tokens_dev))
+                    pos_dev = pos_dev + live_inc
                     for i in live:
-                        self._ensure_page(i, int(self.pos[i]))
-                pt = self._page_table_dev() if self.paged else None
-                if self.fused:
-                    # steady state: the SAME fused program as admission
-                    # rounds at S=1 — every row decodes, every row emits.
-                    # Bitwise-identical to self.decode (the gathers are
-                    # identity copies; see make_fused_step).
-                    nxt, _, self.caches = self._fused(
-                        self.params, tokens_dev[:, None], pos_dev,
-                        self._ones_dev, self.caches, pt, self._arange_dev)
-                else:
-                    nxt, _, self.caches = self.decode(
-                        self.params, tokens_dev, pos_dev, self.caches, pt)
-                self.program_launches += 1
-                self.cycles += 1
-                nxt.copy_to_host_async()
-                fetches.append((nxt, tuple(self.slots)))
-                # idle slots hold their token (keeps runs reproducible
-                # across layouts even when idle rows share MoE capacity)
-                tokens_dev = (nxt if all_live
-                              else jnp.where(live_mask_dev, nxt, tokens_dev))
-                pos_dev = pos_dev + live_inc
-                for i in live:
-                    self.pos[i] += 1
-                    self.slot_gen[i] += 1
-                self.decode_steps += 1
-                self._gen_tokens += len(live)
-            # span boundary: materialize generated tokens, retire finishers
-            last_np = None
-            for nxt_dev, owners in fetches:
-                arr = np.asarray(nxt_dev)
-                last_np = arr
-                for i, req in enumerate(owners):
-                    if req is not None:
-                        req.out.append(int(arr[i]))
+                        self.pos[i] += 1
+                        self.slot_gen[i] += 1
+                    self.decode_steps += 1
+                    self._gen_tokens += len(live)
+                # span boundary: materialize tokens, retire finishers
+                last_np = None
+                for nxt_dev, owners in fetches:
+                    arr = np.asarray(nxt_dev)
+                    last_np = arr
+                    for i, req in enumerate(owners):
+                        if req is not None:
+                            if not req.out:
+                                self.tracer.req_first_token(req.rid)
+                            req.out.append(int(arr[i]))
             for i in live:
                 self.tokens[i] = int(last_np[i])
                 req = self.slots[i]
@@ -1405,7 +1522,12 @@ class BatchedServer:
                     req.done = True
                     self.slots[i] = None
                     self._release_slot(i)
+                    # everyone retiring here hit exactly span's end: span
+                    # is the min remaining capacity over live slots
+                    self._note_finish(req, clock + span)
             clock += span
+            if self._snapshotter is not None:
+                self._snapshotter.maybe_emit(self.cycles)
         dt = time.time() - t0
         gen_tokens = self._gen_tokens - gen0
         if verbose:
@@ -1469,7 +1591,10 @@ class BatchedServer:
     # -- tiered-store introspection / persistence ---------------------------
     def kv_inventory(self) -> dict:
         """Device/host split of the KV store (bytes per container, page
-        counts) — the two-tier generalization of ``pool_bytes``."""
+        counts) — the two-tier generalization of ``pool_bytes``. Scalar
+        fields read the registered ``kv.*`` gauges, so this dict, the
+        snapshot stream, and any direct ``metrics.gauge("kv.…")`` reader
+        share one schema (tests assert the byte reconciliation)."""
         if not self.paged:
             return {"device_bytes": 0, "device_by_container": {},
                     "device_pages_free": 0, "device_pages_usable": 0,
@@ -1477,19 +1602,19 @@ class BatchedServer:
                     "host_by_container": {},
                     "tier_bytes": 0, "tier_pages": 0,
                     "tier_by_container": {}}
-        dev = caches_kv_bytes(self.caches)
+        g = self.metrics.gauge
         hs = self.host_store
         qt = self.quant_tier
         return {
-            "device_bytes": sum(dev.values()),
-            "device_by_container": dev,
-            "device_pages_free": self.allocator.num_free,
-            "device_pages_usable": self.allocator.num_usable,
-            "host_bytes": hs.nbytes if hs else 0,
-            "host_pages": hs.num_pages if hs else 0,
+            "device_bytes": g("kv.device_bytes").value,
+            "device_by_container": caches_kv_bytes(self.caches),
+            "device_pages_free": g("kv.device_pages_free").value,
+            "device_pages_usable": g("kv.device_pages_usable").value,
+            "host_bytes": g("kv.host_bytes").value,
+            "host_pages": g("kv.host_pages").value,
             "host_by_container": hs.bytes_by_container() if hs else {},
-            "tier_bytes": qt.nbytes if qt else 0,
-            "tier_pages": qt.num_pages if qt else 0,
+            "tier_bytes": g("kv.tier_bytes").value,
+            "tier_pages": g("kv.tier_pages").value,
             "tier_by_container": qt.bytes_by_container() if qt else {},
         }
 
@@ -1647,7 +1772,28 @@ def main(argv=None):
                          "(if the file exists) and snapshot back at exit — "
                          "cached prefixes survive server restarts")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics", choices=["off", "on"], default="off",
+                    help="on = record request-lifecycle spans (arrival/"
+                         "admit/defer/reject/prefill/decode/preempt/"
+                         "resume/finish) on a monotonic clock and report "
+                         "an SLO summary (p50/p99 TTFT+TPOT, goodput). "
+                         "The metrics registry itself is always live; "
+                         "tokens are identical either way")
+    ap.add_argument("--trace-out", default="",
+                    help="path: export the request-lifecycle trace as "
+                         "Chrome trace-event JSON (load in chrome://"
+                         "tracing or https://ui.perfetto.dev). Implies "
+                         "--metrics on")
+    ap.add_argument("--metrics-out", default="",
+                    help="path: append a JSONL registry snapshot every "
+                         "--metrics-every scheduler cycles. Implies "
+                         "--metrics on")
+    ap.add_argument("--metrics-every", type=int, default=50,
+                    help="scheduler cycles between JSONL snapshots "
+                         "(with --metrics-out)")
     args = ap.parse_args(argv)
+    if args.trace_out or args.metrics_out:
+        args.metrics = "on"
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.family == "encoder":
@@ -1679,7 +1825,9 @@ def main(argv=None):
                         kv_adapt=args.kv_adapt,
                         adapt_pages=args.kv_adapt_pages,
                         adapt_floor_bits=args.kv_adapt_floor,
-                        fused=args.fused)
+                        fused=args.fused, metrics=args.metrics,
+                        snapshot_out=args.metrics_out or None,
+                        snapshot_every=args.metrics_every)
     import os
     if args.prefix_snapshot and os.path.exists(
             snapshot_path(args.prefix_snapshot)):
@@ -1691,6 +1839,20 @@ def main(argv=None):
         n = srv.snapshot_prefix_cache(args.prefix_snapshot)
         print(f"[serve] snapshotted {n} prefix pages to "
               f"{args.prefix_snapshot}")
+    if args.metrics == "on":
+        slo = srv.tracer.slo_summary()
+        ttft = slo.get("ttft_p50_s")
+        tpot = slo.get("tpot_p50_s")
+        print(f"[serve] slo: goodput={slo['goodput']:.3f} "
+              f"({slo['finished']}/{slo['requests']} finished, "
+              f"{slo['deadline_misses']} deadline misses), "
+              f"ttft p50={0.0 if ttft is None else ttft * 1e3:.1f}ms "
+              f"p99={0.0 if slo['ttft_p99_s'] is None else slo['ttft_p99_s'] * 1e3:.1f}ms, "
+              f"tpot p50={0.0 if tpot is None else tpot * 1e3:.2f}ms")
+    if args.trace_out:
+        srv.tracer.export_chrome(args.trace_out)
+        print(f"[serve] wrote {len(srv.tracer.events)} trace events to "
+              f"{args.trace_out}")
     for r in reqs[:4]:
         print(f"  req {r.rid}: {len(r.out)} tokens -> {r.out[:8]}...")
     return reqs

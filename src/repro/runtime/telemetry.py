@@ -1,0 +1,605 @@
+"""Serving telemetry substrate: a unified metrics registry + a span tracer.
+
+The serving stack (paged pool, prefix cache, quant tier, host tier, SLO
+scheduler, fused step) grew one ad-hoc instance counter per feature and a
+``verbose=True`` print block. This module replaces that with two small,
+dependency-free primitives every layer shares:
+
+* :class:`MetricsRegistry` — named **counters** (monotonic, resettable
+  floats/ints), **gauges** (current-state values, either set directly or
+  registered as zero-arg callbacks evaluated at read time), and
+  **histograms** that keep every observation so p50/p99 extraction is
+  EXACT (nearest-rank over the raw samples, no bucket interpolation).
+  ``reset()``/``checkpoint()``/``since()`` give benchmarks one sanctioned
+  way to split warmup from measurement instead of hand-zeroing attributes.
+  The registry is process-wide *by convention* but injectable by
+  construction: every component takes ``metrics=`` and defaults to its own
+  private registry, and :class:`repro.launch.serve.BatchedServer` threads
+  ONE registry through allocator, prefix cache, tiered pager and host/quant
+  stores — so serve, tests and benches read a single source of truth.
+
+* :class:`Tracer` — span/instant events on a monotonic clock
+  (``time.perf_counter``), with per-request lifecycle bookkeeping:
+  arrival -> admit/defer/reject -> prefill chunks -> decode spans ->
+  preempt/offload/resume -> requant/demote/promote -> finish. Events
+  export as **Chrome trace-event JSON** (``chrome://tracing`` / Perfetto:
+  ``X`` complete spans, ``i`` instants, ``M`` track names; pid 0 is the
+  server, tid 0 the engine, tid 1+rid one track per request) and the
+  request records reduce to SLO metrics: per-request **TTFT** (arrival to
+  first emitted token, wall), **TPOT** (decode seconds per generated token
+  after the first), and **goodput** — the fraction of offered requests
+  that finished by their ``deadline_step`` on the decode-step clock
+  (no-deadline requests count as met iff they completed unrejected).
+
+* :class:`NullTracer` — the disabled path: identical surface, every method
+  a no-op. Telemetry lives entirely OUTSIDE jitted code, so
+  ``--metrics off`` is bitwise-identical to the pre-telemetry server by
+  construction (the same contract ``--kv-adapt off`` keeps).
+
+* :class:`MetricsSnapshotter` — a periodic JSONL metrics stream: one
+  ``registry.snapshot()`` line every N scheduler cycles.
+
+Counter *migration* from legacy instance attributes is done with
+:class:`metric_attr`: a data descriptor that maps ``srv.prefill_forwards``
+reads/writes onto ``srv.metrics.counter("serve.prefill_forwards")`` — every
+existing call site (``+= 1``, hand-zeroing, bench reads) keeps working
+while the registry becomes the storage.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import math
+import time
+from typing import Callable, Dict, List, Optional
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "MetricsSnapshotter", "Tracer", "NullTracer", "make_tracer",
+           "metric_attr", "default_registry", "percentile"]
+
+
+def percentile(values, p: float):
+    """Exact nearest-rank percentile of ``values`` (no interpolation).
+
+    ``p`` in [0, 100]. Returns None on an empty input — absence is a fact
+    worth distinguishing from 0.0 in SLO summaries."""
+    if not values:
+        return None
+    xs = sorted(values)
+    k = max(1, math.ceil(p / 100.0 * len(xs)))
+    return xs[min(k, len(xs)) - 1]
+
+
+def _as_number(v: float):
+    """Ints stay ints in snapshots/prints (counters are mostly counts)."""
+    return int(v) if float(v).is_integer() else float(v)
+
+
+class Counter:
+    """A named, monotonically-incremented (but resettable) number.
+
+    Float storage so wall-second accumulators (``prefill_s``) ride the same
+    type; ``value`` reads back as int whenever integral."""
+
+    __slots__ = ("name", "_v")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._v = 0.0
+
+    def inc(self, n: float = 1) -> None:
+        self._v += n
+
+    @property
+    def value(self):
+        return _as_number(self._v)
+
+    @value.setter
+    def value(self, v: float) -> None:
+        self._v = float(v)
+
+    def reset(self) -> None:
+        self._v = 0.0
+
+
+class Gauge:
+    """Current-state value: set directly (``set``) or backed by a zero-arg
+    callback (``fn``) evaluated at read time — so pool occupancy / tier
+    bytes are always live without any update discipline."""
+
+    __slots__ = ("name", "_v", "fn")
+
+    def __init__(self, name: str, fn: Optional[Callable[[], float]] = None):
+        self.name = name
+        self._v = 0.0
+        self.fn = fn
+
+    def set(self, v: float) -> None:
+        self._v = float(v)
+
+    @property
+    def value(self):
+        return _as_number(self.fn() if self.fn is not None else self._v)
+
+
+class Histogram:
+    """All-samples histogram: p50/p99 are exact nearest-rank extractions
+    over the raw observations (the scales here — requests, cycles, pages —
+    are far below where reservoir sketches would earn their error)."""
+
+    __slots__ = ("name", "values")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.values: List[float] = []
+
+    def observe(self, v: float) -> None:
+        self.values.append(float(v))
+
+    @property
+    def count(self) -> int:
+        return len(self.values)
+
+    def percentile(self, p: float):
+        return percentile(self.values, p)
+
+    def summary(self) -> dict:
+        n = len(self.values)
+        if n == 0:
+            return {"count": 0}
+        return {"count": n,
+                "mean": sum(self.values) / n,
+                "min": min(self.values), "max": max(self.values),
+                "p50": self.percentile(50), "p99": self.percentile(99)}
+
+    def reset(self) -> None:
+        self.values = []
+
+
+class MetricsRegistry:
+    """Injectable named-metric store: counters, gauges, histograms.
+
+    Metric objects are created on first access (``counter(name)`` etc.) and
+    stable thereafter, so hot paths can hold the object instead of paying
+    the dict lookup per event."""
+
+    def __init__(self):
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+
+    # -- access -------------------------------------------------------------
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter(name)
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge(name)
+        return g
+
+    def register_gauge(self, name: str,
+                       fn: Callable[[], float]) -> Gauge:
+        """(Re)bind gauge ``name`` to a live zero-arg callback."""
+        g = self.gauge(name)
+        g.fn = fn
+        return g
+
+    def histogram(self, name: str) -> Histogram:
+        h = self._histograms.get(name)
+        if h is None:
+            h = self._histograms[name] = Histogram(name)
+        return h
+
+    def value(self, name: str):
+        """Read any metric by name (counter > gauge > histogram count)."""
+        if name in self._counters:
+            return self._counters[name].value
+        if name in self._gauges:
+            return self._gauges[name].value
+        if name in self._histograms:
+            return self._histograms[name].count
+        raise KeyError(f"unknown metric {name!r}")
+
+    # -- snapshot / reset ---------------------------------------------------
+    def snapshot(self) -> dict:
+        """One JSON-ready view of everything (gauge callbacks evaluated)."""
+        return {
+            "counters": {n: c.value for n, c in sorted(self._counters.items())},
+            "gauges": {n: g.value for n, g in sorted(self._gauges.items())},
+            "histograms": {n: h.summary()
+                           for n, h in sorted(self._histograms.items())},
+        }
+
+    def checkpoint(self) -> dict:
+        """Mark the current counter values (warmup boundary). Pair with
+        :meth:`since` to read measurement-window deltas without zeroing."""
+        return {n: c.value for n, c in self._counters.items()}
+
+    def since(self, checkpoint: dict) -> dict:
+        """Counter deltas accumulated after ``checkpoint``."""
+        return {n: _as_number(c.value - checkpoint.get(n, 0))
+                for n, c in sorted(self._counters.items())}
+
+    def reset(self) -> None:
+        """Zero every counter and clear every histogram — the single
+        sanctioned warmup/measurement boundary (benchmarks used to
+        hand-zero individual server attributes; see ISSUE 8 satellite 1).
+        Gauges are state, not accumulation, and are left alone."""
+        for c in self._counters.values():
+            c.reset()
+        for h in self._histograms.values():
+            h.reset()
+
+
+_DEFAULT: Optional[MetricsRegistry] = None
+
+
+def default_registry() -> MetricsRegistry:
+    """The process-wide registry, for components not owned by a server.
+    Everything in the serving path injects an explicit registry instead —
+    two servers in one process (every A/B bench) must not share counters."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = MetricsRegistry()
+    return _DEFAULT
+
+
+class metric_attr:
+    """Data descriptor mapping a legacy instance attribute onto a registry
+    counter, so ``obj.prefill_forwards += 1`` and bench-side hand-zeroing
+    keep working verbatim while ``obj.<registry_attr>`` holds the truth."""
+
+    __slots__ = ("name", "registry_attr")
+
+    def __init__(self, name: str, registry_attr: str = "metrics"):
+        self.name = name
+        self.registry_attr = registry_attr
+
+    def __get__(self, obj, objtype=None):
+        if obj is None:
+            return self
+        return getattr(obj, self.registry_attr).counter(self.name).value
+
+    def __set__(self, obj, value) -> None:
+        getattr(obj, self.registry_attr).counter(self.name).value = value
+
+
+# ---------------------------------------------------------------------------
+# Span tracer (Chrome trace-event JSON) + per-request lifecycle records
+# ---------------------------------------------------------------------------
+class _RequestRecord:
+    """One request *incarnation*: re-offering the same rid (warm bench
+    passes) opens a fresh record, so repeat traffic never merges."""
+
+    __slots__ = ("rid", "arrive_ts", "arrive_step", "deadline_step",
+                 "admit_ts", "admit_step", "first_token_ts", "finish_ts",
+                 "finish_step", "tokens", "rejected", "resumed",
+                 "preemptions", "defers")
+
+    def __init__(self, rid: int, ts: float, step: int,
+                 deadline_step: Optional[int]):
+        self.rid = rid
+        self.arrive_ts = ts
+        self.arrive_step = step
+        self.deadline_step = deadline_step
+        self.admit_ts: Optional[float] = None
+        self.admit_step: Optional[int] = None
+        self.first_token_ts: Optional[float] = None
+        self.finish_ts: Optional[float] = None
+        self.finish_step: Optional[int] = None
+        self.tokens = 0
+        self.rejected = False
+        self.resumed = 0
+        self.preemptions = 0
+        self.defers = 0
+
+
+class Tracer:
+    """Span-based request-lifecycle tracer on a monotonic clock.
+
+    Purely host-side bookkeeping — never touches device state, so enabling
+    it cannot change tokens. Events are Chrome trace-event dicts
+    (timestamps in microseconds since tracer construction):
+
+    * ``X`` complete spans (``span()``/``req_span()`` context managers),
+    * ``i`` instant events (``instant()`` and the ``req_*`` lifecycle),
+    * ``M`` metadata (process/track names, emitted lazily per track).
+
+    Track layout: pid 0, tid 0 = the serving engine (admission waves,
+    prefill chunks, fused rounds, decode spans); tid ``1 + rid`` = one
+    track per request. ``args.step`` carries the decode-step clock where
+    known, so goodput is computable from the trace alone.
+    """
+
+    enabled = True
+
+    def __init__(self, name: str = "serve"):
+        self._t0 = time.perf_counter()
+        self.events: List[dict] = []
+        self._named_tracks = set()
+        self._reqs: List[_RequestRecord] = []
+        self._open: Dict[int, _RequestRecord] = {}
+        self.events.append({"ph": "M", "name": "process_name", "pid": 0,
+                            "tid": 0, "args": {"name": name}})
+        self._track_name(0, "engine")
+
+    # -- low-level events ---------------------------------------------------
+    def _now_us(self) -> float:
+        return (time.perf_counter() - self._t0) * 1e6
+
+    def _track_name(self, tid: int, name: str) -> None:
+        if tid in self._named_tracks:
+            return
+        self._named_tracks.add(tid)
+        self.events.append({"ph": "M", "name": "thread_name", "pid": 0,
+                            "tid": tid, "args": {"name": name}})
+
+    def instant(self, name: str, *, tid: int = 0,
+                args: Optional[dict] = None) -> None:
+        ev = {"ph": "i", "name": name, "pid": 0, "tid": tid,
+              "ts": self._now_us(), "s": "t"}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    @contextlib.contextmanager
+    def span(self, name: str, *, tid: int = 0,
+             args: Optional[dict] = None):
+        """Record one ``X`` complete event around the body."""
+        t0 = self._now_us()
+        try:
+            yield
+        finally:
+            ev = {"ph": "X", "name": name, "pid": 0, "tid": tid,
+                  "ts": t0, "dur": max(0.0, self._now_us() - t0)}
+            if args:
+                ev["args"] = args
+            self.events.append(ev)
+
+    # -- request lifecycle --------------------------------------------------
+    def _rec(self, rid: int) -> Optional[_RequestRecord]:
+        return self._open.get(rid)
+
+    def _req_tid(self, rid: int) -> int:
+        tid = 1 + rid
+        self._track_name(tid, f"req {rid}")
+        return tid
+
+    def req_span(self, rid: int, name: str,
+                 args: Optional[dict] = None):
+        return self.span(name, tid=self._req_tid(rid), args=args)
+
+    def _req_instant(self, rid: int, name: str, step: Optional[int],
+                     **extra) -> None:
+        args = dict(extra)
+        if step is not None:
+            args["step"] = step
+        self.instant(name, tid=self._req_tid(rid), args=args or None)
+
+    def req_arrive(self, rid: int, step: int,
+                   deadline_step: Optional[int] = None) -> None:
+        rec = _RequestRecord(rid, time.perf_counter(), step, deadline_step)
+        self._reqs.append(rec)
+        self._open[rid] = rec
+        self._req_instant(rid, "arrive", step, deadline=deadline_step)
+
+    def req_admit(self, rid: int, step: int, *,
+                  resumed: bool = False) -> None:
+        rec = self._rec(rid)
+        if rec is not None:
+            if resumed:
+                rec.resumed += 1
+            elif rec.admit_ts is None:
+                rec.admit_ts = time.perf_counter()
+                rec.admit_step = step
+        self._req_instant(rid, "resume" if resumed else "admit", step)
+
+    def req_defer(self, rid: int, step: int) -> None:
+        rec = self._rec(rid)
+        if rec is not None:
+            rec.defers += 1
+        self._req_instant(rid, "defer", step)
+
+    def req_reject(self, rid: int, step: int, reason: str = "") -> None:
+        rec = self._open.pop(rid, None)
+        if rec is not None:
+            rec.rejected = True
+            rec.finish_ts = time.perf_counter()
+            rec.finish_step = step
+        self._req_instant(rid, "reject", step, reason=reason)
+
+    def req_preempt(self, rid: int, step: int) -> None:
+        rec = self._rec(rid)
+        if rec is not None:
+            rec.preemptions += 1
+        self._req_instant(rid, "preempt", step)
+
+    def req_first_token(self, rid: int) -> None:
+        rec = self._rec(rid)
+        if rec is not None and rec.first_token_ts is None:
+            rec.first_token_ts = time.perf_counter()
+        self._req_instant(rid, "first_token", None)
+
+    def req_finish(self, rid: int, step: int, tokens: int) -> None:
+        rec = self._open.pop(rid, None)
+        if rec is not None:
+            rec.finish_ts = time.perf_counter()
+            rec.finish_step = step
+            rec.tokens = tokens
+        self._req_instant(rid, "finish", step, tokens=tokens)
+
+    # -- SLO reduction ------------------------------------------------------
+    def request_stats(self) -> List[dict]:
+        """Per-request-incarnation lifecycle metrics derived from the
+        recorded events: TTFT/TPOT on the monotonic wall clock, deadline
+        outcome on the decode-step clock."""
+        out = []
+        for r in self._reqs:
+            finished = r.finish_ts is not None and not r.rejected
+            ttft = (r.first_token_ts - r.arrive_ts
+                    if r.first_token_ts is not None else None)
+            tpot = None
+            if finished and r.first_token_ts is not None and r.tokens > 1:
+                tpot = (r.finish_ts - r.first_token_ts) / (r.tokens - 1)
+            if r.deadline_step is None:
+                met = finished
+            else:
+                met = (finished and r.finish_step is not None
+                       and r.finish_step <= r.deadline_step)
+            out.append({"rid": r.rid, "arrive_step": r.arrive_step,
+                        "deadline_step": r.deadline_step,
+                        "finish_step": r.finish_step, "tokens": r.tokens,
+                        "finished": finished, "rejected": r.rejected,
+                        "preemptions": r.preemptions, "defers": r.defers,
+                        "resumed": r.resumed,
+                        "ttft_s": ttft, "tpot_s": tpot,
+                        "met_deadline": met})
+        return out
+
+    def slo_summary(self) -> dict:
+        """p50/p99 TTFT + TPOT and goodput over every offered request —
+        computed from trace spans, not wall-clock totals. Goodput counts a
+        request as good iff it finished (unrejected) by ``deadline_step``
+        on the decode-step clock; no-deadline requests are good iff they
+        completed."""
+        stats = self.request_stats()
+        ttfts = [s["ttft_s"] for s in stats if s["ttft_s"] is not None]
+        tpots = [s["tpot_s"] for s in stats if s["tpot_s"] is not None]
+        n = len(stats)
+        return {
+            "requests": n,
+            "finished": sum(1 for s in stats if s["finished"]),
+            "rejected": sum(1 for s in stats if s["rejected"]),
+            "preemptions": sum(s["preemptions"] for s in stats),
+            "deadlined": sum(1 for s in stats
+                             if s["deadline_step"] is not None),
+            "deadline_misses": sum(
+                1 for s in stats
+                if s["deadline_step"] is not None and not s["met_deadline"]),
+            "goodput": (sum(1 for s in stats if s["met_deadline"]) / n
+                        if n else None),
+            "ttft_p50_s": percentile(ttfts, 50),
+            "ttft_p99_s": percentile(ttfts, 99),
+            "tpot_p50_s": percentile(tpots, 50),
+            "tpot_p99_s": percentile(tpots, 99),
+        }
+
+    # -- export -------------------------------------------------------------
+    def chrome_trace(self) -> dict:
+        return {"traceEvents": list(self.events), "displayTimeUnit": "ms"}
+
+    def export_chrome(self, path: str) -> str:
+        """Write ``chrome://tracing`` / Perfetto-loadable JSON to ``path``."""
+        with open(path, "w") as f:
+            json.dump(self.chrome_trace(), f)
+        return path
+
+
+class _NullSpan:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class NullTracer:
+    """The ``--metrics off`` tracer: the full :class:`Tracer` surface, every
+    method a no-op (span contexts are a shared reusable null context). No
+    events, no request records, no clock reads — the instrumented serving
+    path degenerates to attribute calls that do nothing, and since tracing
+    never touches jitted code anyway, off ≡ the pre-telemetry path
+    bitwise."""
+
+    enabled = False
+    events: List[dict] = []
+
+    def instant(self, name, *, tid=0, args=None):
+        pass
+
+    def span(self, name, *, tid=0, args=None):
+        return _NULL_SPAN
+
+    def req_span(self, rid, name, args=None):
+        return _NULL_SPAN
+
+    def req_arrive(self, rid, step, deadline_step=None):
+        pass
+
+    def req_admit(self, rid, step, *, resumed=False):
+        pass
+
+    def req_defer(self, rid, step):
+        pass
+
+    def req_reject(self, rid, step, reason=""):
+        pass
+
+    def req_preempt(self, rid, step):
+        pass
+
+    def req_first_token(self, rid):
+        pass
+
+    def req_finish(self, rid, step, tokens):
+        pass
+
+    def request_stats(self):
+        return []
+
+    def slo_summary(self):
+        return {}
+
+    def chrome_trace(self):
+        return {"traceEvents": [], "displayTimeUnit": "ms"}
+
+    def export_chrome(self, path):
+        raise RuntimeError("tracing is disabled (--metrics off); "
+                           "enable --metrics on to export a trace")
+
+
+def make_tracer(mode: str, name: str = "serve"):
+    """``"on"`` -> a live :class:`Tracer`, ``"off"`` -> :class:`NullTracer`."""
+    if mode not in ("on", "off"):
+        raise ValueError(f"metrics mode must be 'on' or 'off', got {mode!r}")
+    return Tracer(name) if mode == "on" else NullTracer()
+
+
+class MetricsSnapshotter:
+    """Periodic JSONL metrics stream: one ``registry.snapshot()`` line per
+    ``every`` scheduler cycles (plus whatever ``emit`` is called with).
+    Lines carry the cycle count and a wall timestamp; the file is append-
+    mode so restarts extend the stream."""
+
+    def __init__(self, registry: MetricsRegistry, path: str,
+                 every: int = 50):
+        if every < 1:
+            raise ValueError("snapshot interval must be >= 1 cycle")
+        self.registry = registry
+        self.path = path
+        self.every = every
+        self._last = -1
+        self._t0 = time.perf_counter()
+
+    def maybe_emit(self, cycle: int) -> bool:
+        """Emit iff ``cycle`` entered a new ``every``-sized window."""
+        if cycle // self.every == self._last // self.every \
+                and self._last >= 0:
+            return False
+        self.emit(cycle)
+        return True
+
+    def emit(self, cycle: int) -> None:
+        self._last = cycle
+        line = {"cycle": cycle,
+                "elapsed_s": time.perf_counter() - self._t0}
+        line.update(self.registry.snapshot())
+        with open(self.path, "a") as f:
+            f.write(json.dumps(line) + "\n")

@@ -1,0 +1,443 @@
+"""Telemetry-layer tests: registry semantics, the metric_attr bridge,
+kv-inventory/gauge reconciliation, trace integrity over a preempt/resume
+run, and the metrics on/off bitwise-identity contract.
+
+* MetricsRegistry: exact nearest-rank percentiles over raw observations,
+  reset()/checkpoint()/since() warmup-boundary semantics, gauge callbacks.
+* metric_attr: legacy instance-attribute reads/writes (``srv.x += 1``,
+  hand-zeroing) land on the owning registry's counters.
+* kv_inventory() scalars must reconcile byte-for-byte with the registered
+  ``kv.*`` gauges AND with caches_kv_bytes over the live pools — one
+  schema shared by the dict, the snapshot stream, and direct gauge reads.
+* A preempt/resume trace must export valid Chrome trace-event JSON:
+  non-negative monotonic-clock timestamps, spans on one track disjoint or
+  properly nested, lifecycle instants ordered arrive <= admit <=
+  first_token <= finish, and the victim's track showing offload + resume
+  spans that do not overlap.
+* ``--metrics off`` must be token-identical to a server built without the
+  flag, and ``--metrics on`` must change tokens nowhere, at kv-bits
+  {0, 8, 4} (subprocess, single-threaded XLA — same pattern as the other
+  bitwise-identity suites); fused mode must keep program_launches ==
+  cycles as read through the registry.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.launch.serve import BatchedServer, Request
+from repro.models.transformer import init_model
+from repro.runtime.telemetry import (MetricsRegistry, MetricsSnapshotter,
+                                     NullTracer, Tracer, make_tracer,
+                                     metric_attr, percentile)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_smoke_config("qwen2-72b")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Registry primitives
+# ---------------------------------------------------------------------------
+def test_percentile_exact_nearest_rank():
+    xs = list(range(1, 101))        # 1..100
+    assert percentile(xs, 50) == 50
+    assert percentile(xs, 99) == 99
+    assert percentile(xs, 100) == 100
+    assert percentile(xs, 0) == 1   # nearest-rank floors at the minimum
+    assert percentile([7.5], 50) == 7.5
+    assert percentile([], 50) is None
+    # unsorted input is sorted internally
+    assert percentile([3, 1, 2], 50) == 2
+
+
+def test_registry_counter_gauge_histogram():
+    reg = MetricsRegistry()
+    c = reg.counter("c")
+    c.inc()
+    c.inc(2.5)
+    assert reg.counter("c") is c            # stable object per name
+    assert c.value == 3.5
+    c.value = 4                             # hand-assignment (bench idiom)
+    assert c.value == 4 and isinstance(c.value, int)
+
+    reg.gauge("g").set(7)
+    assert reg.gauge("g").value == 7
+    backing = {"v": 11}
+    reg.register_gauge("live", lambda: backing["v"])
+    assert reg.gauge("live").value == 11
+    backing["v"] = 13                       # callback gauges read live state
+    assert reg.gauge("live").value == 13
+
+    h = reg.histogram("h")
+    for v in range(1, 101):
+        h.observe(v)
+    assert h.count == 100
+    assert h.percentile(50) == 50 and h.percentile(99) == 99
+    s = h.summary()
+    assert s["min"] == 1 and s["max"] == 100 and s["p50"] == 50
+
+    assert reg.value("c") == 4
+    assert reg.value("live") == 13
+    assert reg.value("h") == 100
+    with pytest.raises(KeyError):
+        reg.value("nope")
+
+
+def test_registry_reset_checkpoint_since():
+    reg = MetricsRegistry()
+    c = reg.counter("n")
+    c.inc(5)
+    reg.histogram("h").observe(1.0)
+    reg.gauge("g").set(9)
+
+    mark = reg.checkpoint()
+    c.inc(3)
+    reg.counter("new_after_mark").inc(2)
+    delta = reg.since(mark)
+    assert delta["n"] == 3 and delta["new_after_mark"] == 2
+
+    reg.reset()
+    assert c.value == 0                     # the held object was zeroed...
+    assert reg.counter("n") is c            # ...not replaced
+    assert reg.histogram("h").count == 0
+    assert reg.gauge("g").value == 9        # gauges are state, not counts
+
+
+def test_metric_attr_routes_through_registry():
+    class Thing:
+        hits = metric_attr("thing.hits")
+
+        def __init__(self):
+            self.metrics = MetricsRegistry()
+
+    a, b = Thing(), Thing()
+    a.hits += 1
+    a.hits += 1
+    b.hits = 40
+    assert a.hits == 2 and b.hits == 40     # per-instance registries
+    assert a.metrics.counter("thing.hits").value == 2
+    a.metrics.reset()
+    assert a.hits == 0 and b.hits == 40
+
+
+def test_make_tracer_and_null_surface(tmp_path):
+    assert isinstance(make_tracer("on"), Tracer)
+    null = make_tracer("off")
+    assert isinstance(null, NullTracer) and not null.enabled
+    with pytest.raises(ValueError, match="metrics"):
+        make_tracer("maybe")
+    # the disabled surface: spans are reusable null contexts, reductions
+    # are empty, exporting raises instead of writing an empty file
+    with null.span("x"):
+        with null.req_span(0, "y"):
+            null.req_arrive(0, 0)
+            null.req_finish(0, 1, 1)
+    assert null.request_stats() == [] and null.slo_summary() == {}
+    assert null.chrome_trace()["traceEvents"] == []
+    with pytest.raises(RuntimeError, match="disabled"):
+        null.export_chrome(str(tmp_path / "t.json"))
+
+
+def test_snapshotter_jsonl_stream(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("c").inc(4)
+    path = str(tmp_path / "metrics.jsonl")
+    snap = MetricsSnapshotter(reg, path, every=10)
+    assert snap.maybe_emit(0) is True       # first window
+    assert snap.maybe_emit(5) is False      # same window
+    reg.counter("c").inc(1)
+    assert snap.maybe_emit(10) is True      # next window
+    lines = [json.loads(ln) for ln in open(path)]
+    assert [ln["cycle"] for ln in lines] == [0, 10]
+    assert lines[0]["counters"]["c"] == 4
+    assert lines[1]["counters"]["c"] == 5
+    assert all(ln["elapsed_s"] >= 0 for ln in lines)
+    with pytest.raises(ValueError, match="interval"):
+        MetricsSnapshotter(reg, path, every=0)
+
+
+# ---------------------------------------------------------------------------
+# kv_inventory == registry gauges == live pool bytes
+# ---------------------------------------------------------------------------
+def test_kv_inventory_reconciles_with_gauges(smoke_model):
+    from repro.core.paged_kv import caches_kv_bytes
+    cfg, params = smoke_model
+    srv = BatchedServer(cfg, params, batch_size=2, max_len=32, kv_bits=8,
+                        page_size=8, prefix_cache="on", kv_offload="host",
+                        sched="slo", metrics="on")
+    rng = np.random.default_rng(3)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, 7 + i)
+                    .astype(np.int32), 4) for i in range(3)]
+    srv.run(reqs)
+    inv = srv.kv_inventory()
+    # one schema: the dict's scalars ARE the registered kv.* gauges
+    g = srv.metrics.gauge
+    assert inv["device_bytes"] == g("kv.device_bytes").value
+    assert inv["device_pages_free"] == g("kv.device_pages_free").value
+    assert inv["device_pages_usable"] == g("kv.device_pages_usable").value
+    assert inv["host_bytes"] == g("kv.host_bytes").value
+    assert inv["host_pages"] == g("kv.host_pages").value
+    assert inv["tier_bytes"] == g("kv.tier_bytes").value
+    assert inv["tier_pages"] == g("kv.tier_pages").value
+    # ...and the gauges reconcile with the live pools
+    assert inv["device_bytes"] == sum(caches_kv_bytes(srv.caches).values())
+    assert inv["device_bytes"] == sum(inv["device_by_container"].values())
+    assert inv["device_pages_free"] == srv.allocator.num_free
+    assert inv["device_pages_usable"] == srv.allocator.num_usable
+    assert inv["host_bytes"] == srv.host_store.nbytes
+    assert inv["host_pages"] == srv.host_store.num_pages
+    # the registry path is live, not a construction-time copy: park a page
+    # on the host tier and re-read
+    before = inv["host_pages"]
+    from repro.core.page_store import extract_page
+    blob = extract_page(srv.caches, 1)
+    h = srv.host_store.put(blob)
+    inv2 = srv.kv_inventory()
+    assert inv2["host_pages"] == before + 1
+    assert inv2["host_bytes"] == srv.host_store.nbytes > 0
+    srv.host_store.pop(h)
+
+
+def test_kv_inventory_unpaged_is_zero(smoke_model):
+    cfg, params = smoke_model
+    srv = BatchedServer(cfg, params, batch_size=2, max_len=32)
+    inv = srv.kv_inventory()
+    assert inv["device_bytes"] == 0 and inv["device_by_container"] == {}
+
+
+# ---------------------------------------------------------------------------
+# Trace integrity over a preempt/resume run
+# ---------------------------------------------------------------------------
+def _spans_disjoint_or_nested(spans, eps=0.5):
+    """Every pair of X intervals on one track must be disjoint or properly
+    nested (eps in us absorbs float jitter at shared boundaries)."""
+    ivs = [(e["ts"], e["ts"] + e["dur"], e["name"]) for e in spans]
+    for i in range(len(ivs)):
+        for j in range(i + 1, len(ivs)):
+            a0, a1, an = ivs[i]
+            b0, b1, bn = ivs[j]
+            disjoint = a1 <= b0 + eps or b1 <= a0 + eps
+            a_in_b = b0 <= a0 + eps and a1 <= b1 + eps
+            b_in_a = a0 <= b0 + eps and b1 <= a1 + eps
+            assert disjoint or a_in_b or b_in_a, (
+                f"overlapping spans on one track: {an} [{a0},{a1}] vs "
+                f"{bn} [{b0},{b1}]")
+
+
+def test_trace_integrity_preempt_resume(smoke_model):
+    cfg, params = smoke_model
+    srv = BatchedServer(cfg, params, batch_size=1, max_len=48, kv_bits=4,
+                        page_size=8, num_pages=4, kv_offload="host",
+                        sched="slo", metrics="on")
+    rng = np.random.default_rng(2)
+    low = Request(0, rng.integers(0, cfg.vocab_size, 9).astype(np.int32),
+                  16, priority=0)
+    hi = Request(1, rng.integers(0, cfg.vocab_size, 9).astype(np.int32),
+                 6, priority=5, arrive_step=4, deadline_step=20)
+    srv.run([low, hi])
+    assert low.done and hi.done and srv.preempt_count >= 1
+
+    trace = srv.tracer.chrome_trace()
+    # Chrome trace-event JSON: round-trips, only known phases, sane fields
+    trace = json.loads(json.dumps(trace))
+    events = trace["traceEvents"]
+    assert trace["displayTimeUnit"] == "ms"
+    assert {e["ph"] for e in events} <= {"X", "i", "M"}
+    xs = [e for e in events if e["ph"] == "X"]
+    assert xs, "no complete spans recorded"
+    for e in events:
+        assert e["pid"] == 0
+        if e["ph"] == "M":
+            continue
+        assert e["ts"] >= 0, e
+        if e["ph"] == "X":
+            assert e["dur"] >= 0, e
+    # the engine track saw decode spans and admission waves
+    engine_names = {e["name"] for e in xs if e["tid"] == 0}
+    assert "decode_span" in engine_names and "admission" in engine_names
+
+    # spans on any one track are disjoint or properly nested
+    for tid in {e["tid"] for e in xs}:
+        _spans_disjoint_or_nested([e for e in xs if e["tid"] == tid])
+
+    # per-request lifecycle instants are causally ordered
+    for rid in (0, 1):
+        tid = 1 + rid
+        inst = {e["name"]: e["ts"] for e in events
+                if e["ph"] == "i" and e["tid"] == tid}
+        assert inst["arrive"] <= inst["admit"] \
+            <= inst["first_token"] <= inst["finish"]
+    # track names were emitted for both request tracks
+    names = {e["args"]["name"] for e in events if e["ph"] == "M"
+             and e["name"] == "thread_name"}
+    assert {"engine", "req 0", "req 1"} <= names
+
+    # the victim's track shows the offload and resume spans, not overlapping
+    victim = [e for e in xs if e["tid"] == 1 + low.rid]
+    offloads = [e for e in victim if e["name"] == "offload"]
+    resumes = [e for e in victim if e["name"] == "resume"]
+    assert offloads and resumes, "victim track missing offload/resume spans"
+    for o in offloads:
+        for r in resumes:
+            assert (o["ts"] + o["dur"] <= r["ts"]
+                    or r["ts"] + r["dur"] <= o["ts"]), \
+                "offload and resume spans overlap"
+    # preempt instant precedes the resume span
+    pre = [e["ts"] for e in events if e["ph"] == "i"
+           and e["tid"] == 1 + low.rid and e["name"] == "preempt"]
+    assert pre and min(pre) <= resumes[0]["ts"]
+
+    # the lifecycle records reduce correctly
+    stats = {s["rid"]: s for s in srv.tracer.request_stats()}
+    assert stats[0]["preemptions"] >= 1 and stats[0]["resumed"] >= 1
+    assert stats[0]["finished"] and stats[1]["finished"]
+    assert stats[1]["met_deadline"], stats[1]
+    assert stats[0]["tokens"] == 16 and stats[1]["tokens"] == 6
+    slo = srv.tracer.slo_summary()
+    assert slo["requests"] == 2 and slo["finished"] == 2
+    assert slo["preemptions"] == srv.preempt_count
+    assert slo["deadlined"] == 1
+    assert slo["ttft_p50_s"] is not None and slo["ttft_p50_s"] >= 0
+    assert slo["tpot_p50_s"] is not None and slo["tpot_p50_s"] >= 0
+
+    # export writes loadable JSON
+    import tempfile, os
+    path = os.path.join(tempfile.mkdtemp(prefix="trace_"), "t.json")
+    srv.tracer.export_chrome(path)
+    with open(path) as f:
+        assert json.load(f)["traceEvents"] == events
+
+
+def test_rid_reuse_opens_fresh_incarnation(smoke_model):
+    """Warm bench passes re-offer the same rids; each arrival must open a
+    fresh lifecycle record instead of merging into (or corrupting) the
+    finished one."""
+    cfg, params = smoke_model
+    srv = BatchedServer(cfg, params, batch_size=1, max_len=32, kv_bits=8,
+                        page_size=8, metrics="on")
+    rng = np.random.default_rng(4)
+    mk = lambda: [Request(0, rng.integers(0, cfg.vocab_size, 5)
+                          .astype(np.int32), 3)]
+    srv.run(mk())
+    srv.run(mk())
+    stats = srv.tracer.request_stats()
+    assert len(stats) == 2
+    assert all(s["rid"] == 0 and s["finished"] for s in stats)
+    assert srv.tracer.slo_summary()["requests"] == 2
+
+
+# ---------------------------------------------------------------------------
+# --metrics off == seed, --metrics on changes tokens nowhere (subprocess)
+# ---------------------------------------------------------------------------
+_METRICS_IDENTITY_SCRIPT = r"""
+import jax, numpy as np
+jax.config.update("jax_platform_name", "cpu")
+from repro.configs.registry import get_smoke_config
+from repro.launch.serve import BatchedServer, Request
+from repro.models.transformer import init_model
+
+cfg = get_smoke_config("qwen2-72b")
+params = init_model(jax.random.PRNGKey(0), cfg)
+
+def mk():
+    rng = np.random.default_rng(7)
+    lens = [1, 7, 9, 3, 21]
+    return [Request(i, rng.integers(0, cfg.vocab_size, L).astype(np.int32),
+                    5 + (i % 3)) for i, L in enumerate(lens)]
+
+for kv_bits in (0, 8, 4):
+    base = dict(batch_size=3, max_len=32, kv_bits=kv_bits, page_size=8,
+                prefill="bucketed", prefill_bucket=8)
+    seed = BatchedServer(cfg, params, **base)          # no metrics kwarg
+    out_seed = seed.run(mk())
+    off = BatchedServer(cfg, params, metrics="off", **base)
+    out_off = off.run(mk())
+    on = BatchedServer(cfg, params, metrics="on", **base)
+    out_on = on.run(mk())
+    for a, b, c in zip(out_seed, out_off, out_on):
+        assert a.out == b.out, ("off", kv_bits, a.rid, a.out, b.out)
+        assert a.out == c.out, ("on", kv_bits, a.rid, a.out, c.out)
+    assert all(r.done for r in out_on)
+    assert len(on.tracer.events) > 0 and len(off.tracer.events) == 0
+    assert on.tracer.slo_summary()["finished"] == len(out_on)
+    print(f"kv_bits={kv_bits} tokens identical across seed/off/on")
+
+# fused mode with metrics on: the one-launch-per-cycle contract holds as
+# read THROUGH the registry (the gate the ragged bench re-asserts)
+fus = BatchedServer(cfg, params, batch_size=3, max_len=32, kv_bits=8,
+                    page_size=8, prefill="bucketed", prefill_bucket=8,
+                    fused="on", metrics="on")
+out_fus = fus.run(mk())
+assert all(r.done for r in out_fus)
+assert (fus.metrics.counter("serve.program_launches").value
+        == fus.metrics.counter("serve.cycles").value > 0)
+sep = BatchedServer(cfg, params, batch_size=3, max_len=32, kv_bits=8,
+                    page_size=8, prefill="bucketed", prefill_bucket=8,
+                    fused="off")
+out_sep = sep.run(mk())
+for a, b in zip(out_sep, out_fus):
+    assert a.out == b.out, ("fused", a.rid, a.out, b.out)
+print("METRICS_IDENTITY_OK")
+"""
+
+
+def test_metrics_modes_are_token_neutral():
+    """--metrics off is token-identical to a server built without the flag,
+    and --metrics on changes tokens nowhere, at kv-bits {0, 8, 4}; fused
+    mode keeps program_launches == cycles as read through the registry.
+
+    Runs in a subprocess with single-threaded XLA: multi-threaded XLA:CPU
+    GEMMs are not bitwise deterministic under thread contention, and exact
+    argmax token identity needs bitwise-equal logits."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_cpu_multi_thread_eigen=false "
+                        "intra_op_parallelism_threads=1 "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p]
+        + [os.path.join(os.path.dirname(__file__), "..", "src")])
+    res = subprocess.run([sys.executable, "-c", _METRICS_IDENTITY_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=1200)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "METRICS_IDENTITY_OK" in res.stdout
+
+
+def test_scattered_counters_share_one_registry(smoke_model):
+    """The server threads ONE registry through allocator, scheduler, prefix
+    cache and tiers: the migrated legacy attributes and the registry read
+    the same storage."""
+    cfg, params = smoke_model
+    srv = BatchedServer(cfg, params, batch_size=2, max_len=32, kv_bits=8,
+                        page_size=8, prefix_cache="on", sched="slo")
+    rng = np.random.default_rng(9)
+    sys_p = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    reqs = [Request(i, np.concatenate(
+                [sys_p, rng.integers(0, cfg.vocab_size, 2 + i)
+                 .astype(np.int32)]), 3) for i in range(3)]
+    srv.run(reqs)
+    m = srv.metrics
+    assert srv.prefill_forwards == m.counter("serve.prefill_forwards").value
+    assert srv.decode_steps == m.counter("serve.decode_steps").value > 0
+    assert srv.prefix_cache.lookups == m.counter("prefix.lookups").value > 0
+    assert srv.prefix_cache.hits == m.counter("prefix.hits").value
+    assert (srv.scheduler.ooo_admissions
+            == m.counter("sched.ooo_admissions").value)
+    assert m.counter("alloc.allocs").value > 0
+    assert m.gauge("alloc.free_pages").value == srv.allocator.num_free
+    # two servers never share counters (per-server registries)
+    other = BatchedServer(cfg, params, batch_size=2, max_len=32, kv_bits=8,
+                          page_size=8)
+    assert other.metrics is not m
+    assert other.metrics.counter("serve.decode_steps").value == 0
