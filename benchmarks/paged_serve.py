@@ -93,6 +93,20 @@ BENCH_TRAJECTORY = os.path.join(
     "BENCH_serve.json")
 
 
+def _export_trace(srv, path):
+    """Chrome-trace export guarded on live tracing: with ``metrics="off"``
+    the server carries a NullTracer whose export writes nothing (it warns
+    and returns None) — skip it explicitly so the bench never advertises
+    a trace artifact it did not produce. Returns the written path, or
+    None when tracing is disabled."""
+    if not srv.tracer.enabled:
+        print(f"  [trace] skipped {os.path.basename(path)}: tracing "
+              f"disabled (metrics off)")
+        return None
+    os.makedirs(RESULTS, exist_ok=True)
+    return srv.tracer.export_chrome(path)
+
+
 def _kv_cache_leaves(caches):
     """Yield (kind, array) for attention-cache storage leaves.
 
@@ -439,9 +453,9 @@ def run_overcommit(*, arch="qwen2-72b", verbose=True, fast=False):
     # restart pass below re-issues the same rids, which would fold a second
     # incarnation of every request into the goodput denominator
     slo = srv.tracer.slo_summary()
-    os.makedirs(RESULTS, exist_ok=True)
-    trace_path = srv.tracer.export_chrome(
-        os.path.join(RESULTS, "trace_overcommit.json"))
+    trace_path = _export_trace(srv,
+                               os.path.join(RESULTS,
+                                            "trace_overcommit.json"))
     n_events = len(srv.tracer.events)
 
     # --- gate: a bounded pool served an overcommitted offered load ---
@@ -827,9 +841,8 @@ def run_ragged(*, arch="qwen2-72b", requests=12, batch=4, verbose=True,
     slo = fus.tracer.slo_summary()
     assert (fus.metrics.counter("serve.program_launches").value
             == fus.metrics.counter("serve.cycles").value)
-    os.makedirs(RESULTS, exist_ok=True)
-    trace_path = fus.tracer.export_chrome(
-        os.path.join(RESULTS, "trace_ragged.json"))
+    trace_path = _export_trace(fus,
+                               os.path.join(RESULTS, "trace_ragged.json"))
     res = {
         "requests": requests, "batch": batch, "sys_len": sys_len,
         "max_new": max_new,

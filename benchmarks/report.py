@@ -1,8 +1,14 @@
 """Assemble EXPERIMENTS.md from the results/ JSONs.
 
 Usage: PYTHONPATH=src python -m benchmarks.report [--write]
+       PYTHONPATH=src python -m benchmarks.report --serve
 Sections: §Repro (paper tables), §Dry-run, §Roofline, §Perf (hillclimb log
 read from results/perf_log.json, appended by the perf iterations).
+
+``--serve`` prints the BENCH_serve.json trajectory instead: per-workload
+latest-vs-first deltas for tok/s, goodput and ttft_p99 (points compared at
+the same --fast flag), so the cross-PR serving perf history is readable
+without hand-parsing the JSON.
 """
 from __future__ import annotations
 
@@ -173,6 +179,88 @@ def perf_section() -> str:
     return "\n".join(out)
 
 
+BENCH_TRAJECTORY = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_serve.json")
+
+# scalar fields worth trending, per workload result dict (nested dicts —
+# e.g. the mixed bench's per-config tokens_per_s — expand per sub-key)
+_SERVE_METRICS = ("tokens_per_s", "goodput", "goodput_off", "goodput_delta",
+                  "ttft_p99_s", "token_agreement", "program_reduction",
+                  "prefill_forwards_reduction")
+
+
+def _serve_points():
+    """BENCH_serve.json trajectory grouped into (workload, fast) series.
+
+    A mixed-bench point carries its metrics at summary top level (keyed by
+    ``tokens_per_s``); workload points nest them one level down under the
+    workload name. ``--workload all`` points contribute to both."""
+    try:
+        with open(BENCH_TRAJECTORY) as f:
+            traj = json.load(f).get("trajectory", [])
+    except (OSError, json.JSONDecodeError):
+        return {}
+    series = {}
+    for p in traj:
+        summary = p.get("summary") or {}
+        items = []
+        if "tokens_per_s" in summary:
+            items.append(("mixed", summary))
+        items += [(k, v) for k, v in summary.items()
+                  if isinstance(v, dict) and k != "tokens_per_s"
+                  and any(m in v for m in _SERVE_METRICS)]
+        for wl, res in items:
+            series.setdefault((wl, bool(p.get("fast"))), []).append(
+                (p.get("when", "?"), res))
+    return series
+
+
+def _flat_metrics(res: dict) -> dict:
+    out = {}
+    for m in _SERVE_METRICS:
+        v = res.get(m)
+        if isinstance(v, dict):
+            for k, vv in v.items():
+                if isinstance(vv, (int, float)):
+                    out[f"{m}[{k}]"] = float(vv)
+        elif isinstance(v, (int, float)):
+            out[m] = float(v)
+    return out
+
+
+def serve_section() -> str:
+    series = _serve_points()
+    out = ["## §Serve — BENCH_serve.json trajectory "
+           "(latest vs first, per workload)", ""]
+    if not series:
+        out.append("(no BENCH_serve.json trajectory recorded yet)")
+        return "\n".join(out)
+    for (wl, fast), points in sorted(series.items()):
+        first_when, first = points[0]
+        last_when, last = points[-1]
+        f0, f1 = _flat_metrics(first), _flat_metrics(last)
+        label = f"{wl} ({'fast' if fast else 'full'}, {len(points)} point"
+        label += "s)" if len(points) != 1 else ")"
+        out += [f"### {label}",
+                f"first {first_when} -> latest {last_when}", "",
+                "| metric | first | latest | delta |", "|---|---|---|---|"]
+        keys = [k for k in f1 if k in f0] \
+            + [k for k in f1 if k not in f0]
+        for k in keys:
+            v1 = f1[k]
+            if k in f0:
+                v0 = f0[k]
+                d = v1 - v0
+                rel = f" ({d / abs(v0):+.1%})" if v0 else ""
+                out.append(f"| {k} | {v0:.4g} | {v1:.4g} | "
+                           f"{d:+.4g}{rel} |")
+            else:
+                out.append(f"| {k} | — | {v1:.4g} | new |")
+        out.append("")
+    return "\n".join(out)
+
+
 HEADER = """# EXPERIMENTS
 
 Reproduction of *Reduced-Precision Strategies for Bounded Memory in Deep
@@ -218,7 +306,13 @@ def build() -> str:
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--write", action="store_true")
+    ap.add_argument("--serve", action="store_true",
+                    help="print the BENCH_serve.json per-workload "
+                         "latest-vs-first trajectory summary and exit")
     args = ap.parse_args()
+    if args.serve:
+        print(serve_section())
+        return
     doc = build()
     if args.write:
         with open("EXPERIMENTS.md", "w") as f:

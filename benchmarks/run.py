@@ -3,6 +3,9 @@
   uniform_sweep   — paper Fig. 2 (accuracy vs uniform bits, per network)
   perlayer_sweep  — paper Fig. 3 (per-layer tolerance; the key observation)
   traffic         — paper Fig. 4 (single vs batch traffic; + LM analogue)
+  traffic_serve   — traffic-at-scale harness: bursty overload trace through
+                    the SLO scheduler, --predictor off vs on (goodput gate),
+                    async host pager overlap proof (Chrome trace)
   pareto_search   — paper Fig. 5 / Table 2 (greedy search, TR@1/2/5/10%)
   lm_precision    — beyond-paper: same machinery on a transformer LM
   kernel_bench    — Pallas kernels vs oracles + footprint ratios
@@ -44,7 +47,8 @@ def main(argv=None):
     stages = {
         "uniform_sweep": lambda: uniform_sweep.run(nets=nets),
         "perlayer_sweep": lambda: perlayer_sweep.run(nets=nets),
-        "traffic": traffic.run,
+        "traffic": traffic.run_accounting,
+        "traffic_serve": lambda: traffic.run_serve(fast=args.fast),
         "pareto_search": lambda: pareto_search.run(nets=nets),
         "lm_precision": lambda: lm_precision.run(
             steps=120 if args.fast else 300),

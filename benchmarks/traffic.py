@@ -1,16 +1,63 @@
-"""Paper Fig. 4: data traffic accounting — single-image vs batch use cases,
-weights vs intermediate data, per network. Extended beyond the paper with
-the transformer analogue: prefill (weight-dominated) vs decode (KV-data-
-dominated) per assigned LM arch."""
+"""Traffic benches: the paper's Fig. 4 byte-traffic accounting AND the
+traffic-at-scale serving harness (the PR 9 headline).
+
+**Accounting** (``run_accounting`` / ``--mode accounting``): paper Fig. 4
+data-traffic counts — single-image vs batch use cases, weights vs
+intermediate data, per network — extended with the transformer analogue
+(prefill weight-dominated, decode KV-data-dominated per LM arch). Lands
+in results/traffic.json.
+
+**Serving harness** (``run_serve`` / ``--mode serve``): replays a seeded
+BURSTY overload trace (core.traffic.generate_trace — 2-state MMPP
+arrivals, heavy-tailed lengths, an interactive deadlined tenant sharing
+Zipf-weighted system prompts + a no-deadline batch tenant) through the
+SLO scheduler twice — ``--predictor off`` vs ``--predictor on`` — with
+the async double-buffered host pager on, and gates (RAISES — the CI
+traffic-smoke step) on:
+
+  * the trace actually overloading: burst arrival rate >= 1.5x the
+    sustainable decode throughput (``Trace.overload_ratio``),
+  * predictor-on goodput STRICTLY exceeding predictor-off (the
+    telemetry control loop converts bursts it has seen into speculative
+    admissions it refuses to make in front of the next one),
+  * >= 0.9 token agreement for BOTH arms vs an ample-pool reference
+    server (the predictor only reorders admission, never decode math),
+  * the exported Chrome trace showing a ``pager.*`` span on the pager
+    track overlapping a ``decode_span`` (the async D2H copies really ran
+    under decode compute).
+
+Results land in results/traffic_serve.json, the predictor-on run streams
+windowed ``slo.*`` gauges into results/metrics_traffic.jsonl, the Chrome
+trace in results/trace_traffic.json, and a trajectory point appends to
+the repo-root BENCH_serve.json.
+
+Run:  PYTHONPATH=src python -m benchmarks.traffic [--fast]
+      [--mode all|serve|accounting]
+"""
 from __future__ import annotations
 
-from repro.configs.registry import ARCH_IDS, get_config
+import argparse
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.core.traffic import (TenantSpec, TraceConfig, generate_trace,
+                                trace_fingerprint)
+from repro.launch.serve import BatchedServer, Request
 from repro.models.cnn import SPECS, cnn_traffic_model
+from repro.models.transformer import init_model
 from repro.quant.apply import transformer_traffic_model
+from repro.runtime.telemetry import PAGER_TID
 
-from .common import cnn_nets, save_json
+from .common import RESULTS, cnn_nets, save_json
 
 
+# ---------------------------------------------------------------------------
+# Paper Fig. 4 accounting (the original traffic bench)
+# ---------------------------------------------------------------------------
 def cnn_traffic(batch=50):
     out = {}
     for net in cnn_nets():
@@ -49,7 +96,7 @@ def lm_traffic():
     return out
 
 
-def run(*, verbose=True):
+def run_accounting(*, verbose=True):
     res = {"cnn": cnn_traffic(), "lm": lm_traffic()}
     if verbose:
         print("[traffic] CNN (accesses in millions, batch=50):")
@@ -68,5 +115,254 @@ def run(*, verbose=True):
     return res
 
 
+# ---------------------------------------------------------------------------
+# Traffic-at-scale serving harness (PR 9 headline)
+# ---------------------------------------------------------------------------
+def overload_trace_config(vocab_size: int, *, fast=False) -> TraceConfig:
+    """The saturated bursty mix: a deadlined interactive tenant (short
+    decodes, shared Zipf-weighted system prompts) and a no-deadline batch
+    tenant (long decodes that occupy slots across bursts — exactly the
+    speculative work the predictor should hold back)."""
+    return TraceConfig(
+        seed=7, horizon=40 if fast else 72,
+        rate=0.06, process="bursty", burst_rate=2.2,
+        p_enter_burst=0.10, p_exit_burst=0.30,
+        vocab_size=vocab_size,
+        tenants=(
+            TenantSpec("interactive", weight=0.72, priority=5,
+                       deadline_slack=4,
+                       prompt_mean=9.0, prompt_sigma=0.5, prompt_cap=15,
+                       max_new_mean=3.0, max_new_sigma=0.4, max_new_cap=5,
+                       shared_prefix_len=8, prefix_pool=2),
+            TenantSpec("batch", weight=0.28, priority=0,
+                       deadline_slack=None,
+                       prompt_mean=12.0, prompt_sigma=0.5, prompt_cap=23,
+                       max_new_mean=14.0, max_new_sigma=0.3,
+                       max_new_cap=20),
+        ))
+
+
+def to_requests(trace):
+    """Fresh serve.Request objects for one replay arm (Request is mutable
+    run state — arms must never share instances)."""
+    return [Request(r.rid, np.array(r.prompt), r.max_new,
+                    priority=r.priority, deadline_step=r.deadline_step,
+                    arrive_step=r.arrive_step)
+            for r in trace.requests]
+
+
+def _token_agreement(reqs, ref_by_rid) -> float:
+    per_req = []
+    for r in reqs:
+        ref = ref_by_rid[r.rid].out
+        if not ref and not r.out:
+            per_req.append(1.0)
+            continue
+        n = min(len(r.out), len(ref))
+        if n == 0:
+            per_req.append(0.0)
+            continue
+        per_req.append(float(np.mean(
+            np.asarray(r.out[:n]) == np.asarray(ref[:n]))))
+    return float(np.mean(per_req))
+
+
+def _pager_overlaps_decode(events) -> bool:
+    """Does any async ``pager.*`` span on the pager track overlap a
+    ``decode_span`` in time? (Half-open interval intersection over the
+    Chrome X events.)"""
+    pager = [(e["ts"], e["ts"] + e["dur"]) for e in events
+             if e.get("ph") == "X" and e.get("tid") == PAGER_TID
+             and str(e.get("name", "")).startswith("pager.")
+             and (e.get("args") or {}).get("async")]
+    decode = [(e["ts"], e["ts"] + e["dur"]) for e in events
+              if e.get("ph") == "X" and e.get("name") == "decode_span"]
+    return any(p0 < d1 and d0 < p1
+               for p0, p1 in pager for d0, d1 in decode)
+
+
+def _slo_gauges(registry) -> dict:
+    snap = registry.snapshot()["gauges"]
+    return {k: v for k, v in sorted(snap.items())
+            if k.startswith("slo.")}
+
+
+def run_serve(*, arch="qwen2-72b", verbose=True, fast=False):
+    """Replay the overload trace predictor-off vs predictor-on and gate
+    the control loop's win (see module docstring)."""
+    cfg = get_smoke_config(arch)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    batch, page_size, max_len = 3, 8, 64
+    # pool sized WELL below the working set so cached prefixes demote to
+    # the host tier under pressure (the async pager's traffic source)
+    num_pages = 1 + 13
+    trace = generate_trace(overload_trace_config(cfg.vocab_size, fast=fast))
+    overload = trace.overload_ratio(batch)
+    if overload < 1.5:
+        raise RuntimeError(
+            f"traffic trace is not an overload: burst arrivals are only "
+            f"{overload:.2f}x sustainable throughput (need >= 1.5) — "
+            f"{len(trace.requests)} requests, burst rate "
+            f"{trace.burst_rate_observed():.2f}/step")
+
+    common = dict(batch_size=batch, max_len=max_len, page_size=page_size,
+                  num_pages=num_pages, kv_bits=8, prefix_cache="on",
+                  kv_offload="host", sched="slo", preempt=False,
+                  metrics="on", pager_async="on")
+    os.makedirs(RESULTS, exist_ok=True)
+    snap_path = os.path.join(RESULTS, "metrics_traffic.jsonl")
+    if os.path.exists(snap_path):
+        os.remove(snap_path)   # append-mode stream: one bench, one stream
+
+    def arm(predictor, **extra):
+        srv = BatchedServer(cfg, params, predictor=predictor,
+                            **common, **extra)
+        t0 = time.time()
+        reqs = srv.run(to_requests(trace))
+        return srv, reqs, time.time() - t0
+
+    srv_off, reqs_off, t_off = arm("off")
+    srv_on, reqs_on, t_on = arm("on", snapshot_out=snap_path,
+                                snapshot_every=5)
+    slo_off = srv_off.tracer.slo_summary()
+    slo_on = srv_on.tracer.slo_summary()
+
+    # --- reference for token agreement: ample pool, no admission policy
+    # in the way (full capacity, FIFO order is irrelevant — every request
+    # fits on arrival) ---
+    ref = BatchedServer(cfg, params, batch_size=batch, max_len=max_len,
+                        page_size=page_size, kv_bits=8)
+    ref_reqs = ref.run(to_requests(trace))
+    ref_by_rid = {r.rid: r for r in ref_reqs}
+    agree_off = _token_agreement(reqs_off, ref_by_rid)
+    agree_on = _token_agreement(reqs_on, ref_by_rid)
+
+    trace_path = srv_on.tracer.export_chrome(
+        os.path.join(RESULTS, "trace_traffic.json"))
+
+    # --- gates (the CI traffic-smoke step) ---
+    if min(agree_off, agree_on) < 0.9:
+        raise RuntimeError(
+            f"traffic replay broke decode numerics: token agreement "
+            f"off={agree_off:.1%} on={agree_on:.1%} vs reference "
+            f"(need >= 0.9 — admission policy must not touch math)")
+    if slo_on["goodput"] is None or slo_off["goodput"] is None:
+        raise RuntimeError("traffic replay produced no goodput — empty "
+                           "trace or no finished requests")
+    if slo_on["goodput"] <= slo_off["goodput"]:
+        raise RuntimeError(
+            f"deadline-miss predictor failed to buy goodput on the "
+            f"overload trace: on={slo_on['goodput']:.3f} <= "
+            f"off={slo_off['goodput']:.3f} "
+            f"(misses {slo_on['deadline_misses']} vs "
+            f"{slo_off['deadline_misses']})")
+    if not _pager_overlaps_decode(srv_on.tracer.events):
+        raise RuntimeError(
+            "async pager produced no pager.* span overlapping a "
+            "decode_span — D2H transfers are not hiding under decode")
+    if not os.path.exists(snap_path):
+        raise RuntimeError("predictor-on run emitted no JSONL metrics "
+                           "snapshot stream")
+
+    gauges = _slo_gauges(srv_on.metrics)
+    res = {
+        "arch": arch, "fast": fast, "batch": batch,
+        "page_size": page_size, "num_pages": num_pages,
+        "trace": {
+            "requests": len(trace.requests),
+            "horizon": trace.config.horizon,
+            "offered_rate": trace.offered_rate,
+            "burst_rate": trace.burst_rate_observed(),
+            "burst_steps": len(trace.burst_steps),
+            "overload_ratio": overload,
+            "fingerprint": trace_fingerprint(trace),
+        },
+        "predictor_off": {
+            "goodput": slo_off["goodput"],
+            "deadline_misses": slo_off["deadline_misses"],
+            "ttft_p50_s": slo_off["ttft_p50_s"],
+            "ttft_p99_s": slo_off["ttft_p99_s"],
+            "tpot_p50_s": slo_off["tpot_p50_s"],
+            "tpot_p99_s": slo_off["tpot_p99_s"],
+            "wall_s": t_off,
+            "token_agreement": agree_off,
+        },
+        "predictor_on": {
+            "goodput": slo_on["goodput"],
+            "deadline_misses": slo_on["deadline_misses"],
+            "ttft_p50_s": slo_on["ttft_p50_s"],
+            "ttft_p99_s": slo_on["ttft_p99_s"],
+            "tpot_p50_s": slo_on["tpot_p50_s"],
+            "tpot_p99_s": slo_on["tpot_p99_s"],
+            "wall_s": t_on,
+            "token_agreement": agree_on,
+            "predictor_updates":
+                srv_on.metrics.counter("sched.predictor_updates").value,
+            "predictor_gated":
+                srv_on.metrics.counter("sched.predictor_gated").value,
+            "pager_demotions":
+                srv_on.metrics.counter("pager.demotions").value,
+            "pager_promotions":
+                srv_on.metrics.counter("pager.promotions").value,
+        },
+        "goodput_delta": slo_on["goodput"] - slo_off["goodput"],
+        "slo_gauges_on": gauges,
+        "trace_path": trace_path,
+        "metrics_jsonl": snap_path,
+    }
+    if verbose:
+        print(f"[traffic] {len(trace.requests)} requests over "
+              f"{trace.config.horizon} steps "
+              f"({len(trace.burst_steps)} burst steps, "
+              f"{overload:.1f}x overload at batch={batch})")
+        print(f"  predictor off: goodput {slo_off['goodput']:.3f} "
+              f"({slo_off['deadline_misses']} misses), "
+              f"ttft p99 {1e3 * (slo_off['ttft_p99_s'] or 0):.1f} ms, "
+              f"agreement {agree_off:.1%}")
+        print(f"  predictor on:  goodput {slo_on['goodput']:.3f} "
+              f"({slo_on['deadline_misses']} misses, "
+              f"{res['predictor_on']['predictor_gated']} admissions "
+              f"gated, {res['predictor_on']['predictor_updates']} SGD "
+              f"updates), ttft p99 "
+              f"{1e3 * (slo_on['ttft_p99_s'] or 0):.1f} ms, "
+              f"agreement {agree_on:.1%}")
+        print(f"  goodput delta +{res['goodput_delta']:.3f}; async pager "
+              f"{res['predictor_on']['pager_demotions']} demotions / "
+              f"{res['predictor_on']['pager_promotions']} promotions "
+              f"overlapping decode -> {os.path.basename(trace_path)}")
+        print(f"  windowed gauges: "
+              + ", ".join(f"{k.split('.', 1)[1]}={v:.3g}"
+                          for k, v in gauges.items()))
+    save_json("traffic_serve.json", res)
+    from .paged_serve import _append_trajectory
+    point = {"when": time.strftime("%Y-%m-%d %H:%M:%S"), "arch": arch,
+             "fast": fast, "summary": {"traffic": {
+                 "goodput": slo_on["goodput"],
+                 "goodput_off": slo_off["goodput"],
+                 "goodput_delta": res["goodput_delta"],
+                 "ttft_p99_s": slo_on["ttft_p99_s"],
+                 "tpot_p50_s": slo_on["tpot_p50_s"],
+                 "token_agreement": agree_on,
+                 "overload_ratio": overload}}}
+    path = _append_trajectory(point)
+    if verbose:
+        print(f"  trajectory point appended to {os.path.basename(path)}")
+    return res
+
+
+def run(*, verbose=True, fast=False, mode="all"):
+    res = {}
+    if mode in ("all", "accounting"):
+        res["accounting"] = run_accounting(verbose=verbose)
+    if mode in ("all", "serve"):
+        res["serve"] = run_serve(verbose=verbose, fast=fast)
+    return res
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--mode", choices=["all", "serve", "accounting"],
+                    default="all")
+    args = ap.parse_args()
+    run(fast=args.fast, mode=args.mode)

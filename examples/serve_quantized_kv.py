@@ -153,6 +153,35 @@ Since PR 8 the whole serving path is **observable** (``--metrics on``;
   entirely outside jitted code, so off is bitwise-identical to the
   pre-telemetry server (asserted in tests/test_telemetry.py).
 
+Since PR 9 the telemetry closes the loop — **traffic at scale**
+(``core.traffic`` + ``--predictor on`` / ``--pager-async on``):
+
+* ``core.traffic.generate_trace`` expands a seeded :class:`TraceConfig`
+  into a deterministic open-loop arrival stream — Poisson or bursty
+  (2-state MMPP) arrivals, heavy-tailed lognormal prompt/output lengths,
+  multi-tenant mixes with per-tenant priority, deadline slack, and
+  Zipf-weighted shared-prefix pools. Equal configs yield byte-identical
+  traces across processes (``trace_fingerprint``), so both arms of an
+  A/B replay exactly the same offered load.
+* ``SLOMonitor`` (``runtime.telemetry``) reduces the live run to rolling
+  ``slo.*`` gauges — windowed goodput, TTFT/TPOT p50/p99 over the last N
+  finished requests, queue-depth / arrival-rate / TPOT EWMAs — streamed
+  with every ``--metrics-out`` snapshot line.
+* ``--predictor on`` (needs ``--sched slo``) consults an online logistic
+  **deadline-miss predictor** every admission cycle: features are queue
+  depth, arrival-rate EWMA, free-page headroom, prefill debt, occupancy,
+  and TPOT slowdown; the risk feeds a peak-hold hazard that resizes the
+  SPECULATIVE share of the batch (no-deadline admissions throttle to 1
+  then 0 as hazard crosses the gate) — deadlined requests are never
+  gated. Retired deadlined requests SGD-update the weights online. On
+  the bursty overload bench (``benchmarks.traffic --mode serve``) the
+  gate lifts goodput 0.79 -> 0.91 at 100% token agreement.
+* ``--pager-async on`` (needs ``--kv-offload host``) double-buffers
+  demote/offload transfers: ``copy_to_host_async`` slices are enqueued
+  at eviction time and drained at decode-span boundaries, so transfer
+  time hides behind decode — ``pager.demote``/``pager.offload`` spans
+  overlap ``decode_span`` on the Chrome trace's pager track.
+
 Error/failure semantics: paged admission preflights a request's WORST-CASE
 page demand (prompt + max_new; with prefix sharing, only the non-shared
 suffix plus one promotion page per matched host page is charged). A
@@ -375,6 +404,50 @@ def main():
     print(f"  {len(srv_tm.tracer.events)} trace events -> {trace_out} "
           f"(load at https://ui.perfetto.dev or chrome://tracing)")
     assert srv_tm.release_prefix_cache() == 0
+
+    print("=== traffic harness: seeded bursty trace -> SLO gauges + "
+          "deadline-miss predictor ===")
+    from repro.core.traffic import TenantSpec, TraceConfig, generate_trace, \
+        trace_fingerprint
+    trace = generate_trace(TraceConfig(
+        seed=5, horizon=24, rate=0.1, process="bursty", burst_rate=1.2,
+        p_enter_burst=0.2, p_exit_burst=0.3, vocab_size=cfg.vocab_size,
+        tenants=(
+            TenantSpec("chat", weight=0.7, priority=5, deadline_slack=6,
+                       prompt_mean=8, prompt_cap=14, max_new_mean=3,
+                       max_new_cap=5, shared_prefix_len=8, prefix_pool=2),
+            TenantSpec("batch", weight=0.3, max_new_mean=8, max_new_cap=12),
+        )))
+    print(f"  trace: {len(trace.requests)} arrivals over "
+          f"{trace.config.horizon} steps, burst overload "
+          f"{trace.overload_ratio(batch_size=2):.1f}x sustainable, "
+          f"fingerprint {trace_fingerprint(trace)[:12]}... "
+          f"(same seed = same stream, any process)")
+    srv_tr = BatchedServer(cfg, params, batch_size=2, max_len=96, kv_bits=8,
+                           page_size=16, num_pages=9, prefix_cache="on",
+                           kv_offload="host", sched="slo", preempt=False,
+                           metrics="on", predictor="on", pager_async="on")
+    srv_tr.run([Request(r.rid, np.array(r.prompt), r.max_new,
+                        priority=r.priority, deadline_step=r.deadline_step,
+                        arrive_step=r.arrive_step)
+                for r in trace.requests], verbose=True)
+    slo = srv_tr.tracer.slo_summary()
+    gauges = {k: v for k, v in srv_tr.metrics.snapshot()["gauges"].items()
+              if k.startswith("slo.")}
+    print(f"  windowed slo.* gauges (live during the run, snapshot-streamed "
+          f"via --metrics-out): goodput "
+          f"{gauges['slo.window_goodput']:.2f} over "
+          f"{gauges['slo.window_requests']:.0f} reqs, queue EWMA "
+          f"{gauges['slo.queue_depth_ewma']:.1f}, arrival EWMA "
+          f"{gauges['slo.arrival_rate_ewma']:.2f}/step")
+    print(f"  predictor: {srv_tr.predictor.gated} speculative admission(s) "
+          f"gated, {srv_tr.predictor.updates} online SGD update(s), final "
+          f"hazard {srv_tr.predictor.hazard:.2f}; async pager "
+          f"{srv_tr.pager.demotions} demotion(s) overlapped with decode")
+    print(f"  exact post-hoc goodput {slo['goodput']:.2f} "
+          f"({slo['deadline_misses']} deadline misses / {slo['requests']} "
+          f"offered)")
+    assert srv_tr.release_prefix_cache() == 0
 
     # admission preflight: a request whose prompt + max_new can never be
     # backed by the pool is rejected with counts — recorded on the request

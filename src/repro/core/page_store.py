@@ -32,6 +32,7 @@ bound can spill into and refill from:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import json
 import time
@@ -40,13 +41,14 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from ..runtime.telemetry import MetricsRegistry, metric_attr
+from ..runtime.telemetry import Ewma, MetricsRegistry, metric_attr
 from .paged_kv import (_SCALE_EPS, iter_kv_pools, map_kv_pools,
                        pool_container)
 from .qtensor import pack_bits, unpack_bits, values_per_word
 
-__all__ = ["PageBlob", "HostPageStore", "TieredPager", "QuantTierStore",
-           "extract_page", "inject_page", "requantize_page",
+__all__ = ["PageBlob", "PendingPageBlob", "HostPageStore", "TieredPager",
+           "QuantTierStore", "extract_page", "extract_page_async",
+           "inject_page", "requantize_page",
            "requantize_blob", "widen_blob", "narrower_container",
            "cache_geometry", "save_prefix_snapshot",
            "load_prefix_snapshot"]
@@ -103,6 +105,84 @@ def extract_page(caches, page: int) -> PageBlob:
             "vs": np.asarray(pool["v_scale"][idx]),
         })
     return PageBlob(arrays)
+
+
+class PendingPageBlob:
+    """An in-flight device→host copy of one logical page.
+
+    Holds the page's sliced device arrays with ``copy_to_host_async()``
+    already issued, and materializes to a :class:`PageBlob` on first
+    access (``resolve()``; idempotent). The slices are functional jax
+    values computed against the pool buffers at extraction time, so the
+    device page can be freed and rewritten immediately — the pending copy
+    stays valid. ``nbytes``/``bytes_by_container`` are computable from
+    dtypes+shapes without waiting, so host-tier accounting stays exact
+    while the DMA runs behind decode.
+    """
+
+    __slots__ = ("_dev", "_blob")
+
+    def __init__(self, device_arrays):
+        self._dev = device_arrays
+        self._blob: Optional[PageBlob] = None
+
+    @property
+    def resolved(self) -> bool:
+        return self._blob is not None
+
+    def resolve(self) -> PageBlob:
+        if self._blob is None:
+            self._blob = PageBlob([{f: np.asarray(rec[f]) for f in _FIELDS}
+                                   for rec in self._dev])
+            self._dev = None
+        return self._blob
+
+    @property
+    def arrays(self):
+        return self.resolve().arrays
+
+    @property
+    def nbytes(self) -> int:
+        if self._blob is not None:
+            return self._blob.nbytes
+        return sum(int(a.nbytes) for rec in self._dev
+                   for a in rec.values())
+
+    def bytes_by_container(self) -> Dict[str, int]:
+        if self._blob is not None:
+            return self._blob.bytes_by_container()
+        out: Dict[str, int] = {}
+        for rec in self._dev:
+            dt = np.dtype(rec["k"].dtype)
+            if np.issubdtype(dt, np.floating):
+                cont = "fp"
+            else:
+                cont = "int8" if dt == np.dtype(np.int8) else "int4"
+            out[cont] = out.get(cont, 0) + int(rec["k"].nbytes
+                                               + rec["v"].nbytes)
+        return out
+
+
+def extract_page_async(caches, page: int) -> PendingPageBlob:
+    """Start copying logical ``page`` to the host without blocking.
+
+    Slices every pool at ``page`` (functional jax values — subsequent
+    pool writes cannot mutate them) and enqueues the device→host
+    transfers; the returned :class:`PendingPageBlob` blocks only when
+    someone actually reads it. Byte-identical to :func:`extract_page`
+    once resolved.
+    """
+    dev = []
+    for pool, axis in iter_kv_pools(caches):
+        idx = (slice(None), page) if axis == 1 else (page,)
+        rec = {"k": pool["k_pages"][idx], "v": pool["v_pages"][idx],
+               "ks": pool["k_scale"][idx], "vs": pool["v_scale"][idx]}
+        for a in rec.values():
+            copy_async = getattr(a, "copy_to_host_async", None)
+            if copy_async is not None:
+                copy_async()
+        dev.append(rec)
+    return PendingPageBlob(dev)
 
 
 def inject_page(caches, blob: PageBlob, page: int):
@@ -198,12 +278,19 @@ class HostPageStore:
         return h
 
     def get(self, handle: int) -> PageBlob:
-        return self._blobs[handle]
+        blob = self._blobs[handle]
+        if isinstance(blob, PendingPageBlob):
+            # reading is the synchronization point for async demotes:
+            # materialize in place (nbytes is unchanged by resolution)
+            blob = self._blobs[handle] = blob.resolve()
+        return blob
 
     def pop(self, handle: int) -> PageBlob:
         blob = self._blobs.pop(handle)
         self.nbytes -= blob.nbytes
         self.pops += 1
+        if isinstance(blob, PendingPageBlob):
+            blob = blob.resolve()
         return blob
 
     def drop(self, handle: int) -> None:
@@ -230,6 +317,19 @@ class TieredPager:
     instead of a reference. ``promote`` may recursively trigger allocator
     pressure (reclaim -> prefix-cache demotion), which is safe: eviction
     never touches pinned or non-resident nodes.
+
+    ``async_mode=True`` turns demotes (and preemption offloads) into
+    **double-buffered async transfers**: :func:`extract_page_async` slices
+    the page and enqueues the D2H copy, the device page is freed
+    immediately (the slices are functional values), and up to
+    ``max_inflight`` transfers ride behind decode until :meth:`drain` —
+    called by the serve loop at decode-span boundaries — materializes
+    them. Reading a pending handle through the host store resolves it
+    early, so correctness never depends on drain timing; a demote→promote
+    round trip stays byte-identical either way. Completed transfers are
+    recorded as retrospective ``pager.demote``/``pager.offload`` spans on
+    the dedicated pager trace track — overlapping the engine's decode
+    spans is exactly what the Chrome trace is meant to show.
     """
 
     # registry-backed legacy counters (see runtime.telemetry.metric_attr)
@@ -237,17 +337,34 @@ class TieredPager:
     promotions = metric_attr("pager.promotions")
 
     def __init__(self, allocator, host: HostPageStore, get_caches,
-                 set_caches, metrics: Optional[MetricsRegistry] = None):
+                 set_caches, metrics: Optional[MetricsRegistry] = None,
+                 *, async_mode: bool = False, max_inflight: int = 2,
+                 tracer=None):
+        if max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1 transfer")
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.allocator = allocator
         self.host = host
         self._get = get_caches
         self._set = set_caches
+        self.async_mode = bool(async_mode)
+        self.max_inflight = max_inflight
+        self.tracer = tracer
+        self._inflight = collections.deque()   # (pending, t0, kind)
         self.demotions = 0
         self.promotions = 0
         # demote/promote wall latencies (exact p50/p99 via the registry)
         self._h_demote = self.metrics.histogram("pager.demote_s")
         self._h_promote = self.metrics.histogram("pager.promote_s")
+        self._h_offload = self.metrics.histogram("pager.offload_s")
+        self._ewma_demote = Ewma()
+        self._ewma_promote = Ewma()
+        self.metrics.register_gauge("pager.demote_ewma_s",
+                                    self._ewma_demote.get)
+        self.metrics.register_gauge("pager.promote_ewma_s",
+                                    self._ewma_promote.get)
+        self.metrics.register_gauge("pager.inflight",
+                                    lambda: len(self._inflight))
 
     def host_room(self) -> float:
         """Host pages still available (inf when unbounded)."""
@@ -262,26 +379,87 @@ class TieredPager:
         """Copy ``page`` to the host tier, release the caller's device
         reference, return the host handle. The caller must hold the ONLY
         reference (refcount 1) or the page content could keep changing
-        under other owners after the snapshot."""
+        under other owners after the snapshot. In async mode the handle
+        maps to a pending transfer that resolves at drain (or on first
+        read)."""
         t0 = time.perf_counter()
+        if self.async_mode:
+            pending = extract_page_async(self._get(), page)
+            h = self.host.put(pending)
+            self.allocator.free([page])
+            self.demotions += 1
+            self._enqueue(pending, t0, "demote")
+            return h
         blob = extract_page(self._get(), page)
         h = self.host.put(blob)
         self.allocator.free([page])
         self.demotions += 1
-        self._h_demote.observe(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        self._h_demote.observe(dt)
+        self._ewma_demote.update(dt)
+        if self.tracer is not None:
+            self.tracer.pager_span("pager.demote", t0, t0 + dt)
+        return h
+
+    def offload(self, page: int) -> int:
+        """Host-park a page the CALLER still owns and frees (the
+        preemption-victim path): the transfer rides the same async
+        double-buffer as :meth:`demote`, but allocator bookkeeping and
+        demotion counters stay with the caller."""
+        if not self.async_mode:
+            return self.host.put(extract_page(self._get(), page))
+        t0 = time.perf_counter()
+        pending = extract_page_async(self._get(), page)
+        h = self.host.put(pending)
+        self._enqueue(pending, t0, "offload")
         return h
 
     def promote(self, handle: int) -> int:
         """Allocate a device page (may trigger reclaim pressure), inject the
         host blob into it, release the host copy; returns the page id (at
-        refcount 1, owned by the caller)."""
+        refcount 1, owned by the caller). The injection's H2D writes are
+        dispatch-async under jax — the span records enqueue time, not a
+        device sync."""
         t0 = time.perf_counter()
         page = self.allocator.alloc()
         blob = self.host.pop(handle)
         self._set(inject_page(self._get(), blob, page))
         self.promotions += 1
-        self._h_promote.observe(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        self._h_promote.observe(dt)
+        self._ewma_promote.update(dt)
+        if self.tracer is not None:
+            self.tracer.pager_span("pager.promote", t0, t0 + dt)
         return page
+
+    # -- async double-buffer ------------------------------------------------
+    def _enqueue(self, pending: PendingPageBlob, t0: float,
+                 kind: str) -> None:
+        self._inflight.append((pending, t0, kind))
+        while len(self._inflight) > self.max_inflight:
+            self._drain_one()
+
+    def _drain_one(self) -> None:
+        pending, t0, kind = self._inflight.popleft()
+        pending.resolve()
+        t1 = time.perf_counter()
+        if kind == "demote":
+            self._h_demote.observe(t1 - t0)
+            self._ewma_demote.update(t1 - t0)
+        else:
+            self._h_offload.observe(t1 - t0)
+        if self.tracer is not None:
+            self.tracer.pager_span(f"pager.{kind}", t0, t1,
+                                   args={"async": True})
+
+    def drain(self) -> int:
+        """Materialize every in-flight transfer; the serve loop calls this
+        at decode-span boundaries so transfer time hides behind decode.
+        Returns the number drained (0 in sync mode / when idle)."""
+        n = len(self._inflight)
+        while self._inflight:
+            self._drain_one()
+        return n
 
 
 # ---------------------------------------------------------------------------

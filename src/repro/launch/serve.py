@@ -151,8 +151,8 @@ from ..models.transformer import init_cache, init_model
 from ..quant.apply import (build_model_quant, kv_profile_key,
                            transformer_layer_names)
 from ..runtime.telemetry import (MetricsRegistry, MetricsSnapshotter,
-                                 make_tracer, metric_attr)
-from .scheduler import SchedPolicy, SLOScheduler
+                                 SLOMonitor, make_tracer, metric_attr)
+from .scheduler import DeadlineMissPredictor, SchedPolicy, SLOScheduler
 from .steps import make_chunk_prefill_step, make_decode_step, make_fused_step
 
 
@@ -190,6 +190,9 @@ class Request:
     error: Optional[Exception] = None    # set when admission rejects
     preemptions: int = 0
     _paused: Optional[PreemptedState] = None
+    # admission-cycle feature vector (predictor on, deadlined requests
+    # only): the training example paired with the miss/met label at retire
+    _risk_feat: Optional[list] = None
 
 
 def _pow2_bucket(n: int, cap: int) -> int:
@@ -308,7 +311,8 @@ class BatchedServer:
                  metrics: str = "off",
                  registry: Optional[MetricsRegistry] = None,
                  snapshot_out: Optional[str] = None,
-                 snapshot_every: int = 50):
+                 snapshot_every: int = 50,
+                 predictor: str = "off", pager_async: str = "off"):
         # telemetry first: counter attributes below are registry-backed
         # descriptors, so `self.metrics` must exist before any assignment
         self.metrics = registry if registry is not None else MetricsRegistry()
@@ -410,6 +414,28 @@ class BatchedServer:
                                                    preempt=preempt),
                                        metrics=self.metrics)
                           if sched == "slo" else None)
+        if predictor not in ("off", "on"):
+            raise ValueError(f"predictor must be 'off' or 'on', "
+                             f"got {predictor!r}")
+        if predictor == "on" and sched != "slo":
+            raise ValueError("--predictor on gates speculative admissions "
+                             "inside the SLO admission loop; it needs "
+                             "--sched slo")
+        if pager_async not in ("off", "on"):
+            raise ValueError(f"pager_async must be 'off' or 'on', "
+                             f"got {pager_async!r}")
+        if pager_async == "on" and kv_offload != "host":
+            raise ValueError("--pager-async on overlaps host-tier page "
+                             "transfers with decode; it needs "
+                             "--kv-offload host")
+        # rolling-window SLO reductions are always live (pure host-side
+        # bookkeeping, like the registry itself); the predictor that ACTS
+        # on them is strictly opt-in so default serving stays bitwise
+        # identical
+        self.slo_monitor = SLOMonitor(self.metrics)
+        self.predictor = (DeadlineMissPredictor(metrics=self.metrics)
+                          if predictor == "on" else None)
+        self._risk_feat_last: Optional[list] = None
         if kv_profile_scan not in ("group", "unroll"):
             raise ValueError(f"kv_profile_scan must be 'group' or 'unroll', "
                              f"got {kv_profile_scan!r}")
@@ -496,7 +522,9 @@ class BatchedServer:
                     self.allocator, self.host_store,
                     lambda: self.caches,
                     lambda c: setattr(self, "caches", c),
-                    metrics=self.metrics)
+                    metrics=self.metrics,
+                    async_mode=(pager_async == "on"),
+                    tracer=self.tracer)
                 self.allocator.host_inventory = \
                     lambda: self.host_store.num_pages
             if prefix_cache == "on":
@@ -926,6 +954,7 @@ class BatchedServer:
                 req = self.slots[i]
                 if not req.out:
                     self.tracer.req_first_token(req.rid)
+                    self.slo_monitor.note_first_token(req.rid)
                 req.out.append(tok)
                 self.tokens[i] = tok
                 self.pos[i] += 1
@@ -1081,6 +1110,11 @@ class BatchedServer:
         forwards. The slot is claimed immediately — reservation accounting
         for the rest of the cycle sees it. (Prompt validation happened in
         ``_admission_plan``, before the hit chain was pinned.)"""
+        if (self.predictor is not None and req.deadline_step is not None
+                and req._risk_feat is None):
+            # pair this cycle's consulted features with the request: its
+            # met/missed outcome at retirement is the training label
+            req._risk_feat = self._risk_feat_last
         if not self.paged:
             self.tracer.req_admit(req.rid, self._clock)
             self._prefill_slot(i, req, 0)
@@ -1163,6 +1197,7 @@ class BatchedServer:
         req.done = True
         self.rejected.append(req)
         self.metrics.counter("sched.rejects").inc()
+        self.slo_monitor.note_finish(req.rid, False, 0)
         self.tracer.req_reject(req.rid, self._clock,
                                reason=type(err).__name__)
 
@@ -1185,11 +1220,16 @@ class BatchedServer:
                 self._do_admit(i, queue.pop(0), info, jobs)
                 break
 
-    def _admit_slo(self, queue: List[Request], jobs: List[_PrefillJob]):
+    def _admit_slo(self, queue: List[Request], jobs: List[_PrefillJob],
+                   spec_budget: Optional[int] = None):
         """Priority/EDF admission with bounded out-of-order admission past
         a deferred head, and preemption of strictly less urgent running
         requests when a candidate's page shortfall can be met by demoting
-        a victim to the host tier."""
+        a victim to the host tier. ``spec_budget`` (predictor on) caps NEW
+        speculative admissions this cycle — no-deadline, non-resumed
+        requests past the budget are passed over (they stay queued and are
+        re-examined next cycle); deadlined and preempted-resume requests
+        are never gated."""
         pol = self.scheduler.policy
         self.scheduler.sort_queue(queue)
         preempts_left = pol.max_preempt_per_admit
@@ -1202,6 +1242,15 @@ class BatchedServer:
                 if examined > pol.admit_window:
                     break
             req = queue[idx]
+            speculative = (req.deadline_step is None
+                           and req._paused is None)
+            if speculative and spec_budget is not None and spec_budget <= 0:
+                # gate BEFORE planning: an admit plan pins the prefix hit
+                # chain, so skipping after planning would leak pins
+                self.predictor.gated += 1
+                self.tracer.req_defer(req.rid, self._clock)
+                idx += 1
+                continue
             free = [i for i in range(self.B) if self.slots[i] is None]
             if not free:
                 # batch full: the most urgent queued request may claim a
@@ -1218,6 +1267,8 @@ class BatchedServer:
             if verdict == "admit":
                 queue.pop(idx)
                 self._do_admit(free[0], req, info, jobs)
+                if speculative and spec_budget is not None:
+                    spec_budget -= 1
                 if deferred:
                     self.scheduler.ooo_admissions += 1
                 continue
@@ -1232,6 +1283,29 @@ class BatchedServer:
             deferred = True
             idx += 1
 
+    def _risk_features(self, queue: List[Request]) -> list:
+        """Assemble the predictor's per-cycle feature vector from live
+        telemetry. Queue depth and prefill debt count DEADLINED requests
+        only — a gated backlog of speculative work must not feed back into
+        the very gate holding it, or the gate would never reopen."""
+        deadlined = [r for r in queue if r.deadline_step is not None]
+        live = sum(1 for s in self.slots if s is not None)
+        if self.paged:
+            usable = max(1, self.allocator.num_usable)
+            free = max(0, self.allocator.num_free
+                       - self._outstanding_reservation())
+            free_frac = free / usable
+        else:
+            free_frac = 1.0 - live / self.B
+        return self.predictor.features(
+            queue_deadlined=len(deadlined), batch=self.B,
+            free_frac=free_frac,
+            prefill_debt=sum(len(r.prompt) for r in deadlined),
+            debt_cap=self.B * self.prefill_bucket,
+            live_frac=live / self.B,
+            arrival_ewma=self.slo_monitor.arrival_rate.get(),
+            tpot_slowdown=self.slo_monitor.tpot_slowdown())
+
     def _admit(self, queue: List[Request]):
         """One admission cycle: plan/claim as many queued requests as slots
         and pages allow, then execute their prefills BATCHED (same-bucket
@@ -1239,11 +1313,26 @@ class BatchedServer:
         if not queue:
             return
         self.metrics.histogram("sched.queue_depth").observe(len(queue))
+        self.slo_monitor.note_queue_depth(len(queue))
+        spec_budget: Optional[int] = None
+        if self.predictor is not None:
+            feat = self._risk_features(queue)
+            self._risk_feat_last = feat
+            self.predictor.consult(feat)
+            spec_budget = self.predictor.spec_budget(self.B)
+            if (spec_budget <= 0
+                    and all(s is None for s in self.slots)
+                    and not any(r.deadline_step is not None
+                                or r._paused is not None for r in queue)):
+                # progress valve: nothing live and nothing the gate would
+                # ever let through — admit one row so purely speculative
+                # traffic still drains instead of stranding the run
+                spec_budget = 1
         with self.tracer.span("admission", args={"queued": len(queue),
                                                  "step": self._clock}):
             jobs: List[_PrefillJob] = []
             if self.scheduler is not None:
-                self._admit_slo(queue, jobs)
+                self._admit_slo(queue, jobs, spec_budget)
             else:
                 self._admit_fifo(queue, jobs)
             if jobs:
@@ -1346,9 +1435,11 @@ class BatchedServer:
                     entries.append(("alias", node))
                     self.realias_skipped += 1
                 else:
-                    entries.append(("host",
-                                    self.host_store.put(
-                                        extract_page(self.caches, p))))
+                    # pager.offload: sync mode is byte-for-byte the old
+                    # host_store.put(extract_page(...)); async mode issues
+                    # the D2H copy and resolves it at the next span
+                    # boundary drain
+                    entries.append(("host", self.pager.offload(p)))
                 self.allocator.free([p])
         self.slot_pages[i] = []
         self.page_table[i, :] = SCRATCH_PAGE
@@ -1415,9 +1506,17 @@ class BatchedServer:
     def _note_finish(self, req: Request, step: int) -> None:
         """Retirement bookkeeping shared by the span-boundary and fused
         paths: the deadline-miss counter is measured on the decode-step
-        clock (deterministic), the tracer closes the request's record."""
-        if req.deadline_step is not None and step > req.deadline_step:
+        clock (deterministic), the tracer closes the request's record,
+        the rolling SLO window absorbs the outcome, and (predictor on)
+        the retired request's admission-time features become one SGD
+        example with the miss as its label."""
+        missed = (req.deadline_step is not None
+                  and step > req.deadline_step)
+        if missed:
             self.metrics.counter("sched.deadline_misses").inc()
+        if self.predictor is not None and req._risk_feat is not None:
+            self.predictor.observe(req._risk_feat, missed)
+        self.slo_monitor.note_finish(req.rid, not missed, len(req.out))
         self.tracer.req_finish(req.rid, step, len(req.out))
 
     def run(self, requests: List[Request], *, verbose: bool = False):
@@ -1442,6 +1541,7 @@ class BatchedServer:
                 req = pending.pop(0)
                 self.tracer.req_arrive(req.rid, req.arrive_step,
                                        req.deadline_step)
+                self.slo_monitor.note_arrive(req.rid)
                 queue.append(req)
             self._admit(queue)
             live = [i for i in range(self.B) if self.slots[i] is not None]
@@ -1513,7 +1613,13 @@ class BatchedServer:
                         if req is not None:
                             if not req.out:
                                 self.tracer.req_first_token(req.rid)
+                                self.slo_monitor.note_first_token(req.rid)
                             req.out.append(int(arr[i]))
+            if self.pager is not None:
+                # span boundary: resolve in-flight async page transfers —
+                # their D2H copies ran concurrently with the decode span
+                # above (the Chrome trace's pager track shows the overlap)
+                self.pager.drain()
             for i in live:
                 self.tokens[i] = int(last_np[i])
                 req = self.slots[i]
@@ -1526,8 +1632,11 @@ class BatchedServer:
                     # is the min remaining capacity over live slots
                     self._note_finish(req, clock + span)
             clock += span
+            self.slo_monitor.advance(span)
             if self._snapshotter is not None:
                 self._snapshotter.maybe_emit(self.cycles)
+        if self.pager is not None:
+            self.pager.drain()
         dt = time.time() - t0
         gen_tokens = self._gen_tokens - gen0
         if verbose:
@@ -1767,6 +1876,18 @@ def main(argv=None):
     ap.add_argument("--no-preempt", action="store_true",
                     help="SLO sched: disable preemption of running "
                          "requests")
+    ap.add_argument("--predictor", choices=["off", "on"], default="off",
+                    help="on = consult the online deadline-miss predictor "
+                         "every admission cycle: gates NEW speculative "
+                         "(no-deadline) admissions while the hazard says "
+                         "an overload is in progress; trains on retired "
+                         "deadlined requests' outcomes; needs --sched slo")
+    ap.add_argument("--pager-async", choices=["off", "on"], default="off",
+                    help="on = double-buffered async host-tier transfers: "
+                         "demote/offload D2H copies are issued immediately "
+                         "and resolved at the next decode-span boundary, "
+                         "overlapping decode compute; needs --kv-offload "
+                         "host")
     ap.add_argument("--prefix-snapshot", default="",
                     help="path: restore the prefix cache from it at start "
                          "(if the file exists) and snapshot back at exit — "
@@ -1827,7 +1948,9 @@ def main(argv=None):
                         adapt_floor_bits=args.kv_adapt_floor,
                         fused=args.fused, metrics=args.metrics,
                         snapshot_out=args.metrics_out or None,
-                        snapshot_every=args.metrics_every)
+                        snapshot_every=args.metrics_every,
+                        predictor=args.predictor,
+                        pager_async=args.pager_async)
     import os
     if args.prefix_snapshot and os.path.exists(
             snapshot_path(args.prefix_snapshot)):
@@ -1843,7 +1966,9 @@ def main(argv=None):
         slo = srv.tracer.slo_summary()
         ttft = slo.get("ttft_p50_s")
         tpot = slo.get("tpot_p50_s")
-        print(f"[serve] slo: goodput={slo['goodput']:.3f} "
+        goodput = slo.get("goodput")
+        print(f"[serve] slo: "
+              f"goodput={'n/a' if goodput is None else format(goodput, '.3f')} "
               f"({slo['finished']}/{slo['requests']} finished, "
               f"{slo['deadline_misses']} deadline misses), "
               f"ttft p50={0.0 if ttft is None else ttft * 1e3:.1f}ms "

@@ -47,15 +47,26 @@ while the registry becomes the storage.
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import json
+import logging
 import math
 import time
 from typing import Callable, Dict, List, Optional
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
            "MetricsSnapshotter", "Tracer", "NullTracer", "make_tracer",
-           "metric_attr", "default_registry", "percentile"]
+           "metric_attr", "default_registry", "percentile", "Ewma",
+           "SLOMonitor", "PAGER_TID"]
+
+logger = logging.getLogger(__name__)
+
+# dedicated Chrome-trace track for async pager transfers: their spans
+# OVERLAP engine decode spans by design (that overlap is the feature being
+# proven), and per-track span nesting is an invariant elsewhere — so they
+# get their own tid, far above any 1+rid request track
+PAGER_TID = 1_000_000
 
 
 def percentile(values, p: float):
@@ -268,6 +279,127 @@ class metric_attr:
         getattr(obj, self.registry_attr).counter(self.name).value = value
 
 
+class Ewma:
+    """Exponentially-weighted moving average; ``value`` is None until the
+    first update (absence is distinguishable from 0.0)."""
+
+    __slots__ = ("alpha", "value")
+
+    def __init__(self, alpha: float = 0.2):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError("alpha must be in (0, 1]")
+        self.alpha = alpha
+        self.value: Optional[float] = None
+
+    def update(self, x: float) -> float:
+        self.value = (float(x) if self.value is None
+                      else self.alpha * float(x)
+                      + (1.0 - self.alpha) * self.value)
+        return self.value
+
+    def get(self, default: float = 0.0) -> float:
+        return default if self.value is None else self.value
+
+
+class SLOMonitor:
+    """Rolling-window SLO reductions, live DURING a run.
+
+    ``Tracer.slo_summary()`` is exact but post-hoc; this keeps bounded
+    deques of the last ``window`` finished requests and EWMAs of the
+    queue/arrival/TPOT signals, and registers them as ``slo.*`` gauges so
+    the JSONL snapshot stream (and the deadline-miss predictor) can read
+    SLO health every cycle. Empty-window gauges read 0.0 —
+    ``slo.window_requests`` disambiguates "no traffic yet" from "goodput
+    actually 0". Host-side only: feeding it cannot change tokens.
+
+    ``tpot_ref`` is a slow EWMA of the same TPOT stream — the run's own
+    baseline decode speed — so ``tpot_ewma / tpot_ref`` gives the
+    predictor a unitless slowdown signal without any hardware constant.
+    """
+
+    def __init__(self, registry: MetricsRegistry, window: int = 32,
+                 alpha: float = 0.2):
+        if window < 1:
+            raise ValueError("window must be >= 1 request")
+        self.registry = registry
+        self.window = window
+        self._ttft = collections.deque(maxlen=window)
+        self._tpot = collections.deque(maxlen=window)
+        self._met = collections.deque(maxlen=window)
+        self._arrive_ts: Dict[int, float] = {}
+        self._first_ts: Dict[int, float] = {}
+        self.queue_depth = Ewma(alpha)
+        self.arrival_rate = Ewma(alpha / 2)   # slower: spans burst gaps
+        self.tpot = Ewma(alpha)
+        self.tpot_ref = Ewma(alpha / 10)
+        self._pending_arrivals = 0
+        g = registry.register_gauge
+        g("slo.window_requests", lambda: len(self._met))
+        g("slo.window_goodput", lambda: self.window_goodput() or 0.0)
+        g("slo.window_ttft_p50_s", lambda: self.window_ttft(50) or 0.0)
+        g("slo.window_ttft_p99_s", lambda: self.window_ttft(99) or 0.0)
+        g("slo.window_tpot_p50_s", lambda: self.window_tpot(50) or 0.0)
+        g("slo.window_tpot_p99_s", lambda: self.window_tpot(99) or 0.0)
+        g("slo.queue_depth_ewma", lambda: self.queue_depth.get())
+        g("slo.arrival_rate_ewma", lambda: self.arrival_rate.get())
+        g("slo.tpot_ewma_s", lambda: self.tpot.get())
+
+    # -- feed points (called by the serve loop) -----------------------------
+    def note_arrive(self, rid: int) -> None:
+        self._arrive_ts[rid] = time.perf_counter()
+        self._pending_arrivals += 1
+
+    def note_first_token(self, rid: int) -> None:
+        t0 = self._arrive_ts.get(rid)
+        if t0 is not None and rid not in self._first_ts:
+            now = time.perf_counter()
+            self._first_ts[rid] = now
+            self._ttft.append(now - t0)
+
+    def note_finish(self, rid: int, met: bool, tokens: int) -> None:
+        """Finish OR reject (met=False) — one window sample either way."""
+        first = self._first_ts.pop(rid, None)
+        self._arrive_ts.pop(rid, None)
+        if first is not None and tokens > 1:
+            tpot = (time.perf_counter() - first) / (tokens - 1)
+            self._tpot.append(tpot)
+            self.tpot.update(tpot)
+            self.tpot_ref.update(tpot)
+        self._met.append(bool(met))
+
+    def note_queue_depth(self, depth: int) -> None:
+        self.queue_depth.update(depth)
+
+    def advance(self, steps: int) -> None:
+        """Fold arrivals seen since the last call into the per-step
+        arrival-rate EWMA; call once per scheduler cycle with the decode
+        steps the cycle covered."""
+        if steps > 0:
+            self.arrival_rate.update(self._pending_arrivals / steps)
+            self._pending_arrivals = 0
+
+    # -- window reductions --------------------------------------------------
+    def window_goodput(self) -> Optional[float]:
+        if not self._met:
+            return None
+        return sum(self._met) / len(self._met)
+
+    def window_ttft(self, p: float) -> Optional[float]:
+        return percentile(list(self._ttft), p)
+
+    def window_tpot(self, p: float) -> Optional[float]:
+        return percentile(list(self._tpot), p)
+
+    def tpot_slowdown(self) -> float:
+        """Fast/slow TPOT EWMA ratio minus 1, clipped to [-0.25, 0.25] —
+        deliberately small so wall-clock jitter cannot dominate the
+        predictor's otherwise step-clock-deterministic features."""
+        if self.tpot.value is None or not self.tpot_ref.get():
+            return 0.0
+        r = self.tpot.value / self.tpot_ref.value - 1.0
+        return max(-0.25, min(0.25, r))
+
+
 # ---------------------------------------------------------------------------
 # Span tracer (Chrome trace-event JSON) + per-request lifecycle records
 # ---------------------------------------------------------------------------
@@ -359,6 +491,22 @@ class Tracer:
             if args:
                 ev["args"] = args
             self.events.append(ev)
+
+    def pager_span(self, name: str, t_start: float, t_end: float,
+                   args: Optional[dict] = None) -> None:
+        """Record a RETROSPECTIVE span on the pager track from two
+        ``time.perf_counter`` stamps. The async pager enqueues a transfer
+        mid-cycle and only learns its completion at the next drain point,
+        so it cannot use the context-manager form — it closes the span
+        after the fact. Lands on :data:`PAGER_TID` because these spans
+        intentionally overlap engine decode spans."""
+        self._track_name(PAGER_TID, "pager")
+        ev = {"ph": "X", "name": name, "pid": 0, "tid": PAGER_TID,
+              "ts": max(0.0, (t_start - self._t0) * 1e6),
+              "dur": max(0.0, (t_end - t_start) * 1e6)}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
 
     # -- request lifecycle --------------------------------------------------
     def _rec(self, rid: int) -> Optional[_RequestRecord]:
@@ -560,9 +708,18 @@ class NullTracer:
     def chrome_trace(self):
         return {"traceEvents": [], "displayTimeUnit": "ms"}
 
+    def pager_span(self, name, t_start, t_end, args=None):
+        pass
+
     def export_chrome(self, path):
-        raise RuntimeError("tracing is disabled (--metrics off); "
-                           "enable --metrics on to export a trace")
+        """No-op export: warns and returns None instead of raising, so a
+        bench/CLI that toggled ``--metrics off`` but kept its export call
+        still completes (the caller can tell nothing was written from the
+        ``None``)."""
+        logger.warning("tracing is disabled (--metrics off); "
+                       "export_chrome(%r) wrote nothing — enable "
+                       "--metrics on to export a trace", path)
+        return None
 
 
 def make_tracer(mode: str, name: str = "serve"):

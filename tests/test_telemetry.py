@@ -29,8 +29,9 @@ import pytest
 from repro.configs.registry import get_smoke_config
 from repro.launch.serve import BatchedServer, Request
 from repro.models.transformer import init_model
-from repro.runtime.telemetry import (MetricsRegistry, MetricsSnapshotter,
-                                     NullTracer, Tracer, make_tracer,
+from repro.runtime.telemetry import (Ewma, MetricsRegistry,
+                                     MetricsSnapshotter, NullTracer,
+                                     SLOMonitor, Tracer, make_tracer,
                                      metric_attr, percentile)
 
 jax.config.update("jax_platform_name", "cpu")
@@ -128,22 +129,28 @@ def test_metric_attr_routes_through_registry():
     assert a.hits == 0 and b.hits == 40
 
 
-def test_make_tracer_and_null_surface(tmp_path):
+def test_make_tracer_and_null_surface(tmp_path, caplog):
     assert isinstance(make_tracer("on"), Tracer)
     null = make_tracer("off")
     assert isinstance(null, NullTracer) and not null.enabled
     with pytest.raises(ValueError, match="metrics"):
         make_tracer("maybe")
     # the disabled surface: spans are reusable null contexts, reductions
-    # are empty, exporting raises instead of writing an empty file
+    # are empty, exporting is a warned no-op (returns None, writes no
+    # file) instead of the PR 8 RuntimeError footgun
     with null.span("x"):
         with null.req_span(0, "y"):
             null.req_arrive(0, 0)
             null.req_finish(0, 1, 1)
+    null.pager_span("pager.demote", 0.0, 1.0)
     assert null.request_stats() == [] and null.slo_summary() == {}
     assert null.chrome_trace()["traceEvents"] == []
-    with pytest.raises(RuntimeError, match="disabled"):
-        null.export_chrome(str(tmp_path / "t.json"))
+    path = tmp_path / "t.json"
+    import logging
+    with caplog.at_level(logging.WARNING, "repro.runtime.telemetry"):
+        assert null.export_chrome(str(path)) is None
+    assert not path.exists(), "NullTracer export must not write a file"
+    assert any("disabled" in r.getMessage() for r in caplog.records)
 
 
 def test_snapshotter_jsonl_stream(tmp_path):
@@ -441,3 +448,106 @@ def test_scattered_counters_share_one_registry(smoke_model):
                           page_size=8)
     assert other.metrics is not m
     assert other.metrics.counter("serve.decode_steps").value == 0
+
+
+# ---------------------------------------------------------------------------
+# slo_summary edge cases + SLOMonitor rolling windows
+# ---------------------------------------------------------------------------
+def test_slo_summary_zero_requests():
+    """An untouched tracer summarises to zeros/None, never NaN or a raise."""
+    tr = Tracer()
+    s = tr.slo_summary()
+    assert s["requests"] == 0 and s["finished"] == 0
+    assert s["goodput"] is None
+    for k in ("ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s"):
+        assert s[k] is None
+
+
+def test_slo_summary_all_deferred():
+    """Requests that arrive but never admit (gate closed all run) count as
+    offered-but-not-good: goodput 0.0 with None percentiles."""
+    tr = Tracer()
+    for rid in range(3):
+        tr.req_arrive(rid, step=0, deadline_step=10)
+        tr.req_defer(rid, step=1)
+        tr.req_defer(rid, step=2)
+    s = tr.slo_summary()
+    assert s["requests"] == 3 and s["finished"] == 0
+    assert s["goodput"] == 0.0
+    assert s["deadline_misses"] == 3
+    assert s["ttft_p50_s"] is None and s["tpot_p50_s"] is None
+    assert all(st["defers"] == 2 for st in tr.request_stats())
+
+
+def test_slo_summary_never_first_token():
+    """A request that finishes without ever emitting a token (e.g. rejected
+    after admit, or zero-token cap) has None TTFT/TPOT; percentiles are
+    drawn only from requests that actually emitted tokens."""
+    tr = Tracer()
+    tr.req_arrive(0, step=0)
+    tr.req_admit(0, step=0)
+    tr.req_finish(0, step=3, tokens=0)       # no req_first_token ever
+    tr.req_arrive(1, step=0)
+    tr.req_admit(1, step=0)
+    tr.req_first_token(1)
+    tr.req_finish(1, step=4, tokens=5)
+    stats = {s["rid"]: s for s in tr.request_stats()}
+    assert stats[0]["ttft_s"] is None and stats[0]["tpot_s"] is None
+    assert stats[0]["finished"] and stats[0]["met_deadline"]
+    assert stats[1]["ttft_s"] is not None and stats[1]["tpot_s"] is not None
+    s = tr.slo_summary()
+    assert s["goodput"] == 1.0               # both no-deadline + finished
+    assert s["ttft_p50_s"] == stats[1]["ttft_s"]
+    assert s["tpot_p50_s"] == stats[1]["tpot_s"]
+
+
+def test_slo_monitor_window_reductions_and_gauges():
+    reg = MetricsRegistry()
+    mon = SLOMonitor(reg, window=4)
+    g = reg.snapshot()["gauges"]
+    # empty window: gauges read 0.0, window_requests disambiguates
+    assert g["slo.window_requests"] == 0
+    assert g["slo.window_goodput"] == 0.0
+    assert mon.window_goodput() is None      # the method keeps the None
+    assert g["slo.window_ttft_p50_s"] == 0.0
+    # feed 6 finishes through a window of 4: only the last 4 count
+    for rid in range(6):
+        mon.note_arrive(rid)
+        mon.note_first_token(rid)
+        mon.note_finish(rid, met=(rid >= 2), tokens=8)
+    g = reg.snapshot()["gauges"]
+    assert g["slo.window_requests"] == 4
+    assert mon.window_goodput() == 1.0       # rids 2..5 all met
+    assert g["slo.window_goodput"] == 1.0
+    assert mon.window_ttft(50) is not None and mon.window_ttft(50) >= 0.0
+    assert mon.window_tpot(99) is not None and mon.window_tpot(99) >= 0.0
+    # a rejection is one window sample with met=False, no TPOT
+    mon.note_arrive(99)
+    mon.note_finish(99, met=False, tokens=0)
+    assert mon.window_goodput() == 0.75
+
+
+def test_slo_monitor_advance_and_slowdown_clipping():
+    reg = MetricsRegistry()
+    mon = SLOMonitor(reg, window=4)
+    # advance folds pending arrivals into a per-step rate EWMA
+    for rid in range(6):
+        mon.note_arrive(rid)
+    mon.advance(steps=3)
+    assert mon.arrival_rate.get() == pytest.approx(2.0)
+    mon.advance(steps=5)                     # no new arrivals -> decays
+    assert 0.0 < mon.arrival_rate.get() < 2.0
+    mon.note_queue_depth(10)
+    assert mon.queue_depth.get() == 10.0
+    # slowdown: 0 before any TPOT sample, then clipped to +/-0.25
+    assert mon.tpot_slowdown() == 0.0
+    mon.tpot.value, mon.tpot_ref.value = 10.0, 1.0
+    assert mon.tpot_slowdown() == 0.25
+    mon.tpot.value = 0.1
+    assert mon.tpot_slowdown() == -0.25
+    mon.tpot.value = 1.05
+    assert mon.tpot_slowdown() == pytest.approx(0.05)
+    with pytest.raises(ValueError):
+        SLOMonitor(MetricsRegistry(), window=0)
+    with pytest.raises(ValueError):
+        Ewma(alpha=0.0)

@@ -1,0 +1,343 @@
+"""Traffic-at-scale harness tests: arrival-trace determinism, generator
+validation, the deadline-miss predictor's decision surface, and the async
+pager's byte-identity + token-neutrality contracts.
+
+* generate_trace: equal TraceConfigs produce identical request streams —
+  fingerprint-asserted both in-process and across two subprocesses (the
+  guarantee the benchmark's replay-both-arms design rests on); structural
+  invariants (deadline pricing, shared-prefix pooling, horizon bounds).
+* DeadlineMissPredictor: monotone risk in each pressure feature, peak-hold
+  hazard decay, the three spec_budget bands, and SGD moving weights toward
+  the observed label.
+* extract_page_async: resolves to byte-identical PageBlobs vs the sync
+  extractor, stays valid after the device page is overwritten, and
+  resolve() is idempotent.
+* Serving with ``predictor="off"``/``pager_async`` must be token-identical
+  to the PR 8 surface (no new kwargs) at kv-bits {0, 8, 4} — subprocess,
+  single-threaded XLA, same pattern as the other bitwise-identity suites.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.page_store import extract_page, extract_page_async
+from repro.core.traffic import (TenantSpec, TraceConfig, generate_trace,
+                                trace_fingerprint)
+from repro.launch.scheduler import DeadlineMissPredictor
+from repro.runtime.telemetry import MetricsRegistry
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mix_config(seed=11):
+    return TraceConfig(
+        seed=seed, horizon=48, rate=0.3, process="bursty", burst_rate=1.8,
+        p_enter_burst=0.15, p_exit_burst=0.3, vocab_size=997,
+        tenants=(
+            TenantSpec("chat", weight=0.7, priority=5, deadline_slack=4,
+                       prompt_mean=8.0, prompt_cap=16, max_new_mean=4.0,
+                       max_new_cap=6, shared_prefix_len=6, prefix_pool=3),
+            TenantSpec("batch", weight=0.3, priority=0, deadline_slack=None,
+                       prompt_mean=12.0, prompt_cap=24, max_new_mean=10.0,
+                       max_new_cap=16),
+        ))
+
+
+# ---------------------------------------------------------------------------
+# Trace generation: determinism + structure
+# ---------------------------------------------------------------------------
+def test_trace_deterministic_in_process():
+    a, b = generate_trace(_mix_config()), generate_trace(_mix_config())
+    assert trace_fingerprint(a) == trace_fingerprint(b)
+    assert len(a.requests) == len(b.requests) > 0
+    for ra, rb in zip(a.requests, b.requests):
+        assert (ra.rid, ra.tenant, ra.arrive_step, ra.max_new,
+                ra.priority, ra.deadline_step, ra.prefix_id) == \
+               (rb.rid, rb.tenant, rb.arrive_step, rb.max_new,
+                rb.priority, rb.deadline_step, rb.prefix_id)
+        np.testing.assert_array_equal(ra.prompt, rb.prompt)
+    assert trace_fingerprint(generate_trace(_mix_config(seed=12))) \
+        != trace_fingerprint(a)
+
+
+def test_trace_structural_invariants():
+    tr = generate_trace(_mix_config())
+    cfg = tr.config
+    prefixes = {}
+    tenants = {t.name: t for t in cfg.tenants}
+    for r in tr.requests:
+        t = tenants[r.tenant]
+        assert 0 <= r.arrive_step < cfg.horizon
+        assert 1 <= r.max_new <= t.max_new_cap
+        assert r.prompt.dtype == np.int32
+        assert np.all((r.prompt >= 0) & (r.prompt < cfg.vocab_size))
+        if t.deadline_slack is None:
+            assert r.deadline_step is None
+        else:
+            assert r.deadline_step == \
+                r.arrive_step + r.max_new + t.deadline_slack
+        if t.shared_prefix_len > 0:
+            assert 0 <= r.prefix_id < t.prefix_pool
+            key = (r.tenant, r.prefix_id)
+            head = r.prompt[:t.shared_prefix_len]
+            if key in prefixes:          # pool entries are shared verbatim
+                np.testing.assert_array_equal(head, prefixes[key])
+            prefixes[key] = head
+        else:
+            assert r.prefix_id == -1
+    assert {r.tenant for r in tr.requests} == {"chat", "batch"}
+    # the bursty mix overloads a small batch on its own numbers
+    assert tr.overload_ratio(batch_size=2) > 1.0
+    assert tr.burst_steps, "MMPP never entered the burst state"
+
+
+def test_trace_generator_validation():
+    with pytest.raises(ValueError, match="process"):
+        generate_trace(TraceConfig(process="fractal"))
+    with pytest.raises(ValueError, match="tenant"):
+        generate_trace(TraceConfig(tenants=()))
+    with pytest.raises(ValueError, match="weights"):
+        generate_trace(TraceConfig(tenants=(TenantSpec("a", weight=0.0),)))
+
+
+_FINGERPRINT_SCRIPT = r"""
+from repro.core.traffic import TenantSpec, TraceConfig, generate_trace, \
+    trace_fingerprint
+cfg = TraceConfig(
+    seed=11, horizon=48, rate=0.3, process="bursty", burst_rate=1.8,
+    p_enter_burst=0.15, p_exit_burst=0.3, vocab_size=997,
+    tenants=(
+        TenantSpec("chat", weight=0.7, priority=5, deadline_slack=4,
+                   prompt_mean=8.0, prompt_cap=16, max_new_mean=4.0,
+                   max_new_cap=6, shared_prefix_len=6, prefix_pool=3),
+        TenantSpec("batch", weight=0.3, priority=0, deadline_slack=None,
+                   prompt_mean=12.0, prompt_cap=24, max_new_mean=10.0,
+                   max_new_cap=16),
+    ))
+print(trace_fingerprint(generate_trace(cfg)))
+"""
+
+
+def test_trace_fingerprint_across_processes():
+    """Same config in two fresh interpreters yields the same sha256 — no
+    hidden global RNG or hash-seed dependence in the stream."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p]
+        + [os.path.join(os.path.dirname(__file__), "..", "src")])
+    fps = []
+    for _ in range(2):
+        res = subprocess.run([sys.executable, "-c", _FINGERPRINT_SCRIPT],
+                             env=env, capture_output=True, text=True,
+                             timeout=300)
+        assert res.returncode == 0, res.stdout + res.stderr
+        fps.append(res.stdout.strip())
+    assert fps[0] == fps[1] and len(fps[0]) == 64
+    # and matches the in-process generator on the identical config
+    assert fps[0] == trace_fingerprint(generate_trace(_mix_config()))
+
+
+# ---------------------------------------------------------------------------
+# DeadlineMissPredictor decision surface
+# ---------------------------------------------------------------------------
+def _feat(pred, **kw):
+    base = dict(queue_deadlined=0, batch=4, free_frac=1.0, prefill_debt=0,
+                debt_cap=32, live_frac=0.0, arrival_ewma=0.0,
+                tpot_slowdown=0.0)
+    base.update(kw)
+    return pred.features(**base)
+
+
+def test_predictor_risk_monotone_and_bounded():
+    p = DeadlineMissPredictor(MetricsRegistry())
+    calm = p.risk(_feat(p))
+    assert 0.0 < calm < 0.5                 # bias keeps the gate open at rest
+    for kw in (dict(queue_deadlined=8), dict(arrival_ewma=2.0),
+               dict(free_frac=0.0), dict(prefill_debt=32),
+               dict(live_frac=1.0), dict(tpot_slowdown=0.25)):
+        assert p.risk(_feat(p, **kw)) > calm, kw
+    storm = p.risk(_feat(p, queue_deadlined=8, arrival_ewma=2.0,
+                         free_frac=0.0, prefill_debt=32, live_frac=1.0))
+    assert storm > p.gate_at                # full pressure crosses the gate
+    # features are normalized: saturating the inputs saturates, not explodes
+    x = _feat(p, queue_deadlined=10 ** 6, arrival_ewma=10 ** 6,
+              prefill_debt=10 ** 6, live_frac=50.0, tpot_slowdown=9.0)
+    assert all(-0.25 <= xi <= 1.0 for xi in x)
+
+
+def test_predictor_hazard_peak_hold_and_budget_bands():
+    p = DeadlineMissPredictor(MetricsRegistry())
+    storm = _feat(p, queue_deadlined=8, arrival_ewma=2.0, free_frac=0.0,
+                  prefill_debt=32, live_frac=1.0)
+    r = p.consult(storm)
+    assert p.hazard == r > p.gate_at
+    assert p.metrics.gauge("sched.miss_risk").value == r
+    # calm cycles decay the hazard geometrically but hold the peak memory
+    p.consult(_feat(p))
+    assert r * p.hazard_decay - 1e-12 <= p.hazard < r
+    for _ in range(400):
+        p.consult(_feat(p))
+    assert p.spec_budget(4) == 4            # decayed back below the gate
+    p.hazard = p.gate_at - 0.01
+    assert p.spec_budget(4) == 4
+    p.hazard = (p.gate_at + (1.0 + p.gate_at) / 2.0) / 2.0   # warning band
+    assert p.spec_budget(4) == 1
+    p.hazard = 0.99
+    assert p.spec_budget(4) == 0
+
+
+def test_predictor_sgd_moves_toward_label():
+    p = DeadlineMissPredictor(MetricsRegistry())
+    x = _feat(p, queue_deadlined=4, arrival_ewma=1.0, free_frac=0.4)
+    r0 = p.risk(x)
+    for _ in range(50):
+        p.observe(x, missed=True)
+    assert p.risk(x) > r0                   # misses push risk up...
+    r1 = p.risk(x)
+    for _ in range(50):
+        p.observe(x, missed=False)
+    assert p.risk(x) < r1                   # ...makes push it back down
+    assert p.updates == 100
+    assert p.metrics.counter("sched.predictor_updates").value == 100
+
+
+# ---------------------------------------------------------------------------
+# Async page extraction: byte identity with the sync path
+# ---------------------------------------------------------------------------
+def _filled_pool(container, *, scale_mode="static", seed=0):
+    """One layer's pool with pages 1..2 written via the real update path
+    (same recipe as test_page_store, so int containers hold genuine
+    quantized grids + scales)."""
+    import jax.numpy as jnp
+    from repro.core.paged_kv import PagedKVLayout, init_paged_pool, \
+        paged_update
+    rng = np.random.default_rng(seed)
+    ps, KV, hd = 4, 2, 16
+    layout = PagedKVLayout(num_pages=6, page_size=ps, num_kv_heads=KV,
+                           head_dim=hd, container=container)
+    pool = init_paged_pool(layout)
+    pt = jnp.asarray([[1, 2]], np.int32)
+    bits = layout.bits
+    for t in range(2 * ps):
+        k = jnp.asarray(rng.normal(size=(1, 1, KV, hd)) * (0.1 + 0.2 * t),
+                        jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, 1, KV, hd)) * 0.4, jnp.float32)
+        pool = paged_update(pool, k, v, pt, jnp.asarray([t], np.int32),
+                            page_size=ps, container=container,
+                            int_bits=2 if bits else None,
+                            frac_bits=(bits - 2) if bits else None,
+                            scale_mode=scale_mode)
+    return pool
+
+
+@pytest.mark.parametrize("container", ["fp", "int8", "int4"])
+def test_extract_page_async_byte_identical(container):
+    from repro.core.page_store import inject_page
+    caches = [
+        (_filled_pool(container, seed=1),),
+        ([_filled_pool(container, scale_mode="page" if container != "fp"
+                       else "static", seed=2)],),
+    ]
+    ref = extract_page(caches, 2)
+    pending = extract_page_async(caches, 2)
+    assert not pending.resolved
+    # overwrite the device page BEFORE resolving: the async slices must be
+    # functional values, immune to pool reuse
+    caches = inject_page(caches, extract_page(caches, 1), 2)
+    blob = pending.resolve()
+    assert pending.resolved
+    assert pending.resolve() is blob        # idempotent
+    assert blob.nbytes == ref.nbytes > 0
+    for got, want in zip(blob.arrays, ref.arrays):
+        for k in want:
+            np.testing.assert_array_equal(got[k], want[k])
+
+
+# ---------------------------------------------------------------------------
+# predictor off / pager_async: token-identical to the PR 8 surface
+# ---------------------------------------------------------------------------
+_PREDICTOR_OFF_IDENTITY_SCRIPT = r"""
+import jax, numpy as np
+jax.config.update("jax_platform_name", "cpu")
+from repro.configs.registry import get_smoke_config
+from repro.launch.serve import BatchedServer, Request
+from repro.models.transformer import init_model
+
+cfg = get_smoke_config("qwen2-72b")
+params = init_model(jax.random.PRNGKey(0), cfg)
+
+def mk():
+    rng = np.random.default_rng(13)
+    sys_p = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    reqs = []
+    for i, L in enumerate([3, 9, 5, 12, 2, 7]):
+        p = np.concatenate([sys_p, rng.integers(0, cfg.vocab_size, L)
+                            .astype(np.int32)])
+        reqs.append(Request(i, p, 4 + (i % 3), priority=i % 2,
+                            deadline_step=(None if i % 2 else 30 + 4 * i),
+                            arrive_step=2 * i))
+    return reqs
+
+for kv_bits in (0, 8, 4):
+    base = dict(batch_size=2, max_len=48, kv_bits=kv_bits, page_size=8,
+                prefill="bucketed", prefill_bucket=8, prefix_cache="on",
+                kv_offload="host", sched="slo", preempt=False)
+    seed = BatchedServer(cfg, params, **base)           # PR 8 surface
+    out_seed = seed.run(mk())
+    off = BatchedServer(cfg, params, metrics="on", predictor="off",
+                        pager_async="off", **base)
+    out_off = off.run(mk())
+    asy = BatchedServer(cfg, params, metrics="on", predictor="off",
+                        pager_async="on", **base)
+    out_asy = asy.run(mk())
+    for a, b, c in zip(out_seed, out_off, out_asy):
+        assert a.out == b.out, ("predictor-off", kv_bits, a.rid)
+        assert a.out == c.out, ("pager-async", kv_bits, a.rid)
+    assert off.predictor is None and asy.predictor is None
+    assert asy.pager.async_mode and not off.pager.async_mode
+    assert off.tracer.slo_summary()["requests"] == len(out_off)
+    print(f"kv_bits={kv_bits} tokens identical across seed/off/async")
+print("PREDICTOR_OFF_IDENTITY_OK")
+"""
+
+
+def test_predictor_off_is_token_neutral():
+    """``--predictor off --metrics on`` (and the async pager) must be
+    token-identical to a PR 8-style server with none of the new kwargs,
+    at kv-bits {0, 8, 4} — the telemetry/prediction layer is observe-only
+    until the gate is explicitly enabled. Subprocess + single-threaded
+    XLA for bitwise-stable logits."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_cpu_multi_thread_eigen=false "
+                        "intra_op_parallelism_threads=1 "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p]
+        + [os.path.join(os.path.dirname(__file__), "..", "src"),
+           os.path.join(os.path.dirname(__file__), "..")])
+    res = subprocess.run(
+        [sys.executable, "-c", _PREDICTOR_OFF_IDENTITY_SCRIPT],
+        env=env, capture_output=True, text=True, timeout=1200)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "PREDICTOR_OFF_IDENTITY_OK" in res.stdout
+
+
+def test_predictor_flag_validation():
+    from repro.configs.registry import get_smoke_config
+    from repro.launch.serve import BatchedServer
+    from repro.models.transformer import init_model
+    cfg = get_smoke_config("qwen2-72b")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="predictor"):
+        BatchedServer(cfg, params, batch_size=2, max_len=32, page_size=8,
+                      predictor="on")            # needs sched="slo"
+    with pytest.raises(ValueError, match="pager"):
+        BatchedServer(cfg, params, batch_size=2, max_len=32, page_size=8,
+                      pager_async="on")          # needs kv_offload="host"
+    with pytest.raises(ValueError, match="predictor"):
+        BatchedServer(cfg, params, batch_size=2, max_len=32, page_size=8,
+                      sched="slo", predictor="maybe")
