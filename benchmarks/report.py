@@ -187,7 +187,9 @@ BENCH_TRAJECTORY = os.path.join(
 # e.g. the mixed bench's per-config tokens_per_s — expand per sub-key)
 _SERVE_METRICS = ("tokens_per_s", "goodput", "goodput_off", "goodput_delta",
                   "ttft_p99_s", "token_agreement", "program_reduction",
-                  "prefill_forwards_reduction")
+                  "prefill_forwards_reduction", "goodput_1rep",
+                  "goodput_2rep", "token_agreement_2rep",
+                  "blocked_speedup_geomean", "grid_step_ratio")
 
 
 def _serve_points():
@@ -219,14 +221,25 @@ def _serve_points():
 def _flat_metrics(res: dict) -> dict:
     out = {}
     for m in _SERVE_METRICS:
-        v = res.get(m)
+        if m not in res:
+            continue
+        v = res[m]
         if isinstance(v, dict):
             for k, vv in v.items():
                 if isinstance(vv, (int, float)):
                     out[f"{m}[{k}]"] = float(vv)
         elif isinstance(v, (int, float)):
             out[m] = float(v)
+        else:
+            # present but unusable (pre-PR-8 runs emit None for SLO
+            # fields the telemetry layer didn't exist to fill) — keep the
+            # row so the trend table shows an explicit n/a, not a gap
+            out[m] = None
     return out
+
+
+def _fmt_metric(v) -> str:
+    return f"{v:.4g}" if isinstance(v, (int, float)) else "n/a"
 
 
 def serve_section() -> str:
@@ -246,17 +259,22 @@ def serve_section() -> str:
                 f"first {first_when} -> latest {last_when}", "",
                 "| metric | first | latest | delta |", "|---|---|---|---|"]
         keys = [k for k in f1 if k in f0] \
-            + [k for k in f1 if k not in f0]
+            + [k for k in f1 if k not in f0] \
+            + [k for k in f0 if k not in f1]
         for k in keys:
-            v1 = f1[k]
-            if k in f0:
-                v0 = f0[k]
+            v0, v1 = f0.get(k), f1.get(k)
+            if isinstance(v0, float) and isinstance(v1, float):
                 d = v1 - v0
                 rel = f" ({d / abs(v0):+.1%})" if v0 else ""
                 out.append(f"| {k} | {v0:.4g} | {v1:.4g} | "
                            f"{d:+.4g}{rel} |")
+            elif k not in f0:
+                out.append(f"| {k} | n/a | {_fmt_metric(v1)} | new |")
             else:
-                out.append(f"| {k} | — | {v1:.4g} | new |")
+                # one side is missing or non-numeric (e.g. the first point
+                # predates the SLO fields): print n/a, never crash
+                out.append(f"| {k} | {_fmt_metric(v0)} | "
+                           f"{_fmt_metric(v1)} | n/a |")
         out.append("")
     return "\n".join(out)
 

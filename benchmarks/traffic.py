@@ -31,8 +31,17 @@ windowed ``slo.*`` gauges into results/metrics_traffic.jsonl, the Chrome
 trace in results/trace_traffic.json, and a trajectory point appends to
 the repo-root BENCH_serve.json.
 
+**Multi-replica A/B** (``run_replicas`` / ``--mode replicas``): the same
+fingerprinted overload trace through ``launch.frontend.ReplicaFrontend``
+at 1 vs 2 replicas — prefix-affinity routing, per-replica ``slo.*``/page
+headroom balancing, cross-replica shared prefix store — gating (RAISES —
+the CI replica-smoke step) on the 1-replica frontend being token-
+identical to the plain server, >= 0.9 token agreement for both arms vs
+the ample-pool reference, and 2-replica aggregate goodput strictly above
+1-replica. Results land in results/traffic_replicas.json.
+
 Run:  PYTHONPATH=src python -m benchmarks.traffic [--fast]
-      [--mode all|serve|accounting]
+      [--mode all|serve|accounting|replicas]
 """
 from __future__ import annotations
 
@@ -350,19 +359,150 @@ def run_serve(*, arch="qwen2-72b", verbose=True, fast=False):
     return res
 
 
+def run_replicas(*, arch="qwen2-72b", verbose=True, fast=False):
+    """Sharded multi-replica A/B on the same fingerprinted overload trace
+    (the PR 10 headline): a 1-replica :class:`ReplicaFrontend` vs a
+    2-replica pool with prefix-affinity routing and the cross-replica
+    shared prefix store. Gates (RAISE — the CI replica-smoke step):
+
+      * the 1-replica frontend being THE SAME SERVER: token streams,
+        done flags and finish steps bitwise-equal to a plain
+        ``BatchedServer.run`` replay (the frontend's identity contract;
+        also subprocess-asserted at kv-bits 0/8/4 in
+        tests/test_frontend.py),
+      * >= 0.9 token agreement for BOTH arms vs the ample-pool reference
+        (routing must never touch decode math),
+      * 2-replica aggregate goodput STRICTLY above 1-replica (scaling
+        out buys deadline hits on the overload trace).
+    """
+    from repro.launch.frontend import (ReplicaFrontend, aggregate_goodput,
+                                       make_replicas, merged_snapshot,
+                                       requests_from_trace)
+    cfg = get_smoke_config(arch)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    batch, page_size, max_len = 3, 8, 64
+    num_pages = 1 + 13
+    trace = generate_trace(overload_trace_config(cfg.vocab_size, fast=fast))
+    overload = trace.overload_ratio(batch)
+    common = dict(batch_size=batch, max_len=max_len, page_size=page_size,
+                  num_pages=num_pages, kv_bits=8, prefix_cache="on",
+                  kv_offload="host", sched="slo", preempt=False,
+                  metrics="on", pager_async="on")
+
+    def arm(n):
+        fe = ReplicaFrontend(make_replicas(n, cfg, params, **common))
+        reqs, keys = requests_from_trace(trace)
+        t0 = time.time()
+        fe.run(reqs, keys)
+        return fe, reqs, time.time() - t0
+
+    fe1, reqs1, t1 = arm(1)
+    fe2, reqs2, t2 = arm(2)
+
+    # --- identity: the 1-replica frontend IS the plain server ---
+    plain = BatchedServer(cfg, params, **common)
+    plain_by_rid = {r.rid: r for r in plain.run(to_requests(trace))}
+    for r in reqs1:
+        p = plain_by_rid[r.rid]
+        if (list(r.out) != list(p.out) or r.done != p.done
+                or r.finish_step != p.finish_step):
+            raise RuntimeError(
+                f"1-replica frontend diverged from the plain server on "
+                f"rid={r.rid}: out {r.out} vs {p.out}, done {r.done} vs "
+                f"{p.done}, finish {r.finish_step} vs {p.finish_step}")
+
+    # --- agreement vs the ample-pool reference (no admission pressure) ---
+    ref = BatchedServer(cfg, params, batch_size=batch, max_len=max_len,
+                        page_size=page_size, kv_bits=8)
+    ref_by_rid = {r.rid: r for r in ref.run(to_requests(trace))}
+    agree1 = _token_agreement(reqs1, ref_by_rid)
+    agree2 = _token_agreement(reqs2, ref_by_rid)
+    if min(agree1, agree2) < 0.9:
+        raise RuntimeError(
+            f"replica routing broke decode numerics: token agreement "
+            f"1rep={agree1:.1%} 2rep={agree2:.1%} vs reference "
+            f"(need >= 0.9 — the frontend must not touch math)")
+
+    g1 = aggregate_goodput(reqs1)
+    g2 = aggregate_goodput(reqs2)
+    if g1 is None or g2 is None:
+        raise RuntimeError("replica replay produced no goodput")
+    if g2 <= g1:
+        raise RuntimeError(
+            f"2-replica pool failed to buy goodput on the overload "
+            f"trace: 2rep={g2:.3f} <= 1rep={g1:.3f} — scaling out must "
+            f"convert the burst backlog into deadline hits")
+
+    c2 = merged_snapshot(fe2)["counters"]
+    res = {
+        "arch": arch, "fast": fast, "batch": batch,
+        "page_size": page_size, "num_pages": num_pages,
+        "trace": {
+            "requests": len(trace.requests),
+            "horizon": trace.config.horizon,
+            "overload_ratio": overload,
+            "fingerprint": trace_fingerprint(trace),
+        },
+        "one_replica": {"goodput": g1, "token_agreement": agree1,
+                        "wall_s": t1},
+        "two_replica": {
+            "goodput": g2, "token_agreement": agree2, "wall_s": t2,
+            "routed": c2.get("frontend.routed", 0),
+            "routed_per_replica": [
+                c2.get(f"frontend.routed_replica{i}", 0) for i in (0, 1)],
+            "affinity_hits": c2.get("frontend.affinity_hits", 0),
+            "rebalanced": c2.get("frontend.rebalanced", 0),
+            "shared_prefix_pages": c2.get("frontend.shared_prefix_pages", 0),
+        },
+        "goodput_delta": g2 - g1,
+    }
+    if verbose:
+        two = res["two_replica"]
+        print(f"[traffic:replicas] {len(trace.requests)} requests, "
+              f"{overload:.1f}x overload at batch={batch}")
+        print(f"  1 replica:  aggregate goodput {g1:.3f}, "
+              f"agreement {agree1:.1%} (identical to plain server)")
+        print(f"  2 replicas: aggregate goodput {g2:.3f}, "
+              f"agreement {agree2:.1%}, routed "
+              f"{two['routed_per_replica']}, "
+              f"{two['affinity_hits']} affinity hits / "
+              f"{two['rebalanced']} rebalances, "
+              f"{two['shared_prefix_pages']} shared prefix pages")
+        print(f"  goodput delta +{res['goodput_delta']:.3f}")
+    save_json("traffic_replicas.json", res)
+    from .paged_serve import _append_trajectory
+    point = {"when": time.strftime("%Y-%m-%d %H:%M:%S"), "arch": arch,
+             "fast": fast, "summary": {"replicas": {
+                 "goodput_1rep": g1,
+                 "goodput_2rep": g2,
+                 "goodput_delta": res["goodput_delta"],
+                 "token_agreement_2rep": agree2,
+                 "affinity_hits": res["two_replica"]["affinity_hits"],
+                 "shared_prefix_pages":
+                     res["two_replica"]["shared_prefix_pages"],
+                 "overload_ratio": overload}}}
+    path = _append_trajectory(point)
+    if verbose:
+        print(f"  trajectory point appended to {os.path.basename(path)}")
+    return res
+
+
 def run(*, verbose=True, fast=False, mode="all"):
     res = {}
     if mode in ("all", "accounting"):
         res["accounting"] = run_accounting(verbose=verbose)
     if mode in ("all", "serve"):
         res["serve"] = run_serve(verbose=verbose, fast=fast)
+    if mode in ("all", "replicas"):
+        res["replicas"] = run_replicas(verbose=verbose, fast=fast)
     return res
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
-    ap.add_argument("--mode", choices=["all", "serve", "accounting"],
+    ap.add_argument("--mode",
+                    choices=["all", "serve", "accounting", "replicas"],
                     default="all")
     args = ap.parse_args()
     run(fast=args.fast, mode=args.mode)

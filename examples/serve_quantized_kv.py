@@ -182,6 +182,48 @@ Since PR 9 the telemetry closes the loop — **traffic at scale**
   time hides behind decode — ``pager.demote``/``pager.offload`` spans
   overlap ``decode_span`` on the Chrome trace's pager track.
 
+Since PR 10 serving scales UP and OUT — **sharded multi-replica paged
+serving** (``launch.frontend`` + ``--tp``):
+
+* ``--tp N`` (``launch.mesh.make_serving_mesh``) makes one server a
+  tensor-parallel replica over a ``(devices//N, N)`` data x model mesh:
+  weights land TP-only via ``parallel.sharding.param_shardings(...,
+  inference=True)`` (no per-token FSDP gathers) and the paged KV pool
+  becomes a sharded pytree via ``paged_pool_shardings`` — page grids
+  ``(NP, ps, KV, hdw)`` shard their KV-heads axis over "model" (int4
+  lane-packing runs along head_dim, so packed lanes stay whole per
+  shard), per-page scales replicate. Token streams are identical to the
+  single-device server (CI asserts this on virtual host devices —
+  tests/test_serving_mesh.py).
+* :class:`~repro.launch.frontend.ReplicaFrontend` scales OUT: it consumes
+  a ``core.traffic`` arrival stream and routes each request to one of N
+  replica servers on ONE shared decode-step clock. Routing is
+  prefix-affinity first — requests carrying a shared system prompt stick
+  to the replica that prefilled it (pages keep being re-aliased instead
+  of re-prefilled N times) — and yields to the least-loaded replica only
+  past a load margin, where load = the replica's own ``slo.*`` gauges
+  (queue-depth EWMA) + slot occupancy - paged-pool headroom.
+* the :class:`~repro.launch.frontend.SharedPrefixStore` closes the pool:
+  after each global round, every replica's cached chains publish into a
+  cross-replica store on the PR-4 snapshot wire format (profile-key +
+  pool-geometry namespaced) and install into the other replicas' HOST
+  tiers — a hot system prompt prefilled once is aliasable by all, at
+  zero device pages until a hit promotes it.
+* the identity contract: a 1-replica frontend IS the plain server —
+  bitwise-identical token streams at kv-bits {0, 8, 4} (asserted in
+  tests/test_frontend.py; delivering arrivals at the shared clock caps
+  decode spans exactly like a pending request does). On the bursty
+  4x-overload trace (``benchmarks.traffic --mode replicas``) 2 replicas
+  lift aggregate goodput 0.79 -> 1.00 at 100% token agreement, with the
+  affinity map absorbing the shared-prefix tenants and the store moving
+  the hot chains across the pool.
+* the decode attention kernel grew a matching DMA-tuning knob:
+  ``block_kv=True`` (``ops.paged_kv_attention_chunk``) fetches whole
+  ``(ps, KV, hdw)`` pages per grid step — KVx fewer pipeline steps and
+  page fetches on the same math (``benchmarks.kernel_bench --only
+  paged_decode_gap``: 1.4x geomean faster at S=1, float-ULP agreement
+  with the per-head default, which stays the shipped reference).
+
 Error/failure semantics: paged admission preflights a request's WORST-CASE
 page demand (prompt + max_new; with prefix sharing, only the non-shared
 suffix plus one promotion page per matched host page is charged). A
@@ -448,6 +490,33 @@ def main():
           f"({slo['deadline_misses']} deadline misses / {slo['requests']} "
           f"offered)")
     assert srv_tr.release_prefix_cache() == 0
+
+    print("=== multi-replica frontend: prefix-affinity routing + shared "
+          "prefix store ===")
+    from repro.launch.frontend import (ReplicaFrontend, aggregate_goodput,
+                                       make_replicas, requests_from_trace)
+    common = dict(batch_size=2, max_len=96, kv_bits=8, page_size=16,
+                  num_pages=9, prefix_cache="on", kv_offload="host",
+                  sched="slo", preempt=False, metrics="on",
+                  pager_async="on")
+    goodput = {}
+    for n in (1, 2):
+        fe = ReplicaFrontend(make_replicas(n, cfg, params, **common))
+        reqs, keys = requests_from_trace(trace)   # same offered stream
+        fe.run(reqs, keys)
+        goodput[n] = aggregate_goodput(reqs)
+        if n == 2:
+            c = fe.metrics.snapshot()["counters"]
+            print(f"  2 replicas: routed "
+                  f"[{c.get('frontend.routed_replica0', 0)}, "
+                  f"{c.get('frontend.routed_replica1', 0)}], "
+                  f"{c.get('frontend.affinity_hits', 0)} affinity hits, "
+                  f"{c.get('frontend.rebalanced', 0)} rebalances, "
+                  f"{c.get('frontend.shared_prefix_pages', 0)} prefix "
+                  f"pages exchanged through the shared store")
+    print(f"  aggregate goodput on the same trace: 1 replica "
+          f"{goodput[1]:.2f} (== the plain server, bitwise) -> 2 replicas "
+          f"{goodput[2]:.2f}")
 
     # admission preflight: a request whose prompt + max_new can never be
     # backed by the pool is rejected with counts — recorded on the request

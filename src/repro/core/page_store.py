@@ -335,11 +335,13 @@ class TieredPager:
     # registry-backed legacy counters (see runtime.telemetry.metric_attr)
     demotions = metric_attr("pager.demotions")
     promotions = metric_attr("pager.promotions")
+    prefetches = metric_attr("pager.prefetches")
+    prefetch_hits = metric_attr("pager.prefetch_hits")
 
     def __init__(self, allocator, host: HostPageStore, get_caches,
                  set_caches, metrics: Optional[MetricsRegistry] = None,
                  *, async_mode: bool = False, max_inflight: int = 2,
-                 tracer=None):
+                 max_staged: int = 8, tracer=None):
         if max_inflight < 1:
             raise ValueError("max_inflight must be >= 1 transfer")
         self.metrics = metrics if metrics is not None else MetricsRegistry()
@@ -349,10 +351,16 @@ class TieredPager:
         self._set = set_caches
         self.async_mode = bool(async_mode)
         self.max_inflight = max_inflight
+        self.max_staged = max_staged
         self.tracer = tracer
         self._inflight = collections.deque()   # (pending, t0, kind)
+        # promote-direction prefetch stage: host handle -> (device-resident
+        # pool records with the H2D copies already dispatched, issue time)
+        self._staged: Dict[int, tuple] = {}
         self.demotions = 0
         self.promotions = 0
+        self.prefetches = 0
+        self.prefetch_hits = 0
         # demote/promote wall latencies (exact p50/p99 via the registry)
         self._h_demote = self.metrics.histogram("pager.demote_s")
         self._h_promote = self.metrics.histogram("pager.promote_s")
@@ -414,22 +422,73 @@ class TieredPager:
         self._enqueue(pending, t0, "offload")
         return h
 
+    # -- promote-direction prefetch -----------------------------------------
+    def stage_room(self) -> int:
+        """Prefetch slots still free. Also prunes staged copies whose host
+        handle disappeared (the prefix cache dropped the node before its
+        predicted promote) so dead entries can't pin the stage full."""
+        stale = [h for h in self._staged if h not in self.host._blobs]
+        for h in stale:
+            del self._staged[h]
+        return self.max_staged - len(self._staged)
+
+    def prefetch(self, handle: int) -> int:
+        """Start the host->device copy for a parked page AHEAD of its
+        promote (the serve loop calls this for pages the admission plan
+        predicts will be promoted next cycle). ``jnp.asarray`` on the host
+        blob dispatches the H2D transfers asynchronously — nothing blocks
+        here — and :meth:`promote` consumes the staged device arrays
+        instead of re-uploading. Pure staging: no allocation, no host
+        accounting changes, so the prefetch can never affect tokens.
+        Returns 1 when a copy was staged, 0 when skipped (sync mode,
+        already staged, stage full, unknown handle, or the handle's own
+        D2H demote is still in flight)."""
+        if not self.async_mode or handle in self._staged \
+                or self.stage_room() <= 0:
+            return 0
+        blob = self.host._blobs.get(handle)
+        if blob is None:
+            return 0
+        if isinstance(blob, PendingPageBlob):
+            if not blob.resolved:
+                return 0   # its D2H is still riding behind a decode span
+            blob = blob.resolve()
+        dev = [{f: jnp.asarray(rec[f]) for f in _FIELDS}
+               for rec in blob.arrays]
+        self._staged[handle] = (dev, time.perf_counter())
+        self.prefetches += 1
+        return 1
+
     def promote(self, handle: int) -> int:
         """Allocate a device page (may trigger reclaim pressure), inject the
         host blob into it, release the host copy; returns the page id (at
         refcount 1, owned by the caller). The injection's H2D writes are
         dispatch-async under jax — the span records enqueue time, not a
-        device sync."""
+        device sync. A prefetched handle injects its staged device arrays
+        (byte-identical — they were uploaded from the same blob) and
+        records a retrospective span from copy issue to consumption, which
+        overlaps the decode span the transfer rode behind."""
+        staged = self._staged.pop(handle, None)
         t0 = time.perf_counter()
         page = self.allocator.alloc()
         blob = self.host.pop(handle)
+        if staged is not None:
+            dev, t_issue = staged
+            blob = PageBlob(dev)
+            self.prefetch_hits += 1
         self._set(inject_page(self._get(), blob, page))
         self.promotions += 1
-        dt = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        dt = t1 - t0
         self._h_promote.observe(dt)
         self._ewma_promote.update(dt)
         if self.tracer is not None:
-            self.tracer.pager_span("pager.promote", t0, t0 + dt)
+            if staged is not None:
+                self.tracer.pager_span("pager.promote", t_issue, t1,
+                                       args={"async": True,
+                                             "prefetch": True})
+            else:
+                self.tracer.pager_span("pager.promote", t0, t0 + dt)
         return page
 
     # -- async double-buffer ------------------------------------------------

@@ -367,6 +367,41 @@ class PrefixCache:
             self.hit_tokens += hit.matched
         return hit
 
+    def peek_chain(self, tokens: Sequence[int],
+                   profile_key: Optional[str] = None) -> List["_Node"]:
+        """The cached chain matching ``tokens`` — like :meth:`lookup` but a
+        TRUE pure read: no LRU stamps, no hit counts, no clock ticks, and
+        a missing root is not created. The promote-path prefetch scans
+        next cycle's likely admissions with this, so staging host->device
+        copies early can never perturb eviction order (and therefore
+        token streams). Returns the fully-matched nodes plus the
+        diverging (CoW) node, if any — the same set an admission of this
+        prompt would have to make resident."""
+        tokens = [int(t) for t in tokens]
+        key = self.profile_key if profile_key is None else profile_key
+        node = self._roots.get(key)
+        out: List[_Node] = []
+        if node is None:
+            return out
+        ps = self.page_size
+        i = 0
+        while i + ps <= len(tokens):
+            child = node.children.get(tuple(tokens[i:i + ps]))
+            if child is None or child.count != ps:
+                break
+            out.append(child)
+            node = child
+            i += ps
+        chunk = tuple(tokens[i:i + ps])
+        best, best_len = None, 0
+        for c in node.children.values():
+            n = _common_prefix(c.tokens, chunk)
+            if n > best_len:
+                best, best_len = c, n
+        if best is not None:
+            out.append(best)
+        return out
+
     def note_lookup(self, n_tokens: int, matched: int) -> None:
         """Record one admission's hit-rate sample (pairs with
         ``lookup(record=False)``: counted once per ADMITTED request, not

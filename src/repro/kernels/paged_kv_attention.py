@@ -105,11 +105,77 @@ def _chunk_kernel(pt_ref, qs_ref, len_ref, q_ref, k_ref, v_ref, ks_ref,
                        ).reshape(bq, g, head_dim).astype(o_ref.dtype)
 
 
+def _chunk_kernel_kvblock(pt_ref, qs_ref, len_ref, q_ref, k_ref, v_ref,
+                          ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                          np_, ps, bq, kv, g, bits, head_dim, sm_scale):
+    """KV-head-blocked variant of :func:`_chunk_kernel`: one grid step
+    fetches the WHOLE pool page — all KV heads, (1, ps, KV, hdw)
+    contiguous in the pool layout — instead of one head's (1, ps, 1, hdw)
+    slice, collapsing the grid from (B, KV, NQ, NP) to (B, NQ, NP). KV x
+    fewer pipeline steps and KV x fewer (KV x larger, fully contiguous)
+    page DMAs per query block, paid for with KV x the VMEM scratch and
+    per-step compute. The softmax state is carried for all heads at once
+    (rows = KV * bq * G); the per-head dots are a static python loop
+    (KV is small), so total MXU work is identical to the per-head grid.
+    The math is the same sequence of ops per row, but dot operands are
+    strided head-slices rather than contiguous blocks, so outputs agree
+    with the per-head kernel only to float ULPs (exact for fp pages) —
+    which is why ``block_kv`` defaults to off wherever bitwise serving
+    identity is pinned."""
+    b, qb, p = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (bq, KV, G, hd)
+    k = _dequant(k_ref[0], ks_ref[0, 0], bits=bits,
+                 head_dim=head_dim)                      # (ps, KV, hd)
+    v = _dequant(v_ref[0], vs_ref[0, 0], bits=bits,
+                 head_dim=head_dim)                      # (ps, KV, hd)
+
+    # one causal/length mask, shared by every kv head
+    pos = p * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+    qrow = jax.lax.broadcasted_iota(jnp.int32, (bq * g, 1), 0) // g
+    q_pos = qs_ref[b] + qb * bq + qrow                   # (bq*G, 1)
+    mask = (pos <= q_pos) & (pos < len_ref[b])           # (bq*G, ps)
+
+    scores = []
+    for h in range(kv):                                  # static unroll
+        qh = (q[:, h].reshape(bq * g, head_dim) * sm_scale)
+        s = jnp.dot(qh, k[:, h].T,
+                    preferred_element_type=jnp.float32)  # (bq*G, ps)
+        scores.append(jnp.where(mask, s, NEG_INF))
+    s = jnp.concatenate(scores, axis=0)                  # (KV*bq*G, ps)
+
+    m_prev = m_ref[...]                                  # (KV*bq*G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    pexp = jnp.exp(s - m_new)                            # (KV*bq*G, ps)
+    corr = jnp.exp(m_prev - m_new)                       # (KV*bq*G, 1)
+    l_ref[...] = l_ref[...] * corr + pexp.sum(axis=1, keepdims=True)
+    upd = jnp.concatenate(
+        [jnp.dot(pexp[h * bq * g:(h + 1) * bq * g], v[:, h],
+                 preferred_element_type=jnp.float32) for h in range(kv)],
+        axis=0)                                          # (KV*bq*G, hd)
+    acc_ref[...] = acc_ref[...] * corr + upd
+    m_ref[...] = m_new
+
+    @pl.when(p == np_ - 1)
+    def _fin():
+        o = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+             ).reshape(kv, bq, g, head_dim)
+        o_ref[0] = jnp.moveaxis(o, 0, 1).astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("bits", "block_q", "interpret"))
+                   static_argnames=("bits", "block_q", "block_kv",
+                                    "interpret"))
 def paged_kv_attention_chunk(q, k_pages, v_pages, k_scale, v_scale,
                              page_table, q_start, kv_len, *, bits: int = 8,
-                             block_q: int = 8, interpret: bool = False):
+                             block_q: int = 8, block_kv: bool = False,
+                             interpret: bool = False):
     """Variable-length chunk attention over a paged quantized KV pool.
 
     q: (B, S, H, hd) float — S chunk queries per sequence (S == 1: decode).
@@ -125,6 +191,11 @@ def paged_kv_attention_chunk(q, k_pages, v_pages, k_scale, v_scale,
         real tokens (>= 1). For padded chunks, query rows past the valid
         tail produce garbage outputs that no caller reads.
     bits must match the page container. Returns (B, S, H, hd) float32.
+
+    ``block_kv=True`` selects the KV-head-blocked pipeline (grid
+    (B, NQ, NP), whole pages per DMA — see :func:`_chunk_kernel_kvblock`):
+    same math, fewer/larger page fetches. Default off — the per-head grid
+    is the shipped reference whose outputs the serving identity tests pin.
     """
     B, S, H, hd = q.shape
     P, ps, KV, hdw = k_pages.shape
@@ -140,6 +211,50 @@ def paged_kv_attention_chunk(q, k_pages, v_pages, k_scale, v_scale,
     pt = jnp.asarray(page_table, jnp.int32)
     qs = jnp.broadcast_to(jnp.asarray(q_start, jnp.int32).reshape(-1), (B,))
     lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (B,))
+
+    if block_kv:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,        # page_table, q_start, kv_len
+            grid=(B, nq, NP),
+            in_specs=[
+                pl.BlockSpec((1, bq, KV, G, hd),
+                             lambda b, qb, p, pt, qs, ln: (b, qb, 0, 0, 0)),
+                pl.BlockSpec((1, ps, KV, hdw),
+                             lambda b, qb, p, pt, qs, ln:
+                             (pt[b, p], 0, 0, 0)),
+                pl.BlockSpec((1, ps, KV, hdw),
+                             lambda b, qb, p, pt, qs, ln:
+                             (pt[b, p], 0, 0, 0)),
+                pl.BlockSpec((1, 1), lambda b, qb, p, pt, qs, ln:
+                             (pt[b, p], 0)),
+                pl.BlockSpec((1, 1), lambda b, qb, p, pt, qs, ln:
+                             (pt[b, p], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bq, KV, G, hd),
+                                   lambda b, qb, p, pt, qs, ln:
+                                   (b, qb, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((KV * bq * G, 1), jnp.float32),    # m
+                pltpu.VMEM((KV * bq * G, 1), jnp.float32),    # l
+                pltpu.VMEM((KV * bq * G, hd), jnp.float32),   # acc
+            ],
+        )
+        # the blocked kernel wants the (B, S, KV, G, hd) layout (whole
+        # token rows, all heads adjacent), not the per-head (B, KV, S, ...)
+        qb_in = q.reshape(B, S, KV, G, hd)
+        if sp != S:
+            qb_in = jnp.pad(qb_in, ((0, 0), (0, sp - S), (0, 0), (0, 0),
+                                    (0, 0)))
+        out = pl.pallas_call(
+            functools.partial(_chunk_kernel_kvblock, np_=NP, ps=ps, bq=bq,
+                              kv=KV, g=G, bits=bits, head_dim=hd,
+                              sm_scale=sm_scale),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((B, sp, KV, G, hd), jnp.float32),
+            interpret=interpret,
+        )(pt, qs, lens, qb_in, k_pages, v_pages,
+          k_scale.reshape(P, 1), v_scale.reshape(P, 1))
+        return out[:, :S].reshape(B, S, H, hd)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,            # page_table, q_start, kv_len

@@ -1,0 +1,322 @@
+"""Multi-replica admission front: prefix-affinity routing over a pool of
+:class:`~repro.launch.serve.BatchedServer` replicas on ONE shared
+decode-step clock.
+
+One :class:`BatchedServer` is a single tensor-parallel serving replica
+(its mesh from ``launch.mesh.make_serving_mesh``; weights and the paged
+KV pool sharded by ``parallel.sharding``). This module scales OUT: a
+:class:`ReplicaFrontend` consumes a multi-tenant arrival stream
+(``core.traffic`` traces) and routes each request to a replica, driving
+every replica's :class:`~repro.launch.serve.ServeLoop` in lockstep so all
+replicas share the trace's decode-step clock — replica i may never run
+ahead of the next global arrival, exactly as a request pending on a
+single server caps its decode spans.
+
+Routing is **prefix-cache affinity first**: requests carrying a shared
+system prompt (a ``(tenant, prefix_id)`` key from the trace) stick to
+the replica that prefilled that prefix, so its cached pages keep being
+re-aliased instead of being re-prefilled N times across the pool. The
+sticky map yields only when the favored replica is overloaded relative
+to the pool — the load score reads the replica's own ``slo.*`` gauges
+(queue-depth EWMA) plus slot occupancy and paged-pool headroom
+(``kv.device_pages_free`` / ``kv.device_pages_usable``), so balancing is
+fed by the same telemetry the JSONL snapshot stream exports.
+
+The third leg is the :class:`SharedPrefixStore`: a cross-replica page
+exchange built on the PR-4 prefix-snapshot format (``profile_key`` +
+pool-geometry namespaced ``(tokens, PageBlob)`` chains). After each
+global round the frontend publishes every replica's cached chains into
+the store and installs missing ones into the other replicas' HOST tiers
+(zero device pages until a hit promotes them) — a hot system prompt
+prefilled once by one replica is aliasable by all.
+
+Identity contract: a 1-replica frontend is the plain server. Delivering
+arrivals late (at the shared clock instead of up front) is invisible —
+``ServeLoop.tick(limit_step=next_arrival)`` caps spans exactly like the
+request sitting in the loop's own pending list would — so
+``ReplicaFrontend([srv]).run(reqs)`` produces bitwise-identical token
+streams to ``srv.run(reqs)`` (asserted in tests/test_frontend.py at
+kv-bits 0/8/4; the shared store is inert at one replica).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.page_store import PageBlob, cache_geometry, extract_page
+from ..runtime.telemetry import MetricsRegistry
+from .serve import BatchedServer, Request, ServeLoop
+
+
+class SharedPrefixStore:
+    """Cross-replica prefix-page exchange on the snapshot wire format.
+
+    Entries are keyed ``(page_size, geometry, profile_key, tokens)`` —
+    the same namespacing the on-disk snapshot header carries — so pages
+    only ever flow between replicas whose pool geometry (layer dtypes,
+    containers, head layout) matches bit for bit, and chains quantized
+    under different KV profiles never collide. Values are host-side
+    ``PageBlob``s (the demote/snapshot container), published parents
+    before children (the trie's DFS order) so installs can always find
+    their ancestors.
+    """
+
+    def __init__(self):
+        # namespace -> {(profile_key, tokens): PageBlob}; dicts preserve
+        # insertion order, which preserves the parents-first publish order
+        self._chains: Dict[tuple, dict] = {}
+        self.published = 0
+        self.installed = 0
+
+    def _namespace(self, srv: BatchedServer) -> tuple:
+        return (srv.page_size, cache_geometry(srv.caches))
+
+    def __len__(self) -> int:
+        return sum(len(ns) for ns in self._chains.values())
+
+    def publish(self, srv: BatchedServer) -> int:
+        """Copy every cached chain page of ``srv`` not yet in the store.
+
+        Device-resident pages are read off the pool, demoted ones from
+        the host tier, requantized ones are widened back through the
+        quant tier's export — identical sourcing to
+        ``BatchedServer.snapshot_prefix_cache``. Blobs are deep-copied to
+        host numpy so the store owns its bytes (a later eviction in the
+        source replica cannot invalidate them)."""
+        if srv.prefix_cache is None:
+            return 0
+        ns = self._chains.setdefault(self._namespace(srv), {})
+        n = 0
+        for key, tokens, node in srv.prefix_cache.iter_chain_nodes():
+            ck = (key, tuple(int(t) for t in tokens))
+            if ck in ns:
+                continue
+            if node.host is not None:
+                blob = srv.host_store.get(node.host)
+            elif node.tier is not None:
+                blob = srv.quant_tier.export(node.tier)
+            else:
+                blob = extract_page(srv.caches, node.page)
+            ns[ck] = PageBlob([{f: np.asarray(a) for f, a in rec.items()}
+                               for rec in blob.arrays])
+            n += 1
+        self.published += n
+        return n
+
+    def install(self, srv: BatchedServer) -> int:
+        """Land every matching store chain ``srv`` does not already cache
+        in its HOST tier (the snapshot-restore path: zero device pages
+        consumed until a prefix hit promotes them). Stops early when the
+        host tier fills; duplicate/orphaned chains are skipped without
+        consuming a handle."""
+        if srv.prefix_cache is None or srv.host_store is None:
+            return 0
+        ns = self._chains.get(self._namespace(srv), {})
+        n = 0
+        for (key, tokens), blob in ns.items():
+            if not srv.host_store.has_room(1):
+                break
+            # fresh PageBlob per replica: host stores must not share blob
+            # identity (each may drop independently); the numpy pages
+            # themselves are immutable and safely shared
+            h = srv.host_store.put(PageBlob([dict(r) for r in blob.arrays]))
+            if srv.prefix_cache.insert_host(list(tokens), h, key):
+                n += 1
+            else:
+                srv.host_store.drop(h)
+        self.installed += n
+        return n
+
+
+def requests_from_trace(trace) -> Tuple[List[Request], List[Optional[tuple]]]:
+    """Expand a ``core.traffic.Trace`` into fresh serve ``Request``s plus
+    their affinity keys: ``(tenant, prefix_id)`` for arrivals drawn from a
+    shared-prefix pool, None for prefix-less traffic (Request is mutable
+    run state, so every replay arm needs its own instances)."""
+    reqs, keys = [], []
+    for r in trace.requests:
+        reqs.append(Request(r.rid, np.array(r.prompt), r.max_new,
+                            priority=r.priority,
+                            deadline_step=r.deadline_step,
+                            arrive_step=r.arrive_step))
+        keys.append((r.tenant, r.prefix_id) if r.prefix_id >= 0 else None)
+    return reqs, keys
+
+
+def aggregate_goodput(requests: Sequence[Request]) -> Optional[float]:
+    """Pool-level goodput over every offered request, on the decode-step
+    clock — the same accounting as ``Tracer.slo_summary`` (a deadlined
+    request is good iff it finished unrejected by ``deadline_step``;
+    no-deadline requests are good iff they completed), but computable
+    across replicas from the Request records alone."""
+    if not requests:
+        return None
+    met = 0
+    for r in requests:
+        finished = r.done and r.error is None
+        if r.deadline_step is None:
+            met += bool(finished)
+        else:
+            met += bool(finished and r.finish_step is not None
+                        and r.finish_step <= r.deadline_step)
+    return met / len(requests)
+
+
+class ReplicaFrontend:
+    """Admission front over N serving replicas (see module docstring).
+
+    ``servers`` are fully constructed :class:`BatchedServer`s — typically
+    from :func:`make_replicas`, each with its own namespaced metrics
+    registry. ``share_prefixes`` enables the cross-replica
+    :class:`SharedPrefixStore` sync after every global round (requires
+    the replicas to run ``--prefix-cache on --kv-offload host``; it is
+    forced off at one replica, where it could only churn handles).
+    ``rebalance_margin`` is how much worse (in load-score units: one unit
+    is roughly one queued request or a fully busy batch) the sticky
+    replica must be than the pool's best before affinity yields.
+    """
+
+    def __init__(self, servers: Sequence[BatchedServer], *,
+                 share_prefixes: bool = True,
+                 rebalance_margin: float = 2.0,
+                 metrics: Optional[MetricsRegistry] = None):
+        if not servers:
+            raise ValueError("ReplicaFrontend needs at least one replica")
+        self.servers = list(servers)
+        self.loops: List[ServeLoop] = [s.start_loop([]) for s in servers]
+        # counter names carry the "frontend." prefix themselves, so the
+        # registry stays un-namespaced and merges cleanly with the
+        # replicas' namespaced snapshots
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.affinity: Dict[tuple, int] = {}
+        self.store = (SharedPrefixStore()
+                      if share_prefixes and len(self.servers) > 1
+                      and all(s.prefix_cache is not None
+                              and s.host_store is not None
+                              for s in self.servers) else None)
+        self.rebalance_margin = rebalance_margin
+
+    # -- load / routing -----------------------------------------------------
+    def load_score(self, i: int) -> float:
+        """Replica i's routing load: queue-depth EWMA (the ``slo.*``
+        gauge), plus undelivered+queued work and slot occupancy, minus
+        paged-pool headroom — a replica with free pages absorbs a routed
+        prefill without evicting, an exhausted one starts preempting."""
+        srv, loop = self.servers[i], self.loops[i]
+        g = srv.metrics.gauge
+        score = float(g("slo.queue_depth_ewma").value)
+        score += len(loop.queue) + len(loop.pending)
+        score += sum(s is not None for s in srv.slots) / max(1, srv.B)
+        if srv.paged:
+            usable = float(g("kv.device_pages_usable").value)
+            if usable > 0:
+                score -= float(g("kv.device_pages_free").value) / usable
+        return score
+
+    def route(self, req: Request, key: Optional[tuple] = None) -> int:
+        """Pick a replica for ``req``: sticky on the affinity key while
+        the favored replica's load stays within ``rebalance_margin`` of
+        the pool's best, least-loaded otherwise."""
+        n = len(self.servers)
+        if n == 1:
+            return 0
+        best = min(range(n), key=self.load_score)
+        r = self.affinity.get(key) if key is not None else None
+        if r is not None:
+            if self.load_score(r) - self.load_score(best) \
+                    > self.rebalance_margin:
+                self.affinity[key] = r = best
+                self.metrics.counter("frontend.rebalanced").inc()
+            else:
+                self.metrics.counter("frontend.affinity_hits").inc()
+        else:
+            r = best
+            if key is not None:
+                self.affinity[key] = r
+        return r
+
+    def _deliver(self, req: Request, key: Optional[tuple]) -> int:
+        r = self.route(req, key)
+        self.loops[r].add(req)
+        self.metrics.counter("frontend.routed").inc()
+        self.metrics.counter(f"frontend.routed_replica{r}").inc()
+        return r
+
+    def _sync_store(self) -> None:
+        if self.store is None:
+            return
+        for srv in self.servers:
+            self.store.publish(srv)
+        n = sum(self.store.install(srv) for srv in self.servers)
+        if n:
+            self.metrics.counter("frontend.shared_prefix_pages").inc(n)
+
+    # -- drive --------------------------------------------------------------
+    def run(self, requests: Sequence[Request],
+            keys: Optional[Sequence[Optional[tuple]]] = None
+            ) -> List[Request]:
+        """Serve ``requests`` to completion across the pool.
+
+        The shared clock ``t`` jumps arrival to arrival: deliver every
+        request with ``arrive_step <= t`` to its routed replica, then
+        tick each unfinished replica loop with ``limit_step`` = the next
+        global arrival until its clock reaches it — so no replica decodes
+        past traffic it has not seen yet. Once arrivals are exhausted the
+        replicas drain independently. Returns ``requests`` (now carrying
+        out/done/finish_step, like ``BatchedServer.run``)."""
+        if keys is None:
+            keys = [None] * len(requests)
+        if len(keys) != len(requests):
+            raise ValueError("keys must parallel requests")
+        pending = sorted(zip(requests, keys),
+                         key=lambda rk: rk[0].arrive_step)
+        while True:
+            t = min(loop.clock for loop in self.loops)
+            while pending and pending[0][0].arrive_step <= t:
+                req, key = pending.pop(0)
+                self._deliver(req, key)
+            na = pending[0][0].arrive_step if pending else None
+            for loop in self.loops:
+                while not loop.finished and (na is None
+                                             or loop.clock < na):
+                    loop.tick(limit_step=na)
+            if pending:
+                # every replica reached the arrival step; deliver at na
+                self._sync_store()
+                continue
+            if all(l.finished for l in self.loops):
+                break
+        for loop in self.loops:
+            loop.close()
+        self._sync_store()
+        return list(requests)
+
+
+def make_replicas(n: int, cfg, params, **server_kwargs
+                  ) -> List[BatchedServer]:
+    """Construct ``n`` identical replicas, each with its own namespaced
+    registry (``replica0`` ... — the merged JSONL stream keeps the
+    per-replica ``slo.*`` / ``kv.*`` streams apart). ``server_kwargs``
+    are passed to every :class:`BatchedServer` verbatim; pass ``mesh=``
+    for tensor-parallel replicas."""
+    if n < 1:
+        raise ValueError("need at least one replica")
+    if "registry" in server_kwargs:
+        raise ValueError("make_replicas owns the per-replica registries")
+    return [BatchedServer(cfg, params,
+                          registry=MetricsRegistry(namespace=f"replica{i}"),
+                          **server_kwargs)
+            for i in range(n)]
+
+
+def merged_snapshot(frontend: ReplicaFrontend) -> dict:
+    """One JSON-ready dict merging the frontend's own counters with every
+    replica's namespaced snapshot (``replica0.slo.window_goodput`` etc.) —
+    the multi-replica analogue of ``MetricsRegistry.snapshot``."""
+    out = frontend.metrics.snapshot()
+    for srv in frontend.servers:
+        snap = srv.metrics.snapshot()
+        for section in ("counters", "gauges", "histograms"):
+            out[section].update(snap[section])
+    return out

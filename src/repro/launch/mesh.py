@@ -27,3 +27,18 @@ def make_host_mesh():
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small fake mesh for subprocess-based distribution tests."""
     return jax.make_mesh(shape, axes)
+
+
+def make_serving_mesh(tp: int = 1):
+    """Mesh for one tensor-parallel serving replica: ("data", "model") =
+    (n_devices // tp, tp). The serving path shards attention heads and the
+    paged KV pool over "model" only (parallel.sharding.paged_pool_shardings);
+    "data" stays size n//tp so the same plan_for_mesh rules apply. CI runs
+    this on virtual host devices via XLA_FLAGS=--xla_force_host_platform_
+    device_count — on the real pod, tp divides the chips of one replica."""
+    n = len(jax.devices())
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if n % tp != 0:
+        raise ValueError(f"tp={tp} does not divide {n} visible devices")
+    return jax.make_mesh((n // tp, tp), ("data", "model"))

@@ -148,10 +148,13 @@ from ..core.paged_kv import (SCRATCH_PAGE, OutOfPagesError, PageAllocator,
 from ..core.policy import LayerPolicy, PrecisionPolicy
 from ..core.prefix_cache import PrefixCache
 from ..models.transformer import init_cache, init_model
+from ..parallel.sharding import (paged_pool_shardings, param_shardings,
+                                 plan_for_mesh)
 from ..quant.apply import (build_model_quant, kv_profile_key,
                            transformer_layer_names)
 from ..runtime.telemetry import (MetricsRegistry, MetricsSnapshotter,
                                  SLOMonitor, make_tracer, metric_attr)
+from .mesh import make_serving_mesh
 from .scheduler import DeadlineMissPredictor, SchedPolicy, SLOScheduler
 from .steps import make_chunk_prefill_step, make_decode_step, make_fused_step
 
@@ -188,6 +191,7 @@ class Request:
     arrive_step: int = 0        # becomes visible to admission at this step
     # --- outcome / preemption state ---
     error: Optional[Exception] = None    # set when admission rejects
+    finish_step: Optional[int] = None    # decode-step clock at retirement
     preemptions: int = 0
     _paused: Optional[PreemptedState] = None
     # admission-cycle feature vector (predictor on, deadlined requests
@@ -312,7 +316,8 @@ class BatchedServer:
                  registry: Optional[MetricsRegistry] = None,
                  snapshot_out: Optional[str] = None,
                  snapshot_every: int = 50,
-                 predictor: str = "off", pager_async: str = "off"):
+                 predictor: str = "off", pager_async: str = "off",
+                 mesh=None):
         # telemetry first: counter attributes below are registry-backed
         # descriptors, so `self.metrics` must exist before any assignment
         self.metrics = registry if registry is not None else MetricsRegistry()
@@ -538,6 +543,28 @@ class BatchedServer:
                 self.allocator.reclaim = self.prefix_cache.evict
         self.caches = init_cache(cfg, batch_size, max_len, self.quant,
                                  paged=paged_spec)
+        # --- tensor-parallel placement (ROADMAP item 1) --------------------
+        # mesh= shards ONE replica across devices: weights TP-only over
+        # "model" (plan_for_mesh + inference=True strips the FSDP axis) and
+        # the paged KV pool over the attention KV-head axis
+        # (parallel.sharding.paged_pool_shardings — per-page scales
+        # replicate, int4 lane-packing is along head_dim so head shards
+        # stay whole). GSPMD propagates the layout through the existing
+        # jitted decode/prefill programs unchanged; host-side page ops
+        # (extract/inject, np.asarray reads) force gathers and stay exact.
+        self.mesh = mesh
+        self.mesh_plan = None
+        if mesh is not None:
+            if not self.paged:
+                raise ValueError("mesh-sharded serving shards the paged KV "
+                                 "pool; it needs --page-size > 0")
+            self.mesh_plan = plan_for_mesh(mesh)
+            self.params = params = jax.device_put(
+                params, param_shardings(params, self.mesh_plan,
+                                        inference=True))
+            self.caches = jax.device_put(
+                self.caches,
+                paged_pool_shardings(self.caches, self.mesh_plan))
         # online precision adaptation (--kv-adapt): a bounded device-byte
         # tier that REQUANTIZES cold cached prefix pages one container step
         # narrower (fp -> int8 -> int4) before any host round trip; built
@@ -1510,6 +1537,7 @@ class BatchedServer:
         the rolling SLO window absorbs the outcome, and (predictor on)
         the retired request's admission-time features become one SGD
         example with the miss as its label."""
+        req.finish_step = step
         missed = (req.deadline_step is not None
                   and step > req.deadline_step)
         if missed:
@@ -1519,14 +1547,47 @@ class BatchedServer:
         self.slo_monitor.note_finish(req.rid, not missed, len(req.out))
         self.tracer.req_finish(req.rid, step, len(req.out))
 
+    def start_loop(self, requests: List[Request]) -> "ServeLoop":
+        """Begin a steppable serving loop over ``requests``.
+
+        The multi-replica admission front (``launch.frontend``) drives N
+        of these on one shared decode-step clock; :meth:`run` is exactly
+        ``start_loop`` + tick-until-drained, so the single-server token
+        streams are the refactor's bitwise identity baseline."""
+        return ServeLoop(self, requests)
+
+    def _prefetch_promotes(self, queue: List[Request]) -> None:
+        """Promote-path prefetch: requests still queued after an admission
+        pass are next cycle's admission candidates, so any prefix-chain
+        (or preemption-state) page parked on the host tier is likely to be
+        promoted then. Stage its host->device copy NOW — the transfer
+        dispatches asynchronously and rides behind the decode span about
+        to run (the promote-direction mirror of the async demote double
+        buffer); the synchronous promote that follows consumes the staged
+        device arrays instead of paying the H2D copy inside admission.
+        Pure staging: no page allocation, no trie stamps (``peek_chain``),
+        so token streams are bit-identical with prefetch on or off."""
+        pager = self.pager
+        if pager is None or not pager.async_mode or not queue:
+            return
+        budget = pager.stage_room()
+        # only the queue head region can be admitted next cycle — scanning
+        # deeper would stage copies that expire before their promote
+        for req in queue[:max(2, self.B)]:
+            if budget <= 0:
+                return
+            if req._paused is not None:
+                for kind, val in req._paused.entries:
+                    if kind == "host" and budget > 0:
+                        budget -= pager.prefetch(val)
+                continue
+            if self.prefix_cache is None:
+                continue
+            for node in self.prefix_cache.peek_chain(req.prompt[:-1]):
+                if node.host is not None and budget > 0:
+                    budget -= pager.prefetch(node.host)
+
     def run(self, requests: List[Request], *, verbose: bool = False):
-        # arrivals are measured on a per-run decode-step clock
-        # (deterministic, unlike wall time): a request joins the queue once
-        # `clock >= arrive_step`; requests with the default arrive_step=0
-        # reproduce the all-at-once legacy behavior exactly
-        pending = sorted(requests, key=lambda r: r.arrive_step)
-        queue: List[Request] = []
-        clock = 0
         t0 = time.time()
         gen0 = self._gen_tokens
         # instance counters are cumulative across run() calls (benchmarks
@@ -1534,109 +1595,10 @@ class BatchedServer:
         # reports THIS run's deltas
         steps0, pf0 = self.decode_steps, self.prefill_forwards
         rejected0 = len(self.rejected)
-        while (pending or queue
-               or any(s is not None for s in self.slots)):
-            self._clock = clock
-            while pending and pending[0].arrive_step <= clock:
-                req = pending.pop(0)
-                self.tracer.req_arrive(req.rid, req.arrive_step,
-                                       req.deadline_step)
-                self.slo_monitor.note_arrive(req.rid)
-                queue.append(req)
-            self._admit(queue)
-            live = [i for i in range(self.B) if self.slots[i] is not None]
-            if not live:
-                # nothing runnable: everything admissible was admitted (or
-                # rejected), so only a future arrival can change the state
-                if pending:
-                    clock = max(clock, pending[0].arrive_step)
-                    continue
-                break
-            span = self._run_span()
-            if pending:
-                # cap the span at the next arrival so urgent latecomers
-                # get an admission (and preemption) opportunity promptly
-                span = max(1, min(span, pending[0].arrive_step - clock))
-            # device-resident state for the span: tokens advance
-            # device-to-device; generated ids are fetched asynchronously and
-            # materialized only at the span boundary
-            tokens_dev = _upload(self.tokens)
-            pos_dev = _upload(self.pos)
-            live_mask = np.zeros((self.B,), bool)
-            live_mask[live] = True
-            all_live = bool(live_mask.all())
-            live_mask_dev = jnp.asarray(live_mask)
-            live_inc = jnp.asarray(live_mask.astype(np.int32))
-            fetches = []                       # (nxt_dev, owner snapshot)
-            with self.tracer.span("decode_span",
-                                  args={"steps": span, "rows": len(live),
-                                        "step": clock}):
-                for _ in range(span):
-                    if self.paged:
-                        for i in live:
-                            self._ensure_page(i, int(self.pos[i]))
-                    pt = self._page_table_dev() if self.paged else None
-                    if self.fused:
-                        # steady state: the SAME fused program as admission
-                        # rounds at S=1 — every row decodes, every row
-                        # emits. Bitwise-identical to self.decode (the
-                        # gathers are identity copies; see make_fused_step).
-                        nxt, _, self.caches = self._fused(
-                            self.params, tokens_dev[:, None], pos_dev,
-                            self._ones_dev, self.caches, pt,
-                            self._arange_dev)
-                    else:
-                        nxt, _, self.caches = self.decode(
-                            self.params, tokens_dev, pos_dev, self.caches,
-                            pt)
-                    self.program_launches += 1
-                    self.cycles += 1
-                    nxt.copy_to_host_async()
-                    fetches.append((nxt, tuple(self.slots)))
-                    # idle slots hold their token (keeps runs reproducible
-                    # across layouts even when idle rows share MoE capacity)
-                    tokens_dev = (nxt if all_live
-                                  else jnp.where(live_mask_dev, nxt,
-                                                 tokens_dev))
-                    pos_dev = pos_dev + live_inc
-                    for i in live:
-                        self.pos[i] += 1
-                        self.slot_gen[i] += 1
-                    self.decode_steps += 1
-                    self._gen_tokens += len(live)
-                # span boundary: materialize tokens, retire finishers
-                last_np = None
-                for nxt_dev, owners in fetches:
-                    arr = np.asarray(nxt_dev)
-                    last_np = arr
-                    for i, req in enumerate(owners):
-                        if req is not None:
-                            if not req.out:
-                                self.tracer.req_first_token(req.rid)
-                                self.slo_monitor.note_first_token(req.rid)
-                            req.out.append(int(arr[i]))
-            if self.pager is not None:
-                # span boundary: resolve in-flight async page transfers —
-                # their D2H copies ran concurrently with the decode span
-                # above (the Chrome trace's pager track shows the overlap)
-                self.pager.drain()
-            for i in live:
-                self.tokens[i] = int(last_np[i])
-                req = self.slots[i]
-                if (self.slot_gen[i] >= req.max_new
-                        or self.pos[i] >= self.max_len - 1):
-                    req.done = True
-                    self.slots[i] = None
-                    self._release_slot(i)
-                    # everyone retiring here hit exactly span's end: span
-                    # is the min remaining capacity over live slots
-                    self._note_finish(req, clock + span)
-            clock += span
-            self.slo_monitor.advance(span)
-            if self._snapshotter is not None:
-                self._snapshotter.maybe_emit(self.cycles)
-        if self.pager is not None:
-            self.pager.drain()
+        loop = self.start_loop(requests)
+        while not loop.finished:
+            loop.tick()
+        loop.close()
         dt = time.time() - t0
         gen_tokens = self._gen_tokens - gen0
         if verbose:
@@ -1780,6 +1742,183 @@ class BatchedServer:
         return n
 
 
+class ServeLoop:
+    """One in-flight :meth:`BatchedServer.run`, steppable one scheduler
+    cycle at a time.
+
+    Extracted from ``run()`` so a multi-replica admission front
+    (``launch.frontend.ReplicaFrontend``) can interleave N servers on one
+    shared decode-step clock: each :meth:`tick` executes exactly one
+    iteration of the serving loop — arrivals, admission, promote
+    prefetch, one decode span — and ``limit_step`` caps how far the
+    replica clock may advance, behaving exactly like a pending arrival at
+    that step (span cap while busy, clock jump while idle). With
+    ``limit_step=None`` the tick sequence is the pre-refactor ``run()``
+    body line for line, which is what keeps the single-server token
+    streams bitwise identical.
+
+    Arrivals are measured on a per-run decode-step clock (deterministic,
+    unlike wall time): a request joins the queue once
+    ``clock >= arrive_step``; requests with the default ``arrive_step=0``
+    reproduce the all-at-once legacy behavior exactly.
+    """
+
+    def __init__(self, srv: "BatchedServer", requests: List[Request]):
+        self.srv = srv
+        self.pending = sorted(requests, key=lambda r: r.arrive_step)
+        self.queue: List[Request] = []
+        self.clock = 0
+        self.finished = False
+
+    @property
+    def live(self) -> bool:
+        return any(s is not None for s in self.srv.slots)
+
+    def add(self, req: Request) -> None:
+        """Deliver one more request mid-run (frontend routing). Stable
+        insert: same-step arrivals keep their delivery order, matching
+        the sort in ``__init__``."""
+        i = len(self.pending)
+        while i > 0 and self.pending[i - 1].arrive_step > req.arrive_step:
+            i -= 1
+        self.pending.insert(i, req)
+        self.finished = False
+
+    def tick(self, limit_step: Optional[int] = None) -> bool:
+        """One scheduler cycle. Never advances ``clock`` past
+        ``limit_step`` (when given). Returns True while the loop is doing
+        work or moving its clock; False once fully drained (also sets
+        ``finished``)."""
+        srv = self.srv
+        pending, queue = self.pending, self.queue
+        if not (pending or queue or self.live):
+            if limit_step is not None and limit_step > self.clock:
+                # empty but clock-limited: the frontend may still route
+                # arrivals here — follow the shared clock, don't drain
+                self.clock = limit_step
+                return True
+            self.finished = True
+            return False
+        clock = self.clock
+        srv._clock = clock
+        while pending and pending[0].arrive_step <= clock:
+            req = pending.pop(0)
+            srv.tracer.req_arrive(req.rid, req.arrive_step,
+                                  req.deadline_step)
+            srv.slo_monitor.note_arrive(req.rid)
+            queue.append(req)
+        srv._admit(queue)
+        srv._prefetch_promotes(queue)
+        live = [i for i in range(srv.B) if srv.slots[i] is not None]
+        if not live:
+            # nothing runnable: everything admissible was admitted (or
+            # rejected), so only a future arrival can change the state
+            if pending:
+                nxt = pending[0].arrive_step
+                if limit_step is not None:
+                    nxt = min(nxt, limit_step)
+                self.clock = max(clock, nxt)
+                return True
+            if limit_step is not None and limit_step > clock:
+                # idle but the frontend may still route arrivals here:
+                # follow the shared clock instead of draining
+                self.clock = limit_step
+                return True
+            self.finished = True
+            return False
+        span = srv._run_span()
+        if pending:
+            # cap the span at the next arrival so urgent latecomers
+            # get an admission (and preemption) opportunity promptly
+            span = max(1, min(span, pending[0].arrive_step - clock))
+        if limit_step is not None:
+            span = max(1, min(span, limit_step - clock))
+        # device-resident state for the span: tokens advance
+        # device-to-device; generated ids are fetched asynchronously and
+        # materialized only at the span boundary
+        tokens_dev = _upload(srv.tokens)
+        pos_dev = _upload(srv.pos)
+        live_mask = np.zeros((srv.B,), bool)
+        live_mask[live] = True
+        all_live = bool(live_mask.all())
+        live_mask_dev = jnp.asarray(live_mask)
+        live_inc = jnp.asarray(live_mask.astype(np.int32))
+        fetches = []                       # (nxt_dev, owner snapshot)
+        with srv.tracer.span("decode_span",
+                             args={"steps": span, "rows": len(live),
+                                   "step": clock}):
+            for _ in range(span):
+                if srv.paged:
+                    for i in live:
+                        srv._ensure_page(i, int(srv.pos[i]))
+                pt = srv._page_table_dev() if srv.paged else None
+                if srv.fused:
+                    # steady state: the SAME fused program as admission
+                    # rounds at S=1 — every row decodes, every row
+                    # emits. Bitwise-identical to srv.decode (the
+                    # gathers are identity copies; see make_fused_step).
+                    nxt, _, srv.caches = srv._fused(
+                        srv.params, tokens_dev[:, None], pos_dev,
+                        srv._ones_dev, srv.caches, pt,
+                        srv._arange_dev)
+                else:
+                    nxt, _, srv.caches = srv.decode(
+                        srv.params, tokens_dev, pos_dev, srv.caches,
+                        pt)
+                srv.program_launches += 1
+                srv.cycles += 1
+                nxt.copy_to_host_async()
+                fetches.append((nxt, tuple(srv.slots)))
+                # idle slots hold their token (keeps runs reproducible
+                # across layouts even when idle rows share MoE capacity)
+                tokens_dev = (nxt if all_live
+                              else jnp.where(live_mask_dev, nxt,
+                                             tokens_dev))
+                pos_dev = pos_dev + live_inc
+                for i in live:
+                    srv.pos[i] += 1
+                    srv.slot_gen[i] += 1
+                srv.decode_steps += 1
+                srv._gen_tokens += len(live)
+            # span boundary: materialize tokens, retire finishers
+            last_np = None
+            for nxt_dev, owners in fetches:
+                arr = np.asarray(nxt_dev)
+                last_np = arr
+                for i, req in enumerate(owners):
+                    if req is not None:
+                        if not req.out:
+                            srv.tracer.req_first_token(req.rid)
+                            srv.slo_monitor.note_first_token(req.rid)
+                        req.out.append(int(arr[i]))
+        if srv.pager is not None:
+            # span boundary: resolve in-flight async page transfers —
+            # their D2H copies ran concurrently with the decode span
+            # above (the Chrome trace's pager track shows the overlap)
+            srv.pager.drain()
+        for i in live:
+            srv.tokens[i] = int(last_np[i])
+            req = srv.slots[i]
+            if (srv.slot_gen[i] >= req.max_new
+                    or srv.pos[i] >= srv.max_len - 1):
+                req.done = True
+                srv.slots[i] = None
+                srv._release_slot(i)
+                # everyone retiring here hit exactly span's end: span
+                # is the min remaining capacity over live slots
+                srv._note_finish(req, clock + span)
+        self.clock = clock + span
+        srv.slo_monitor.advance(span)
+        if srv._snapshotter is not None:
+            srv._snapshotter.maybe_emit(srv.cycles)
+        return True
+
+    def close(self) -> None:
+        """Final pager drain (the epilogue ``run()`` always executed)."""
+        if self.srv.pager is not None:
+            self.srv.pager.drain()
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -1888,6 +2027,15 @@ def main(argv=None):
                          "and resolved at the next decode-span boundary, "
                          "overlapping decode compute; needs --kv-offload "
                          "host")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree for ONE serving replica: "
+                         "builds a (n_devices//tp, tp) data x model mesh "
+                         "(launch.mesh.make_serving_mesh) and shards the "
+                         "attention-head axis of weights AND the paged KV "
+                         "pool over 'model' (per-page scales replicate; "
+                         "int4 lane-packed words shard along heads). 1 = "
+                         "single-device reference. CI exercises tp>1 on "
+                         "virtual host devices")
     ap.add_argument("--prefix-snapshot", default="",
                     help="path: restore the prefix cache from it at start "
                          "(if the file exists) and snapshot back at exit — "
@@ -1950,7 +2098,9 @@ def main(argv=None):
                         snapshot_out=args.metrics_out or None,
                         snapshot_every=args.metrics_every,
                         predictor=args.predictor,
-                        pager_async=args.pager_async)
+                        pager_async=args.pager_async,
+                        mesh=make_serving_mesh(args.tp)
+                        if args.tp > 1 else None)
     import os
     if args.prefix_snapshot and os.path.exists(
             snapshot_path(args.prefix_snapshot)):

@@ -257,3 +257,34 @@ def cache_shardings(caches, plan: MeshPlan, *, lead: int = 1):
                     break
         return NamedSharding(plan.mesh, P(*spec))
     return jax.tree_util.tree_map_with_path(f, caches)
+
+
+def paged_pool_shardings(caches, plan: MeshPlan):
+    """Shardings for a PAGED serving cache (core.paged_kv.init_paged_pool).
+
+    Per-layer pools are dicts ``{k_pages, v_pages, k_scale, v_scale}``;
+    page grids are ``(NP, ps, KV, hdw)`` or scan-stacked
+    ``(periods, NP, ps, KV, hdw)``. The KV-heads axis (always ndim-2)
+    shards over "model" — tensor-parallel attention heads, matching the
+    TP-only inference weight plan. This covers every container uniformly:
+    int4 lane-packing runs along the last (head_dim) axis, so a head-axis
+    shard keeps each page's packed lanes whole, and per-head page bytes
+    stay shard-local so host extract/inject round-trips remain byte-exact.
+    Nothing shards over the data axes — pages are shared by all slots, and
+    replicas are separate pools addressed by (replica, page) handles, not
+    dp shards of one pool. Per-page scales ``(NP,)`` (and any non-pool
+    leaf) replicate; non-dividing head counts fall back to replication
+    like every other rule in this module."""
+    model = plan.model_axis
+    msize = plan.mesh.shape[model] if model else 1
+
+    def f(path, leaf):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if key in ("k_pages", "v_pages") and len(shape) >= 4 \
+                and model is not None and shape[-2] % msize == 0 \
+                and shape[-2] >= msize:
+            spec[len(shape) - 2] = model
+        return NamedSharding(plan.mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(f, caches)

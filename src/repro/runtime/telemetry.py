@@ -172,12 +172,24 @@ class MetricsRegistry:
 
     Metric objects are created on first access (``counter(name)`` etc.) and
     stable thereafter, so hot paths can hold the object instead of paying
-    the dict lookup per event."""
+    the dict lookup per event.
 
-    def __init__(self):
+    ``namespace`` prefixes every metric name in *exported* views
+    (:meth:`snapshot` / :meth:`export_name`) — internal access stays
+    unprefixed, so a component reading ``registry.gauge("slo.x")`` works
+    identically whether its server is standalone or one replica of a
+    multi-replica front (each replica gets
+    ``MetricsRegistry(namespace="replica0")`` etc. and the merged JSONL
+    stream keeps the streams apart)."""
+
+    def __init__(self, namespace: str = ""):
+        self.namespace = namespace
         self._counters: Dict[str, Counter] = {}
         self._gauges: Dict[str, Gauge] = {}
         self._histograms: Dict[str, Histogram] = {}
+
+    def export_name(self, name: str) -> str:
+        return f"{self.namespace}.{name}" if self.namespace else name
 
     # -- access -------------------------------------------------------------
     def counter(self, name: str) -> Counter:
@@ -217,11 +229,15 @@ class MetricsRegistry:
 
     # -- snapshot / reset ---------------------------------------------------
     def snapshot(self) -> dict:
-        """One JSON-ready view of everything (gauge callbacks evaluated)."""
+        """One JSON-ready view of everything (gauge callbacks evaluated);
+        keys carry the registry ``namespace`` prefix, if any."""
+        ns = self.export_name
         return {
-            "counters": {n: c.value for n, c in sorted(self._counters.items())},
-            "gauges": {n: g.value for n, g in sorted(self._gauges.items())},
-            "histograms": {n: h.summary()
+            "counters": {ns(n): c.value
+                         for n, c in sorted(self._counters.items())},
+            "gauges": {ns(n): g.value
+                       for n, g in sorted(self._gauges.items())},
+            "histograms": {ns(n): h.summary()
                            for n, h in sorted(self._histograms.items())},
         }
 

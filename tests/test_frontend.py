@@ -1,0 +1,236 @@
+"""Multi-replica admission front tests (launch.frontend).
+
+* THE identity contract: a 1-replica ``ReplicaFrontend`` must produce
+  bitwise-identical token streams / done flags / finish steps to the plain
+  ``BatchedServer.run`` surface, at kv-bits {0, 8, 4}, with the full
+  serving feature set on (prefix cache, host offload, async pager, SLO
+  scheduler). Subprocess with single-threaded XLA — exact token identity
+  needs bitwise-equal logits.
+* Routing: sticky prefix affinity, rebalance only past the load margin,
+  least-loaded for key-less traffic.
+* SharedPrefixStore: publish/install round-trip lands one replica's
+  cached chains in another's host tier (geometry-namespaced, orphans and
+  duplicates skipped without leaking handles).
+* aggregate_goodput accounting and make_replicas registry namespacing.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.registry import get_smoke_config
+from repro.core.traffic import TenantSpec, TraceConfig, generate_trace
+from repro.launch.frontend import (ReplicaFrontend, SharedPrefixStore,
+                                   aggregate_goodput, make_replicas,
+                                   merged_snapshot, requests_from_trace)
+from repro.launch.serve import BatchedServer, Request
+from repro.models.transformer import init_model
+
+jax.config.update("jax_platform_name", "cpu")
+
+_COMMON = dict(batch_size=2, max_len=48, page_size=8, num_pages=12,
+               prefix_cache="on", kv_offload="host", sched="slo",
+               metrics="on", pager_async="on")
+
+
+def _trace_cfg(vocab):
+    return TraceConfig(
+        seed=11, horizon=24, rate=0.3, process="bursty", burst_rate=1.2,
+        p_enter_burst=0.2, p_exit_burst=0.3, vocab_size=vocab,
+        tenants=(TenantSpec("chat", weight=0.7, priority=5,
+                            deadline_slack=6, prompt_mean=8.0,
+                            prompt_sigma=0.4, prompt_cap=12,
+                            max_new_mean=2.5, max_new_sigma=0.4,
+                            max_new_cap=4, shared_prefix_len=6,
+                            prefix_pool=2),
+                 TenantSpec("bulk", weight=0.3, priority=0,
+                            deadline_slack=None, prompt_mean=9.0,
+                            prompt_sigma=0.4, prompt_cap=14,
+                            max_new_mean=6.0, max_new_sigma=0.3,
+                            max_new_cap=8)))
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_smoke_config("qwen2-72b")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Identity: 1-replica frontend == the plain server (subprocess, kv-bits
+# sweep — the PR's acceptance criterion)
+# ---------------------------------------------------------------------------
+_IDENTITY_SCRIPT = r"""
+import jax, numpy as np
+jax.config.update("jax_platform_name", "cpu")
+from repro.configs.registry import get_smoke_config
+from repro.core.traffic import TenantSpec, TraceConfig, generate_trace
+from repro.launch.frontend import ReplicaFrontend, requests_from_trace
+from repro.launch.serve import BatchedServer, Request
+
+cfg = get_smoke_config("qwen2-72b")
+from repro.models.transformer import init_model
+params = init_model(jax.random.PRNGKey(0), cfg)
+trace = generate_trace(TraceConfig(
+    seed=11, horizon=24, rate=0.3, process="bursty", burst_rate=1.2,
+    p_enter_burst=0.2, p_exit_burst=0.3, vocab_size=cfg.vocab_size,
+    tenants=(TenantSpec("chat", weight=0.7, priority=5, deadline_slack=6,
+                        prompt_mean=8.0, prompt_sigma=0.4, prompt_cap=12,
+                        max_new_mean=2.5, max_new_sigma=0.4, max_new_cap=4,
+                        shared_prefix_len=6, prefix_pool=2),
+             TenantSpec("bulk", weight=0.3, priority=0, deadline_slack=None,
+                        prompt_mean=9.0, prompt_sigma=0.4, prompt_cap=14,
+                        max_new_mean=6.0, max_new_sigma=0.3,
+                        max_new_cap=8))))
+assert trace.requests, "empty trace"
+
+for kv_bits in (0, 8, 4):
+    common = dict(batch_size=2, max_len=48, page_size=8, num_pages=12,
+                  kv_bits=kv_bits, prefix_cache="on", kv_offload="host",
+                  sched="slo", metrics="on", pager_async="on")
+    plain = BatchedServer(cfg, params, **common)
+    pr = {r.rid: r for r in plain.run(
+        [Request(t.rid, np.array(t.prompt), t.max_new, priority=t.priority,
+                 deadline_step=t.deadline_step, arrive_step=t.arrive_step)
+         for t in trace.requests])}
+    fe = ReplicaFrontend([BatchedServer(cfg, params, **common)])
+    reqs, keys = requests_from_trace(trace)
+    fe.run(reqs, keys)
+    for r in reqs:
+        p = pr[r.rid]
+        assert list(r.out) == list(p.out), (kv_bits, r.rid, r.out, p.out)
+        assert r.done == p.done and r.finish_step == p.finish_step, \
+            (kv_bits, r.rid)
+    assert fe.store is None   # inert at one replica
+print("FRONTEND_IDENTITY_OK")
+"""
+
+
+def test_one_replica_frontend_is_the_plain_server():
+    """Run the kv-bits {0,8,4} identity sweep single-threaded: threaded CPU
+    GEMMs are not bitwise deterministic under contention, and exact argmax
+    token identity needs bitwise-equal logits."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_cpu_multi_thread_eigen=false "
+                        "intra_op_parallelism_threads=1 "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p]
+        + [os.path.join(os.path.dirname(__file__), "..", "src")])
+    res = subprocess.run([sys.executable, "-c", _IDENTITY_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=1200)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "FRONTEND_IDENTITY_OK" in res.stdout
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+def _req(rid, arrive=0, n=4):
+    rng = np.random.default_rng(100 + rid)
+    return Request(rid, rng.integers(0, 50, n).astype(np.int32), 3,
+                   arrive_step=arrive)
+
+
+def test_route_sticky_affinity_and_rebalance(smoke_model):
+    cfg, params = smoke_model
+    fe = ReplicaFrontend(make_replicas(2, cfg, params, **_COMMON),
+                         rebalance_margin=2.0)
+    key = ("chat", 0)
+    first = fe.route(_req(0), key)
+    assert fe.affinity[key] == first
+    # sticky while the favored replica stays within the margin
+    assert fe.route(_req(1), key) == first
+    assert fe.metrics.counter("frontend.affinity_hits").value == 1
+    # pile undelivered work onto the sticky replica: past the margin the
+    # affinity yields and the key is re-pinned to the other replica
+    for i in range(4):
+        fe.loops[first].add(_req(10 + i))
+    moved = fe.route(_req(2), key)
+    assert moved != first and fe.affinity[key] == moved
+    assert fe.metrics.counter("frontend.rebalanced").value == 1
+
+
+def test_route_keyless_prefers_least_loaded(smoke_model):
+    cfg, params = smoke_model
+    fe = ReplicaFrontend(make_replicas(2, cfg, params, **_COMMON))
+    fe.loops[0].add(_req(0))
+    fe.loops[0].add(_req(1))
+    assert fe.route(_req(2), None) == 1
+    assert not fe.affinity          # keyless traffic never pins
+
+
+# ---------------------------------------------------------------------------
+# Shared prefix store
+# ---------------------------------------------------------------------------
+def test_shared_prefix_store_roundtrip(smoke_model):
+    cfg, params = smoke_model
+    trace = generate_trace(_trace_cfg(cfg.vocab_size))
+    a, b = make_replicas(2, cfg, params, **_COMMON, kv_bits=8)
+    # warm replica a's prefix cache alone with the shared-prefix traffic
+    reqs, _ = requests_from_trace(trace)
+    a.run(reqs)
+    chains_a = sum(1 for _ in a.prefix_cache.iter_chain_nodes())
+    assert chains_a > 0, "trace produced no cached prefix chains"
+    store = SharedPrefixStore()
+    assert store.publish(a) == chains_a and len(store) == chains_a
+    assert store.publish(a) == 0        # idempotent
+    installed = store.install(b)
+    assert installed > 0
+    chains_b = {tuple(t) for _, t, _ in b.prefix_cache.iter_chain_nodes()}
+    assert chains_b == {tuple(t) for _, t, _
+                        in a.prefix_cache.iter_chain_nodes()}
+    assert store.install(b) == 0        # already cached: no handle churn
+
+
+def test_shared_store_namespaces_by_geometry(smoke_model):
+    cfg, params = smoke_model
+    a = make_replicas(1, cfg, params, **_COMMON, kv_bits=8)[0]
+    b = make_replicas(1, cfg, params, **_COMMON, kv_bits=4)[0]
+    a.run([_req(0, n=9)])
+    store = SharedPrefixStore()
+    store.publish(a)
+    # int4 pool geometry differs: nothing may cross the namespace
+    assert store.install(b) == 0
+
+
+# ---------------------------------------------------------------------------
+# Accounting + construction
+# ---------------------------------------------------------------------------
+def test_aggregate_goodput_accounting():
+    def done(rid, finish, deadline=None):
+        r = Request(rid, np.array([1, 2]), 1, deadline_step=deadline)
+        r.done, r.finish_step = True, finish
+        return r
+    missed = done(2, finish=9, deadline=5)
+    unfinished = Request(3, np.array([1]), 1)
+    errored = done(4, finish=2)
+    errored.error = "rejected"
+    reqs = [done(0, finish=3, deadline=5), done(1, finish=7), missed,
+            unfinished, errored]
+    assert aggregate_goodput(reqs) == pytest.approx(2 / 5)
+    assert aggregate_goodput([]) is None
+
+
+def test_make_replicas_namespaced_registries(smoke_model):
+    cfg, params = smoke_model
+    servers = make_replicas(2, cfg, params, **_COMMON)
+    for i, srv in enumerate(servers):
+        assert any(k.startswith(f"replica{i}.")
+                   for k in srv.metrics.snapshot()["gauges"])
+    fe = ReplicaFrontend(servers)
+    fe.metrics.counter("frontend.routed").inc()
+    snap = merged_snapshot(fe)
+    assert "frontend.routed" in snap["counters"]
+    assert any(k.startswith("replica0.") for k in snap["gauges"])
+    assert any(k.startswith("replica1.") for k in snap["gauges"])
+    with pytest.raises(ValueError):
+        make_replicas(2, cfg, params, registry=object())
+    with pytest.raises(ValueError):
+        make_replicas(0, cfg, params)

@@ -238,6 +238,36 @@ def test_paged_chunk_block_q_invariance():
     np.testing.assert_allclose(outs[0], outs[2], rtol=1e-6, atol=1e-6)
 
 
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 2), kv=st.sampled_from([1, 2]),
+       g=st.sampled_from([1, 2]), s=st.sampled_from([1, 5, 8]),
+       start=st.integers(0, 19), bits=st.sampled_from([0, 4, 8]))
+def test_paged_chunk_block_kv_matches_default(b, kv, g, s, start, bits):
+    """``block_kv=True`` is a DMA-tiling knob, not a numerics knob: the
+    KV-head-blocked grid must agree with the per-head default (and the
+    oracle) on the same fragmented tables, every container, decode (S=1)
+    and prefill shapes. Agreement is float-ULP, not bitwise — the blocked
+    kernel's dot operands are strided head-slices (see the kernel
+    docstring)."""
+    rng = np.random.default_rng(b * 577 + s * 13 + start * 3 + bits)
+    hd, ps = 32, 16
+    starts = np.maximum(0, start - rng.integers(0, 4, b)).astype(np.int32)
+    np_pages = max(1, -(-int(starts.max() + s) // ps))
+    kq, vq, ks, vs, pt = _mk_fragmented_pool(rng, b, np_pages, ps, kv, hd,
+                                             bits)
+    q = jnp.asarray(rng.normal(size=(b, s, kv * g, hd)), jnp.float32)
+    lens = starts + s
+    args = (q, kq, vq, ks, vs, jnp.asarray(pt), jnp.asarray(starts),
+            jnp.asarray(lens))
+    blocked = ops.paged_kv_attention_chunk(*args, bits=bits, block_q=4,
+                                           block_kv=True)
+    default = ops.paged_kv_attention_chunk(*args, bits=bits, block_q=4)
+    np.testing.assert_allclose(blocked, default, rtol=1e-5, atol=1e-5)
+    expect = ref.paged_kv_attention_chunk_ref(q, kq, vq, ks, vs, pt, starts,
+                                              lens, bits=bits)
+    np.testing.assert_allclose(blocked, expect, rtol=1e-4, atol=1e-4)
+
+
 def test_paged_decode_is_chunk_special_case():
     """The decode entry point == the chunk kernel at S=1 with the causal
     bound collapsed into the length mask (exact: same kernel, same grid

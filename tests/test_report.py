@@ -1,0 +1,52 @@
+"""Regression tests for benchmarks.report --serve: the BENCH_serve.json
+trend table must render mixed-vintage trajectories — points that predate
+the SLO fields (None values) or carry entirely different workload keys —
+with explicit "n/a" cells, never a crash."""
+import json
+
+import benchmarks.report as report
+
+
+def _points():
+    return [
+        # pre-PR-8 vintage: SLO metrics exist but are None
+        {"when": "2026-01-01 00:00:00", "arch": "a", "fast": False,
+         "summary": {"traffic": {"goodput": None, "ttft_p99_s": None,
+                                 "token_agreement": 0.95}}},
+        # current vintage: full numbers + a nested per-config dict
+        {"when": "2026-02-01 00:00:00", "arch": "a", "fast": False,
+         "summary": {"traffic": {"goodput": 0.91, "ttft_p99_s": 0.004,
+                                 "token_agreement": 1.0}}},
+        # a different workload that only ever appears once
+        {"when": "2026-02-02 00:00:00", "arch": "a", "fast": True,
+         "summary": {"replicas": {"goodput_1rep": 0.8,
+                                  "goodput_2rep": 1.0,
+                                  "goodput_delta": 0.2}}},
+        # mixed-bench shape: metrics at summary top level
+        {"when": "2026-02-03 00:00:00", "arch": "a", "fast": False,
+         "summary": {"tokens_per_s": {"cfgA": 10.0, "cfgB": 12.5}}},
+    ]
+
+
+def test_serve_section_handles_missing_fields(tmp_path, monkeypatch):
+    path = tmp_path / "BENCH_serve.json"
+    path.write_text(json.dumps({"bench": "paged_serve",
+                                "trajectory": _points()}))
+    monkeypatch.setattr(report, "BENCH_TRAJECTORY", str(path))
+    text = report.serve_section()
+    # the None-valued first point renders as n/a, the numeric delta rows
+    # render normally, and every workload gets its own table
+    assert "n/a" in text
+    assert "goodput" in text and "replicas" in text and "mixed" in text
+    assert "0.91" in text
+
+
+def test_serve_section_tolerates_absent_or_garbage_file(tmp_path,
+                                                        monkeypatch):
+    monkeypatch.setattr(report, "BENCH_TRAJECTORY",
+                        str(tmp_path / "missing.json"))
+    assert "no BENCH_serve.json trajectory" in report.serve_section()
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    monkeypatch.setattr(report, "BENCH_TRAJECTORY", str(bad))
+    assert "no BENCH_serve.json trajectory" in report.serve_section()
